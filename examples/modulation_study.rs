@@ -1,0 +1,86 @@
+//! Modulation study (Fig. 4 + Table I context): per-bit-position BER of
+//! gray-coded QAM, the effect on *gradient* distortion, and the
+//! importance-mapping extension.
+//!
+//! This example works at the transmission level (no FL training), so it
+//! runs in seconds and does not need artifacts:
+//!
+//! ```bash
+//! cargo run --release --example modulation_study
+//! ```
+
+use awc_fl::bits::BitProtection;
+use awc_fl::channel::{ChannelConfig, Fading};
+use awc_fl::modem::{analysis, Modulation};
+use awc_fl::rng::Rng;
+use awc_fl::transport::{Scheme, Transport, TransportConfig};
+
+fn gradient_mse(
+    modulation: Modulation,
+    snr_db: f64,
+    importance: bool,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let grads: Vec<f32> = (0..21_840).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect();
+    let channel = ChannelConfig {
+        snr_db,
+        fading: Fading::Fast, // symbol-level fading isolates slot effects
+        ..Default::default()
+    };
+    let mut cfg = TransportConfig::new(Scheme::Proposed, modulation, channel);
+    cfg.protection = BitProtection::proposed();
+    if importance {
+        cfg.interleave_spread = 0;
+        cfg.importance_mapping = true;
+    }
+    let t = Transport::new(cfg);
+    let (mut mse, mut ber) = (0.0f64, 0.0f64);
+    let trials = 5;
+    for _ in 0..trials {
+        let (out, rep) = t.send(&grads, rng);
+        mse += out
+            .iter()
+            .zip(&grads)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / grads.len() as f64;
+        ber += rep.ber();
+    }
+    (mse / trials as f64, ber / trials as f64)
+}
+
+fn main() {
+    let mut rng = Rng::new(11);
+
+    println!("== per-bit-position BER (gray-coded QAM, Rayleigh) ==\n");
+    for (m, snr) in [
+        (Modulation::Qpsk, 10.0),
+        (Modulation::Qam16, 16.0),
+        (Modulation::Qam256, 26.0),
+    ] {
+        let ber = analysis::per_position_ber(m, snr, 300_000, &mut rng);
+        let cells: Vec<String> = ber.iter().map(|b| format!("{b:.3e}")).collect();
+        println!("{:<8} @{snr:>2} dB: [{}]", m.name(), cells.join(", "));
+    }
+    println!("\n(position 0 = symbol MSB; its BER is lowest for 16/256-QAM — Table I's protection)");
+
+    println!("\n== gradient distortion at equal BER ~ 4e-2 (Fig. 4b mechanism) ==\n");
+    println!(
+        "{:<10} {:>7} {:>12} {:>14} {:>16}",
+        "modulation", "SNR dB", "mean BER", "gradient MSE", "MSE w/ imp.map"
+    );
+    for (m, snr) in [
+        (Modulation::Qpsk, 10.0),
+        (Modulation::Qam16, 16.0),
+        (Modulation::Qam256, 26.0),
+    ] {
+        let (mse, ber) = gradient_mse(m, snr, false, &mut rng);
+        let (mse_map, _) = gradient_mse(m, snr, true, &mut rng);
+        println!("{:<10} {snr:>7} {ber:>12.3e} {mse:>14.3e} {mse_map:>16.3e}", m.name());
+    }
+    println!(
+        "\nAt matched BER, higher-order gray QAM concentrates errors on LSB slots,\n\
+         so the same bit-error budget does less damage to the gradient floats —\n\
+         and the explicit importance mapping (extension) pushes further."
+    );
+}

@@ -1,0 +1,98 @@
+"""AOT compile path: lower the L2 model (with L1 Pallas kernels inlined) to
+HLO **text** artifacts that the rust runtime loads via PJRT.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+  train_step.hlo.txt  (p0..p7, x[B,1,28,28], y[B,10]) -> (loss, g0..g7)
+  predict.hlo.txt     (p0..p7, x[E,1,28,28])          -> (log_probs,)
+  manifest.txt        param order/shapes + batch sizes, parsed by rust
+
+Run once via ``make artifacts``; never on the FL request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs():
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in model.PARAM_SHAPES
+    ]
+
+
+def lower_train_step(batch: int):
+    x = jax.ShapeDtypeStruct((batch, 1, model.IMAGE_HW, model.IMAGE_HW), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, model.NUM_CLASSES), jnp.float32)
+    return jax.jit(model.train_step).lower(*param_specs(), x, y)
+
+
+def lower_predict(batch: int):
+    x = jax.ShapeDtypeStruct((batch, 1, model.IMAGE_HW, model.IMAGE_HW), jnp.float32)
+    return jax.jit(model.predict).lower(*param_specs(), x)
+
+
+def write_manifest(path: str, train_batch: int, eval_batch: int) -> None:
+    lines = [
+        "# awc-fl artifact manifest — parsed by rust/src/model/manifest.rs",
+        f"train_batch {train_batch}",
+        f"eval_batch {eval_batch}",
+        f"image_hw {model.IMAGE_HW}",
+        f"num_classes {model.NUM_CLASSES}",
+    ]
+    for name, shape in model.PARAM_SHAPES:
+        lines.append(f"param {name} {','.join(str(d) for d in shape)}")
+    lines.append("artifact train_step train_step.hlo.txt")
+    lines.append("artifact predict predict.hlo.txt")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-batch", type=int, default=TRAIN_BATCH)
+    ap.add_argument("--eval-batch", type=int, default=EVAL_BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, lowered in (
+        ("train_step", lower_train_step(args.train_batch)),
+        ("predict", lower_predict(args.eval_batch)),
+    ):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    write_manifest(
+        os.path.join(args.out_dir, "manifest.txt"), args.train_batch, args.eval_batch
+    )
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

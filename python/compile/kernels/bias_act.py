@@ -1,0 +1,74 @@
+"""L1: fused bias-add + ReLU Pallas kernel.
+
+The elementwise epilogue of every layer (z = a + b; relu(z)) is fused into
+one VMEM pass instead of two HLO ops. Differentiable via custom_vjp with a
+Pallas backward kernel (mask-and-scale).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Same block-size policy as matmul.py: maximal (grid = 1) for the CPU
+# interpret path, 128 on TPU.
+import os as _os
+
+BLOCK_R = int(_os.environ.get("AWC_PALLAS_BR", 65536))
+BLOCK_C = int(_os.environ.get("AWC_PALLAS_BC", 65536))
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    z = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(z, 0.0)
+
+
+def _bias_relu_bwd_kernel(x_ref, b_ref, g_ref, o_ref):
+    z = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.where(z > 0.0, g_ref[...], 0.0)
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _tile2d(fn, out_like, *args):
+    """Run an elementwise Pallas kernel over 2-D args with row/col blocking."""
+    r, c = out_like.shape
+    br = min(BLOCK_R, _ceil_to(r, 8))
+    bc = min(BLOCK_C, _ceil_to(c, 8))
+    rp, cp = _ceil_to(r, br), _ceil_to(c, bc)
+    padded = [jnp.pad(a, ((0, rp - r), (0, cp - c))) for a in args]
+    out = pl.pallas_call(
+        fn,
+        grid=(rp // br, cp // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))] * len(args),
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), jnp.float32),
+        interpret=True,
+    )(*padded)
+    return out[:r, :c]
+
+
+@jax.custom_vjp
+def bias_relu(x: jax.Array, b: jax.Array) -> jax.Array:
+    """relu(x + b) with b broadcast over rows; x: (R, C), b: (C,)."""
+    bb = jnp.broadcast_to(b[None, :], x.shape)
+    return _tile2d(_bias_relu_kernel, x, x, bb)
+
+
+def _fwd(x, b):
+    return bias_relu(x, b), (x, b)
+
+
+def _bwd(res, g):
+    x, b = res
+    bb = jnp.broadcast_to(b[None, :], x.shape)
+    dx = _tile2d(_bias_relu_bwd_kernel, x, x, bb, g)
+    return dx, jnp.sum(dx, axis=0)
+
+
+bias_relu.defvjp(_fwd, _bwd)

@@ -1,0 +1,120 @@
+"""L1: tiled Pallas matmul kernel — the training hot-spot.
+
+Both the convolution layers (via im2col) and the fully connected layers of
+the paper's CNN reduce to GEMM, so this kernel is the single compute
+hot-spot of L2. The schedule is the canonical MXU-friendly one:
+
+  grid = (M/bm, N/bn, K/bk); each (i, j) output tile stays resident in
+  VMEM while the k axis streams (bm, bk) x (bk, bn) blocks from HBM and
+  accumulates in f32.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO (the structure
+— blocking, revisiting, accumulation — is preserved and is what we tune;
+see DESIGN.md §5 for the VMEM/MXU estimates).
+
+Autodiff: ``pallas_call`` has no batteries-included VJP, so ``matmul`` is a
+``jax.custom_vjp`` whose backward pass is two more Pallas matmuls
+(dX = dZ @ Y^T, dY = X^T @ dZ) — every FLOP of fwd *and* bwd goes through
+the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes.
+#
+# TPU target: 128 matches the MXU systolic-array tile — the schedule
+# DESIGN.md SS5 analyses (grid-strided K accumulation in VMEM). CPU
+# interpret mode (this environment): every grid step costs an emulated
+# while-loop iteration, so the AOT path defaults to maximal blocks (the
+# per-call clamp caps them at the actual operand shape, i.e. grid = 1).
+# Override via AWC_PALLAS_BM/BN/BK — pytest's block-size-invariance test
+# exercises the multi-step grid path down to 8x8x8.
+import os as _os
+
+BLOCK_M = int(_os.environ.get("AWC_PALLAS_BM", 65536))
+BLOCK_N = int(_os.environ.get("AWC_PALLAS_BN", 65536))
+BLOCK_K = int(_os.environ.get("AWC_PALLAS_BK", 65536))
+MXU_BLOCK = 128  # the TPU tiling; see DESIGN.md SS5
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid point (i, j, k): o[i, j] += x[i, k] @ y[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(x: jax.Array, y: jax.Array, *, bm: int = BLOCK_M,
+                  bn: int = BLOCK_N, bk: int = BLOCK_K) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) through the Pallas kernel.
+
+    Inputs are zero-padded up to block multiples (zero rows/cols contribute
+    nothing to the accumulation), the kernel runs on the padded problem,
+    and the result is sliced back. Padding keeps the index maps trivial and
+    the VMEM blocks dense.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp.astype(jnp.float32), yp.astype(jnp.float32))
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable Pallas matmul (fwd and bwd are both Pallas kernels)."""
+    return matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g — two more trips through the kernel.
+    return matmul_pallas(g, y.T), matmul_pallas(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the Pallas kernels and the CNN layers.
+
+Everything here is reference-grade jax.numpy — no Pallas, no custom ops.
+pytest compares kernels.* and model.* against these implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def bias_relu_ref(x: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.maximum(x + b[None, :], 0.0)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Valid-padding NCHW conv; x: (B,C,H,W), w: (O,C,kh,kw), b: (O,)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    """2x2 max pool, stride 2, NCHW."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def log_softmax_ref(z: jax.Array) -> jax.Array:
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    s = z - zmax
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def nll_loss_ref(log_probs: jax.Array, y_onehot: jax.Array) -> jax.Array:
+    """Cross-entropy with one-hot labels over log-probabilities (eq. 11)."""
+    return -jnp.mean(jnp.sum(y_onehot * log_probs, axis=-1))

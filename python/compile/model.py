@@ -1,0 +1,180 @@
+"""L2: the paper's CNN, forward + backward, built on the L1 Pallas kernels.
+
+Architecture (paper §V): 2 conv layers (kernel 5), each followed by a 2x2
+max pool, then 2 fully connected layers; ReLU activations except the last
+layer, which is log-softmax. Loss is cross-entropy over one-hot labels
+(eq. 11). For 28x28 inputs: 1x28x28 -conv5-> 10x24x24 -pool-> 10x12x12
+-conv5-> 20x8x8 -pool-> 20x4x4 -flatten-> 320 -fc-> 50 -fc-> 10.
+
+Convolution is im2col + the Pallas matmul kernel: patches are extracted
+with ``conv_general_dilated_patches`` (pure data movement, differentiable)
+and the contraction — all of the FLOPs — runs in the L1 kernel. The FC
+layers use the Pallas matmul and the fused Pallas bias+ReLU epilogue.
+
+``train_step`` is the FedSGD local computation (paper eq. 3-4): one
+mini-batch gradient of the loss w.r.t. every parameter. It is lowered
+once by aot.py and executed from rust; Python never runs at FL time.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul, matmul_pallas
+from compile.kernels.bias_act import bias_relu
+
+# Canonical parameter order — rust's model::ParamSet mirrors this exactly
+# (artifacts/manifest.txt is generated from this list).
+PARAM_SHAPES = (
+    ("conv1_w", (10, 1, 5, 5)),
+    ("conv1_b", (10,)),
+    ("conv2_w", (20, 10, 5, 5)),
+    ("conv2_b", (20,)),
+    ("fc1_w", (320, 50)),
+    ("fc1_b", (50,)),
+    ("fc2_w", (50, 10)),
+    ("fc2_b", (10,)),
+)
+
+NUM_CLASSES = 10
+IMAGE_HW = 28
+
+
+class Params(NamedTuple):
+    conv1_w: jax.Array
+    conv1_b: jax.Array
+    conv2_w: jax.Array
+    conv2_b: jax.Array
+    fc1_w: jax.Array
+    fc1_b: jax.Array
+    fc2_w: jax.Array
+    fc2_b: jax.Array
+
+
+def init_params(key: jax.Array) -> Params:
+    """Kaiming-uniform init (He et al. [14] in the paper)."""
+    ks = jax.random.split(key, len(PARAM_SHAPES))
+    out = []
+    for (name, shape), k in zip(PARAM_SHAPES, ks):
+        if name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(jnp.prod(jnp.array(shape[1:]))) if len(shape) == 4 else shape[0]
+            bound = (6.0 / fan_in) ** 0.5
+            out.append(jax.random.uniform(k, shape, jnp.float32, -bound, bound))
+    return Params(*out)
+
+
+def _im2col(x: jax.Array, kh: int, kw: int):
+    """(B,C,H,W) -> (B*OH*OW, C*kh*kw) patch matrix (pure data movement)."""
+    bsz, c, h, wd = x.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    return patches.transpose(0, 2, 3, 1).reshape(bsz * oh * ow, c * kh * kw)
+
+
+@jax.custom_vjp
+def _conv2d_nobias(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Valid conv as im2col + Pallas matmul. x: (B,C,H,W), w: (O,C,kh,kw).
+
+    custom_vjp: the default transpose of ``conv_general_dilated_patches``
+    is a scatter-add (col2im) that dominated the AOT train_step profile
+    (EXPERIMENTS.md SSPerf). Both backward passes are re-expressed as
+    im2col + Pallas matmul instead:
+      dW = dZ^T @ cols                       (matmul over saved patches)
+      dX = full-corr(pad(dZ), flip(W))       (patches of dZ + matmul)
+    so every FLOP of fwd *and* bwd stays in the L1 kernel and no scatter
+    appears in the lowered HLO.
+    """
+    bsz, c, h, wd = x.shape
+    o, _, kh, kw = w.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    cols = _im2col(x, kh, kw)
+    out = matmul_pallas(cols, w.reshape(o, c * kh * kw).T)  # L1 kernel
+    return out.reshape(bsz, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def _conv2d_fwd(x, w):
+    bsz, c, h, wd = x.shape
+    o, _, kh, kw = w.shape
+    cols = _im2col(x, kh, kw)
+    oh, ow = h - kh + 1, wd - kw + 1
+    out = matmul_pallas(cols, w.reshape(o, c * kh * kw).T)
+    out = out.reshape(bsz, oh, ow, o).transpose(0, 3, 1, 2)
+    return out, (cols, w, x.shape)
+
+
+def _conv2d_bwd(res, dz):
+    cols, w, xshape = res
+    bsz, c, h, wd = xshape
+    o, _, kh, kw = w.shape
+    oh, ow = h - kh + 1, wd - kw + 1
+    dz_mat = dz.transpose(0, 2, 3, 1).reshape(bsz * oh * ow, o)
+    # dW[o, ckhkw] = dZ^T @ cols — a Pallas matmul over the saved patches.
+    dw = matmul_pallas(dz_mat.T, cols).reshape(o, c, kh, kw)
+    # dX = correlation of zero-padded dZ with the flipped kernel,
+    # contracting over (o, p, q): again im2col + Pallas matmul.
+    dz_pad = jnp.pad(dz, ((0, 0), (0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1)))
+    cols2 = _im2col(dz_pad, kh, kw)  # (B*H*W, O*kh*kw)
+    wflip = w[:, :, ::-1, ::-1]      # (O,C,kh,kw)
+    m = wflip.transpose(0, 2, 3, 1).reshape(o * kh * kw, c)
+    dx = matmul_pallas(cols2, m).reshape(bsz, h, wd, c).transpose(0, 3, 1, 2)
+    return dx, dw
+
+
+_conv2d_nobias.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def _conv2d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return _conv2d_nobias(x, w) + b[None, :, None, None]
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    """Non-overlapping 2x2 max pool via reshape (paper eq. 16c).
+
+    Equivalent to ``reduce_window`` for stride-2/window-2 but its VJP is a
+    cheap compare+broadcast instead of XLA's SelectAndScatter, which was a
+    measurable slice of the AOT train_step profile (EXPERIMENTS.md SSPerf).
+    Odd trailing rows/cols are cropped (never hit: 24/12/8 are even).
+    """
+    bsz, c, h, w = x.shape
+    x = x[:, :, : h - h % 2, : w - w % 2]
+    x = x.reshape(bsz, c, h // 2, 2, w // 2, 2)
+    return x.max(axis=(3, 5))
+
+
+def forward(params: Params, x: jax.Array) -> jax.Array:
+    """Log-probabilities; x: (B, 1, 28, 28) -> (B, 10)."""
+    a = jax.nn.relu(_conv2d(x, params.conv1_w, params.conv1_b))
+    a = _maxpool2(a)
+    a = jax.nn.relu(_conv2d(a, params.conv2_w, params.conv2_b))
+    a = _maxpool2(a)
+    a = a.reshape(a.shape[0], -1)                      # (B, 320)
+    a = bias_relu(matmul(a, params.fc1_w), params.fc1_b)   # L1 kernels
+    z = matmul(a, params.fc2_w) + params.fc2_b[None, :]
+    return jax.nn.log_softmax(z, axis=-1)
+
+
+def loss_fn(params: Params, x: jax.Array, y_onehot: jax.Array) -> jax.Array:
+    """Cross-entropy over one-hot labels (paper eq. 11)."""
+    logp = forward(params, x)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step(*args):
+    """(p0..p7, x, y_onehot) -> (loss, g0..g7). Flat signature for AOT."""
+    params = Params(*args[:8])
+    x, y = args[8], args[9]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return (loss,) + tuple(grads)
+
+
+def predict(*args):
+    """(p0..p7, x) -> (log_probs,). Flat signature for AOT."""
+    params = Params(*args[:8])
+    return (forward(params, args[8]),)

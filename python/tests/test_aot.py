@@ -1,0 +1,78 @@
+"""AOT pipeline: lowering produces parseable HLO text with the right
+signature, and the manifest round-trips the parameter schema."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def hlo_train():
+    return aot.to_hlo_text(aot.lower_train_step(batch=4))
+
+
+@pytest.fixture(scope="module")
+def hlo_predict():
+    return aot.to_hlo_text(aot.lower_predict(batch=4))
+
+
+def test_hlo_text_nonempty_entry(hlo_train, hlo_predict):
+    for text in (hlo_train, hlo_predict):
+        assert "ENTRY" in text
+        assert "f32" in text
+
+
+def test_train_step_hlo_signature(hlo_train):
+    # 10 inputs (8 params + x + y); output tuple of 9 (loss + 8 grads).
+    assert "f32[4,1,28,28]" in hlo_train
+    assert "f32[4,10]" in hlo_train
+    assert "f32[10,1,5,5]" in hlo_train
+
+
+def test_predict_hlo_signature(hlo_predict):
+    assert "f32[4,1,28,28]" in hlo_predict
+
+
+def test_lowered_train_step_executes(tmp_path):
+    """Execute the lowered computation via jax and compare to eager."""
+    lowered = aot.lower_train_step(batch=4)
+    compiled = lowered.compile()
+    p = model.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 28, 28), jnp.float32)
+    y = jax.nn.one_hot(jnp.array([0, 1, 2, 3]), 10).astype(jnp.float32)
+    got = compiled(*p, x, y)
+    want = model.train_step(*p, x, y)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_no_scatter_in_lowered_backward(hlo_train):
+    """Perf-regression guard (EXPERIMENTS.md SSPerf): the conv backward is
+    re-expressed as im2col + Pallas matmuls precisely to keep col2im
+    scatter-adds (and maxpool select-and-scatter) out of the HLO."""
+    lowered = hlo_train.lower()
+    assert "scatter" not in lowered
+    assert "select-and-scatter" not in lowered
+
+
+def test_manifest_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "manifest.txt")
+    aot.write_manifest(path, 64, 256)
+    lines = [l.split() for l in open(path) if l.strip() and not l.startswith("#")]
+    kv = {l[0]: l[1:] for l in lines if l[0] not in ("param", "artifact")}
+    assert kv["train_batch"] == ["64"]
+    assert kv["eval_batch"] == ["256"]
+    params = [l for l in lines if l[0] == "param"]
+    assert len(params) == len(model.PARAM_SHAPES)
+    for (pname, pshape), l in zip(model.PARAM_SHAPES, params):
+        assert l[1] == pname
+        assert tuple(int(d) for d in l[2].split(",")) == pshape
+    arts = [l[1] for l in lines if l[0] == "artifact"]
+    assert arts == ["train_step", "predict"]

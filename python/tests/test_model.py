@@ -1,0 +1,86 @@
+"""L2 CNN: shapes, reference equivalence, gradient correctness, learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _fwd_ref(p: model.Params, x):
+    a = jax.nn.relu(ref.conv2d_ref(x, p.conv1_w, p.conv1_b))
+    a = ref.maxpool2_ref(a)
+    a = jax.nn.relu(ref.conv2d_ref(a, p.conv2_w, p.conv2_b))
+    a = ref.maxpool2_ref(a)
+    a = a.reshape(a.shape[0], -1)
+    a = ref.bias_relu_ref(ref.matmul_ref(a, p.fc1_w), p.fc1_b)
+    z = ref.matmul_ref(a, p.fc2_w) + p.fc2_b[None, :]
+    return ref.log_softmax_ref(z)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = model.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1, 28, 28), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, 10)
+    y = jax.nn.one_hot(labels, 10).astype(jnp.float32)
+    return p, x, y
+
+
+def test_param_count_matches_paper_cnn():
+    n = sum(int(np.prod(s)) for _, s in model.PARAM_SHAPES)
+    assert n == 21840  # 250+10+5000+20+16000+50+500+10
+
+
+def test_forward_shape_and_normalization(setup):
+    p, x, _ = setup
+    lp = model.forward(p, x)
+    assert lp.shape == (8, 10)
+    np.testing.assert_allclose(jnp.exp(lp).sum(-1), np.ones(8), rtol=1e-5)
+
+
+def test_forward_matches_ref(setup):
+    p, x, _ = setup
+    np.testing.assert_allclose(model.forward(p, x), _fwd_ref(p, x), rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_grads_match_ref(setup):
+    p, x, y = setup
+    out = model.train_step(*p, x, y)
+    loss, grads = out[0], out[1:]
+    loss_r, grads_r = jax.value_and_grad(
+        lambda pp: ref.nll_loss_ref(_fwd_ref(pp, x), y)
+    )(p)
+    np.testing.assert_allclose(loss, loss_r, rtol=1e-5)
+    for g, gr, (name, shape) in zip(grads, grads_r, model.PARAM_SHAPES):
+        assert g.shape == shape, name
+        np.testing.assert_allclose(g, gr, rtol=1e-3, atol=3e-5, err_msg=name)
+
+
+def test_initial_loss_near_log10(setup):
+    p, x, y = setup
+    loss = float(model.loss_fn(p, x, y))
+    assert abs(loss - np.log(10.0)) < 0.5
+
+
+def test_sgd_reduces_loss(setup):
+    """A few SGD steps on a fixed batch must reduce the loss (eq. 6)."""
+    p, x, y = setup
+    eta = 0.05
+    loss0 = float(model.loss_fn(p, x, y))
+    for _ in range(10):
+        out = model.train_step(*p, x, y)
+        grads = out[1:]
+        p = model.Params(*(w - eta * g for w, g in zip(p, grads)))
+    loss1 = float(model.loss_fn(p, x, y))
+    assert loss1 < loss0 - 0.1
+
+
+def test_predict_entrypoint(setup):
+    p, x, _ = setup
+    (lp,) = model.predict(*p, x)
+    np.testing.assert_allclose(lp, model.forward(p, x), rtol=1e-6)

@@ -1,0 +1,44 @@
+//! E1 bench — regenerates the paper's BER-vs-SNR evidence (§V):
+//! "For QPSK, at SNR=10 dB, the BER is approximately 4e-2 while the BER
+//! is 5e-3 when SNR is 20 dB" and "QPSK achieves a better bit error rate
+//! than 16-QAM and 256-QAM at the same SNR level".
+//!
+//! Run: `cargo bench --bench ber_snr`
+
+#[path = "harness.rs"]
+mod harness;
+
+use awc_fl::coordinator::experiments;
+use awc_fl::modem::Modulation;
+
+fn main() {
+    println!("=== E1: BER vs SNR over the eq.-7 Rayleigh channel ===");
+    let snrs: Vec<f64> = (0..=30).step_by(2).map(|s| s as f64).collect();
+    let mut rows = Vec::new();
+    harness::bench_once("ber sweep (4 modulations x 16 SNRs, 4e5 bits)", || {
+        rows = experiments::ber_sweep(&snrs, 400_000, 1);
+    });
+
+    println!("\n{:<10} {:>7} {:>12} {:>12}", "modulation", "SNR dB", "BER (sim)", "BER (theory)");
+    for (m, snr, sim, theo) in &rows {
+        println!("{:<10} {snr:>7} {sim:>12.4e} {theo:>12.4e}", m.name());
+    }
+
+    // Paper anchor checks (who wins, by roughly what factor).
+    let get = |m: Modulation, snr: f64| {
+        rows.iter().find(|(mm, ss, _, _)| *mm == m && *ss == snr).unwrap().2
+    };
+    let q10 = get(Modulation::Qpsk, 10.0);
+    let q20 = get(Modulation::Qpsk, 20.0);
+    let q16_10 = get(Modulation::Qam16, 10.0);
+    let q256_10 = get(Modulation::Qam256, 10.0);
+    println!("\npaper anchors:");
+    println!("  QPSK @10dB: {q10:.3e}   (paper ~4e-2)");
+    println!("  QPSK @20dB: {q20:.3e}   (paper ~5e-3)");
+    println!("  16-QAM @10dB: {q16_10:.3e} (paper ~1e-1)");
+    println!("  256-QAM @10dB: {q256_10:.3e} (paper ~3e-1)");
+    assert!((q10 - 0.04).abs() < 0.01, "QPSK@10 anchor");
+    assert!((q20 - 0.005).abs() < 0.002, "QPSK@20 anchor");
+    assert!(q10 < q16_10 && q16_10 < q256_10, "ordering anchor");
+    println!("  all anchors hold ✓");
+}

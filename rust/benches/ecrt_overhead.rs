@@ -1,0 +1,64 @@
+//! E8 bench — ECRT airtime decomposition vs SNR (the mechanism behind
+//! Fig. 3's time gap): rate-1/2 coding contributes a fixed 2x symbol
+//! overhead; retransmissions under block fading contribute the rest.
+//! Also validates the bounded-distance fast model against the real
+//! min-sum decoder.
+//!
+//! Run: `cargo bench --bench ecrt_overhead`
+
+#[path = "harness.rs"]
+mod harness;
+
+use awc_fl::bits::BitVec;
+use awc_fl::channel::{Channel, ChannelConfig, Fading};
+use awc_fl::coordinator::experiments;
+use awc_fl::fec::{arq, ArqConfig, DecoderKind};
+use awc_fl::modem::{Constellation, Modulation};
+use awc_fl::rng::Rng;
+
+fn block_channel(snr_db: f64) -> Channel {
+    Channel::new(ChannelConfig {
+        snr_db,
+        fading: Fading::Block,
+        block_len: 324,
+        ..Default::default()
+    })
+}
+
+fn main() {
+    println!("=== E8: ECRT airtime overhead vs SNR ===\n");
+    let snrs = [6.0, 8.0, 10.0, 12.0, 14.0, 16.0, 20.0, 26.0];
+    let mut rows = Vec::new();
+    harness::bench_once("ecrt overhead sweep (8 SNRs, 21840 floats)", || {
+        rows = experiments::ecrt_overhead(&snrs, 21_840, 1);
+    });
+    println!("\n{:<8} {:>14} {:>20}", "SNR dB", "avg attempts", "airtime vs uncoded");
+    for (snr, att, ratio) in &rows {
+        println!("{snr:<8} {att:>14.3} {ratio:>19.2}x");
+    }
+    let r20 = rows.iter().find(|(s, _, _)| *s == 20.0).unwrap().2;
+    let r10 = rows.iter().find(|(s, _, _)| *s == 10.0).unwrap().2;
+    println!("\npaper shape: @20 dB ratio {r20:.2}x (paper ~2x), @10 dB {r10:.2}x (paper >3x)");
+    assert!(r20 >= 1.9 && r20 < 2.6, "{r20}");
+    assert!(r10 > r20, "{r10} vs {r20}");
+
+    // Fidelity: bounded-distance (t = 7) vs real min-sum per-codeword
+    // success probability under block fading.
+    println!("\n--- decoder model fidelity (block-fading codewords) ---");
+    let con = Constellation::new(Modulation::Qpsk);
+    let mut rng = Rng::new(9);
+    let payload: BitVec = (0..324 * 30).map(|_| rng.bernoulli(0.5)).collect();
+    for snr in [8.0, 10.0, 14.0, 20.0] {
+        let ch = block_channel(snr);
+        let bd = ArqConfig { max_attempts: 64, decoder: DecoderKind::BoundedDistance(7) };
+        let ms = ArqConfig { max_attempts: 64, decoder: DecoderKind::MinSum { max_iter: 30 } };
+        let (_, sbd) = arq::transmit_reliable(&payload, &con, &ch, &mut rng, &bd);
+        let (_, sms) = arq::transmit_reliable(&payload, &con, &ch, &mut rng, &ms);
+        println!(
+            "  {snr:>5} dB: bounded-distance {:.3} att/cw, min-sum {:.3} att/cw",
+            sbd.avg_attempts(),
+            sms.avg_attempts()
+        );
+    }
+    println!("\n(min-sum needs fewer retries — the t=7 model is conservative; DESIGN.md §6)");
+}

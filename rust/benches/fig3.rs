@@ -1,0 +1,92 @@
+//! E4 bench — Fig. 3 at bench scale: test accuracy vs cumulative uplink
+//! communication time for ECRT / Naive / Proposed, at 10 and 20 dB.
+//!
+//! Scale is reduced (12 clients, 2.4k images, 30 rounds) so `cargo bench`
+//! finishes in minutes; `awc-fl fig3` / `examples/fl_training.rs` run the
+//! full paper scale. The *claims* checked here are the paper's:
+//!   - naive stays at chance (~10%),
+//!   - proposed reaches high accuracy,
+//!   - ECRT needs >= ~2x (20 dB) / ~3x (10 dB) the proposed scheme's
+//!     communication time for the same accuracy.
+//!
+//! Run: `make artifacts && cargo bench --bench fig3`
+
+#[path = "harness.rs"]
+mod harness;
+
+use awc_fl::config::ExperimentConfig;
+use awc_fl::coordinator::experiments;
+use awc_fl::runtime::Engine;
+
+fn bench_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        clients: 8,
+        participants_per_round: 8,
+        train_n: 1600,
+        test_n: 1000,
+        rounds: 20,
+        eval_every: 4,
+        // Scaled-down federation -> proportionally larger step than the
+        // paper's eta = 0.01 (which assumes 100 aggregated clients).
+        lr: 0.1,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn main() {
+    let cfg = bench_cfg();
+    let engine = match Engine::load(&cfg.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping fig3 bench — {e}");
+            return;
+        }
+    };
+
+    for snr in [20.0] {
+        println!("\n=== E4: Fig. 3 (bench scale) @ {snr} dB ===");
+        let mut traces = Vec::new();
+        harness::bench_once(&format!("fig3 sweep 3 schemes @ {snr} dB"), || {
+            traces = experiments::fig3(&cfg, &engine, snr, false).unwrap();
+        });
+        println!(
+            "\n{:<20} {:>10} {:>14} {:>16}",
+            "scheme", "best acc", "final time", "time to 45%"
+        );
+        let mut t60 = std::collections::BTreeMap::new();
+        for t in &traces {
+            let best = t.best_accuracy().unwrap_or(0.0);
+            let total = t.rounds.last().map(|r| r.comm_time_s).unwrap_or(0.0);
+            let to60 = t.time_to_accuracy(0.45);
+            t60.insert(t.label.clone(), to60);
+            println!(
+                "{:<20} {best:>10.4} {:>12.2} s {:>16}",
+                t.label,
+                total,
+                to60.map_or("n/a".into(), |s| format!("{s:.2} s"))
+            );
+        }
+        // Paper-shape assertions.
+        let naive = traces.iter().find(|t| t.label.starts_with("naive")).unwrap();
+        let prop = traces.iter().find(|t| t.label.starts_with("proposed")).unwrap();
+        let ecrt = traces.iter().find(|t| t.label.starts_with("ecrt")).unwrap();
+        let acc_naive = naive.best_accuracy().unwrap_or(1.0);
+        let acc_prop = prop.best_accuracy().unwrap_or(0.0);
+        assert!(acc_naive < 0.3, "naive should not learn: {acc_naive}");
+        assert!(
+            acc_prop > acc_naive + 0.15,
+            "proposed must learn well past naive at {snr} dB ({acc_prop} vs {acc_naive})"
+        );
+        // The airtime claim: ECRT pays ~2x per round at 20 dB (more at
+        // 10 dB) for the same number of rounds.
+        let total = |t: &awc_fl::metrics::Trace| t.rounds.last().unwrap().comm_time_s;
+        let ratio = total(ecrt) / total(prop);
+        println!("ECRT/proposed airtime ratio (same rounds): {ratio:.2}x");
+        assert!(ratio > 1.7, "ECRT must be ~2x slower (got {ratio:.2}x)");
+        if let (Some(tp), Some(te)) =
+            (prop.time_to_accuracy(0.45), ecrt.time_to_accuracy(0.45))
+        {
+            println!("ECRT/proposed time-to-45% ratio: {:.2}x", te / tp);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! vendor set). Provides warmup + repeated timing with mean / p50 / p95
+//! reporting, and a `black_box` to defeat dead-code elimination.
+//!
+//! Used by every `[[bench]]` target via `#[path = "harness.rs"] mod
+//! harness;`.
+
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let s = Summary {
+        iters,
+        mean_s: mean,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[p95_idx],
+    };
+    println!(
+        "{name:<44} {iters:>5} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+        fmt_time(s.mean_s),
+        fmt_time(s.p50_s),
+        fmt_time(s.p95_s)
+    );
+    s
+}
+
+/// Run once and report (for long experiment-style benches).
+pub fn bench_once<F: FnOnce()>(name: &str, f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<44}     1 iter   took {:>10}", fmt_time(dt));
+    dt
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Throughput helper: items per second given a per-iteration item count.
+pub fn report_throughput(name: &str, items_per_iter: f64, s: &Summary) {
+    let per_s = items_per_iter / s.mean_s;
+    let human = if per_s >= 1e9 {
+        format!("{:.2} G/s", per_s / 1e9)
+    } else if per_s >= 1e6 {
+        format!("{:.2} M/s", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.2} K/s", per_s / 1e3)
+    } else {
+        format!("{per_s:.2} /s")
+    };
+    println!("{name:<44}        throughput {human}");
+}

@@ -1,0 +1,157 @@
+//! Perf microbenches for the L3 hot paths (the §Perf deliverable):
+//! modem mod/demod, channel + equalization, interleaver, IEEE-754
+//! pack/unpack + protection, LDPC encode / min-sum decode, full
+//! per-client transport sends, and (when artifacts exist) the PJRT
+//! train_step / predict round-trips.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+#[path = "harness.rs"]
+mod harness;
+
+use awc_fl::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
+use awc_fl::channel::{Channel, ChannelConfig, Fading};
+use awc_fl::config::ExperimentConfig;
+use awc_fl::fec::LdpcCode;
+use awc_fl::math::Complex;
+use awc_fl::modem::{Constellation, Modulation};
+use awc_fl::rng::Rng;
+use awc_fl::transport::{Scheme, Transport};
+use harness::{bench, black_box, report_throughput};
+
+const MODEL_FLOATS: usize = 21_840; // the paper CNN
+const MODEL_BITS: usize = MODEL_FLOATS * 32;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let grads: Vec<f32> =
+        (0..MODEL_FLOATS).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect();
+    let bits = pack_f32s(&grads);
+
+    println!("=== L3 hot paths (payload = one model: {MODEL_FLOATS} floats / {MODEL_BITS} bits) ===\n");
+
+    // RNG base cost.
+    let s = bench("rng: complex gaussian draw x1e6", 2, 10, || {
+        let mut acc = 0.0;
+        for _ in 0..1_000_000 {
+            acc += rng.cn(1.0).re;
+        }
+        black_box(acc);
+    });
+    report_throughput("rng", 1e6, &s);
+
+    // Modem.
+    let con = Constellation::new(Modulation::Qpsk);
+    let mut syms = Vec::new();
+    let s = bench("modem: QPSK modulate (1 model)", 2, 20, || {
+        syms = con.modulate(black_box(&bits));
+    });
+    report_throughput("modem mod (symbols)", syms.len() as f64, &s);
+
+    let eqs: Vec<Complex> = syms.clone();
+    let s = bench("modem: QPSK demodulate (1 model)", 2, 20, || {
+        black_box(con.demodulate(black_box(&eqs), MODEL_BITS));
+    });
+    report_throughput("modem demod (symbols)", syms.len() as f64, &s);
+
+    let con256 = Constellation::new(Modulation::Qam256);
+    let syms256 = con256.modulate(&bits);
+    let s = bench("modem: 256-QAM mod+demod (1 model)", 2, 20, || {
+        let m = con256.modulate(black_box(&bits));
+        black_box(con256.demodulate(&m, MODEL_BITS));
+    });
+    report_throughput("modem 256 (symbols)", syms256.len() as f64 * 2.0, &s);
+
+    // Channel.
+    let ch = Channel::new(ChannelConfig {
+        fading: Fading::Block,
+        block_len: 324,
+        ..Default::default()
+    });
+    let mut eq = Vec::new();
+    let s = bench("channel: block-fade+AWGN+equalize (1 model)", 2, 20, || {
+        ch.transmit_equalized(black_box(&syms), &mut rng, &mut eq);
+        black_box(&eq);
+    });
+    report_throughput("channel (symbols)", syms.len() as f64, &s);
+
+    // Interleaver.
+    let il = BlockInterleaver::new(MODEL_BITS.div_ceil(37), 37);
+    let s = bench("bits: interleave+deinterleave (1 model)", 2, 20, || {
+        let t = il.interleave(black_box(&bits));
+        black_box(il.deinterleave(&t, MODEL_BITS));
+    });
+    report_throughput("interleave (bits)", MODEL_BITS as f64 * 2.0, &s);
+
+    // Pack / unpack / protect.
+    let s = bench("bits: pack+unpack+protect (1 model)", 2, 20, || {
+        let b = pack_f32s(black_box(&grads));
+        let mut v = unpack_f32s(&b);
+        BitProtection::proposed().apply(&mut v);
+        black_box(v);
+    });
+    report_throughput("pack+unpack (floats)", MODEL_FLOATS as f64, &s);
+
+    // LDPC.
+    let code = LdpcCode::ieee80211n_648_r12();
+    let info: BitVec = (0..code.k).map(|_| rng.bernoulli(0.5)).collect();
+    let cw = code.encode(&info);
+    let s = bench("fec: LDPC encode x100", 2, 20, || {
+        for _ in 0..100 {
+            black_box(code.encode(black_box(&info)));
+        }
+    });
+    report_throughput("ldpc encode (info bits)", (code.k * 100) as f64, &s);
+
+    let llr: Vec<f32> = (0..code.n)
+        .map(|i| {
+            let sgn = if cw.get(i) { -1.0 } else { 1.0 };
+            (2.0 + rng.normal()) as f32 * sgn
+        })
+        .collect();
+    let s = bench("fec: min-sum decode x10 (converging)", 2, 10, || {
+        for _ in 0..10 {
+            black_box(code.decode_min_sum(black_box(&llr), 30));
+        }
+    });
+    report_throughput("ldpc decode (coded bits)", (code.n * 10) as f64, &s);
+
+    // Transport end-to-end per scheme.
+    for scheme in [Scheme::Naive, Scheme::Proposed, Scheme::Ecrt] {
+        let cfg = ExperimentConfig {
+            scheme,
+            ..ExperimentConfig::default()
+        };
+        let t = Transport::new(cfg.transport());
+        let label = format!("transport: {} send (1 model)", scheme.name());
+        let s = bench(&label, 1, if scheme == Scheme::Ecrt { 3 } else { 10 }, || {
+            black_box(t.send(black_box(&grads), &mut rng));
+        });
+        report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+    }
+
+    // PJRT round-trips (needs artifacts).
+    match awc_fl::runtime::Engine::load("artifacts") {
+        Ok(engine) => {
+            let mut prng = Rng::new(2);
+            let params = engine.init_params(&mut prng);
+            let b = engine.manifest.train_batch;
+            let x: Vec<f32> = (0..b * 784).map(|_| prng.normal() as f32 * 0.3).collect();
+            let mut y = vec![0f32; b * 10];
+            for i in 0..b {
+                y[i * 10 + i % 10] = 1.0;
+            }
+            let s = bench("runtime: train_step (B=64)", 1, 10, || {
+                black_box(engine.train_step(&params, &x, &y).unwrap());
+            });
+            report_throughput("train_step (examples)", b as f64, &s);
+            let eb = engine.manifest.eval_batch;
+            let xe: Vec<f32> = (0..eb * 784).map(|_| prng.normal() as f32 * 0.3).collect();
+            let s = bench("runtime: predict (B=256)", 1, 10, || {
+                black_box(engine.predict(&params, &xe).unwrap());
+            });
+            report_throughput("predict (examples)", eb as f64, &s);
+        }
+        Err(e) => println!("\n(runtime benches skipped — {e})"),
+    }
+}

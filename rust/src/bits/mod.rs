@@ -1,0 +1,398 @@
+//! IEEE-754 bit-level substrate (paper §IV-A, Fig. 1).
+//!
+//! Gradients travel the air as raw IEEE-754 binary32 words. This module
+//! owns everything between `f32` values and the bit stream handed to the
+//! modem:
+//!
+//! * [`f32_fields`] / field accessors — sign / exponent / fraction views;
+//! * [`pack_f32s`] / [`unpack_f32s`] — float vector <-> MSB-first bitstream;
+//! * [`BlockInterleaver`] — burst-error spreading (transmit-side
+//!   interleave, receive-side de-interleave);
+//! * [`BitProtection`] — the paper's receiver-side prior: with the
+//!   gradient known to satisfy |g| < 2, the exponent MSB (bit index 1,
+//!   the "second bit") is always 0, so the receiver *forces* it to 0
+//!   regardless of what was decoded (Fig. 1), optionally followed by a
+//!   magnitude clamp to the known gradient range.
+
+pub mod stream;
+
+pub use stream::BitVec;
+
+/// Decomposed IEEE-754 binary32 fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct F32Fields {
+    /// Sign bit (bit 31 of the word, bit index 0 on the wire).
+    pub sign: u8,
+    /// 8-bit biased exponent (wire bit indices 1..=8).
+    pub exponent: u8,
+    /// 23-bit fraction (wire bit indices 9..=31).
+    pub fraction: u32,
+}
+
+/// Split an f32 into its IEEE-754 fields.
+#[inline]
+pub fn f32_fields(x: f32) -> F32Fields {
+    let b = x.to_bits();
+    F32Fields {
+        sign: (b >> 31) as u8,
+        exponent: ((b >> 23) & 0xFF) as u8,
+        fraction: b & 0x7F_FFFF,
+    }
+}
+
+/// Rebuild an f32 from fields.
+#[inline]
+pub fn f32_from_fields(f: F32Fields) -> f32 {
+    f32::from_bits(((f.sign as u32) << 31) | ((f.exponent as u32) << 23) | f.fraction)
+}
+
+/// Wire order: each float contributes 32 bits MSB-first (sign first, then
+/// exponent MSB ... fraction LSB), floats in sequence. This matches the
+/// paper's Fig. 1 indexing where "the second bit" is the exponent MSB.
+pub const BITS_PER_F32: usize = 32;
+
+/// Pack a slice of floats into an MSB-first bit vector.
+pub fn pack_f32s(xs: &[f32]) -> BitVec {
+    let mut bv = BitVec::with_capacity(xs.len() * BITS_PER_F32);
+    for &x in xs {
+        bv.push_u32_msb(x.to_bits());
+    }
+    bv
+}
+
+/// Unpack an MSB-first bit vector back into floats. The bit length must be
+/// a multiple of 32.
+pub fn unpack_f32s(bv: &BitVec) -> Vec<f32> {
+    assert!(
+        bv.len() % BITS_PER_F32 == 0,
+        "bit length {} not a multiple of 32",
+        bv.len()
+    );
+    let n = bv.len() / BITS_PER_F32;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        out.push(f32::from_bits(bv.get_u32_msb(i * BITS_PER_F32)));
+    }
+    out
+}
+
+/// Rectangular block interleaver: write row-major into an R x C matrix,
+/// read column-major. De-interleaving applies the inverse permutation.
+/// Spreads a burst of `b` adjacent channel errors across ~`b` different
+/// rows, i.e. across different floats/codewords (paper §IV-A).
+#[derive(Clone, Debug)]
+pub struct BlockInterleaver {
+    rows: usize,
+    cols: usize,
+}
+
+impl BlockInterleaver {
+    /// `cols` is the burst-spreading depth; `rows` is chosen per call from
+    /// the payload size.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        BlockInterleaver { rows, cols }
+    }
+
+    /// Interleaver sized for `n` bits with spreading depth `depth`:
+    /// rows = depth, cols = ceil(n / depth).
+    pub fn for_len(n: usize, depth: usize) -> Self {
+        let depth = depth.max(1);
+        BlockInterleaver::new(depth, n.div_ceil(depth))
+    }
+
+    fn capacity(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Interleave. Payload shorter than R*C is padded with zeros that the
+    /// matching [`Self::deinterleave`] strips again.
+    pub fn interleave(&self, bits: &BitVec) -> BitVec {
+        let n = bits.len();
+        assert!(n <= self.capacity(), "payload {} > capacity {}", n, self.capacity());
+        let mut out = BitVec::zeros(self.capacity());
+        let mut k = 0usize;
+        // Read column-major from the conceptual row-major matrix.
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                let src = r * self.cols + c;
+                let bit = if src < n { bits.get(src) } else { false };
+                out.set(k, bit);
+                k += 1;
+            }
+        }
+        out.truncate(self.capacity());
+        out
+    }
+
+    /// Inverse of [`Self::interleave`]; `orig_len` strips the pad.
+    pub fn deinterleave(&self, bits: &BitVec, orig_len: usize) -> BitVec {
+        assert_eq!(bits.len(), self.capacity());
+        let mut out = BitVec::zeros(self.capacity());
+        let mut k = 0usize;
+        for c in 0..self.cols {
+            for r in 0..self.rows {
+                let dst = r * self.cols + c;
+                out.set(dst, bits.get(k));
+                k += 1;
+            }
+        }
+        out.truncate(orig_len);
+        out
+    }
+}
+
+/// Receiver-side gradient bit protection (the paper's proposed decoder
+/// prior, §IV-A Fig. 1 + §IV-B).
+#[derive(Clone, Copy, Debug)]
+pub struct BitProtection {
+    /// Force the exponent MSB (wire bit 1) to zero: valid whenever the
+    /// true magnitude is < 2.
+    pub force_exp_msb_zero: bool,
+    /// Clamp decoded magnitudes into [-clamp, clamp]; `None` disables.
+    /// The paper bounds gradients to (-1, 1) empirically.
+    pub value_clamp: Option<f32>,
+    /// Replace non-finite decodes (NaN/Inf from corrupted exponents) with
+    /// zero — a zero gradient contribution is the statistically neutral
+    /// choice.
+    pub zero_non_finite: bool,
+}
+
+impl BitProtection {
+    /// The paper's proposed configuration.
+    pub fn proposed() -> Self {
+        BitProtection {
+            force_exp_msb_zero: true,
+            value_clamp: Some(1.0),
+            zero_non_finite: true,
+        }
+    }
+
+    /// No protection at all (the "naive erroneous transmission" arm).
+    pub fn none() -> Self {
+        BitProtection {
+            force_exp_msb_zero: false,
+            value_clamp: None,
+            zero_non_finite: false,
+        }
+    }
+
+    /// Apply to a single received word (operates on raw bits so it can run
+    /// before float interpretation).
+    #[inline]
+    pub fn apply_word(&self, word: u32) -> f32 {
+        let mut w = word;
+        if self.force_exp_msb_zero {
+            // Wire bit 1 = exponent MSB = word bit 30.
+            w &= !(1u32 << 30);
+        }
+        let mut x = f32::from_bits(w);
+        if self.zero_non_finite && !x.is_finite() {
+            x = 0.0;
+        }
+        if let Some(c) = self.value_clamp {
+            x = x.clamp(-c, c);
+        }
+        x
+    }
+
+    /// Apply in-place to a decoded float vector.
+    pub fn apply(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.apply_word(x.to_bits());
+        }
+    }
+}
+
+/// Importance class of each of the 32 wire bit positions, used by the
+/// modem's bit-mapping policy (gray-coded high-order QAM protects some
+/// symbol positions more than others — Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BitClass {
+    /// Sign bit — flips negate the gradient.
+    Sign,
+    /// Exponent bits — flips rescale by powers of two (catastrophic).
+    Exponent,
+    /// Fraction bits — flips perturb the mantissa (bounded, small).
+    Fraction,
+}
+
+/// Class of wire bit position `i` (0-based, MSB-first per float).
+#[inline]
+pub fn bit_class(i: usize) -> BitClass {
+    match i % BITS_PER_F32 {
+        0 => BitClass::Sign,
+        1..=8 => BitClass::Exponent,
+        _ => BitClass::Fraction,
+    }
+}
+
+/// Expected absolute value change from flipping wire bit `pos` of `x` —
+/// used by tests and the importance-mapping analysis.
+pub fn flip_impact(x: f32, pos: usize) -> f32 {
+    let w = x.to_bits() ^ (1u32 << (31 - (pos % BITS_PER_F32)));
+    let y = f32::from_bits(w);
+    if y.is_finite() {
+        (y - x).abs()
+    } else {
+        f32::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fields_roundtrip() {
+        for x in [0.0f32, -0.5, 1.0, 0.123, -3.25e-5, 1.999, f32::MIN_POSITIVE] {
+            let f = f32_fields(x);
+            assert_eq!(f32_from_fields(f), x);
+        }
+    }
+
+    #[test]
+    fn fields_of_known_values() {
+        // 2.0 = sign 0, exponent 128 (bit pattern 1000_0000), fraction 0 —
+        // exactly the paper's "second bit is 1, all others 0" example.
+        let f = f32_fields(2.0);
+        assert_eq!((f.sign, f.exponent, f.fraction), (0, 128, 0));
+        assert_eq!(2.0f32.to_bits(), 1 << 30);
+        // |x| < 2  <=>  exponent < 128  <=>  exponent MSB = 0.
+        for x in [0.0f32, 0.1, -0.9, 1.0, -1.9999999] {
+            assert!(f32_fields(x).exponent < 128, "{x}");
+        }
+        assert!(f32_fields(2.0).exponent >= 128);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let xs: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) * 0.01).collect();
+        let bv = pack_f32s(&xs);
+        assert_eq!(bv.len(), xs.len() * 32);
+        assert_eq!(unpack_f32s(&bv), xs);
+    }
+
+    #[test]
+    fn wire_bit_order_is_msb_first() {
+        // 2.0f32 has exactly one set bit: word bit 30 => wire bit 1.
+        let bv = pack_f32s(&[2.0]);
+        for i in 0..32 {
+            assert_eq!(bv.get(i), i == 1, "bit {i}");
+        }
+        // -0.0 has only the sign bit: wire bit 0.
+        let bv = pack_f32s(&[-0.0]);
+        for i in 0..32 {
+            assert_eq!(bv.get(i), i == 0, "bit {i}");
+        }
+    }
+
+    #[test]
+    fn interleaver_roundtrip_exact_and_padded() {
+        let mut bits = BitVec::zeros(0);
+        for i in 0..1000 {
+            bits.push(i % 3 == 0 || i % 7 == 2);
+        }
+        for depth in [1, 2, 8, 32, 997] {
+            let il = BlockInterleaver::for_len(bits.len(), depth);
+            let tx = il.interleave(&bits);
+            let rx = il.deinterleave(&tx, bits.len());
+            assert_eq!(rx, bits, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn interleaver_spreads_bursts() {
+        // A burst of 8 adjacent errors in the interleaved domain must land
+        // in >= 8 distinct rows (here: distinct 32-bit words) after
+        // de-interleaving when depth >= burst length.
+        let n = 32 * 64; // 64 floats
+        let zeros = BitVec::zeros(n);
+        let il = BlockInterleaver::for_len(n, 32);
+        let mut tx = il.interleave(&zeros);
+        for i in 500..508 {
+            tx.set(i, true); // burst
+        }
+        let rx = il.deinterleave(&tx, n);
+        let words: std::collections::HashSet<usize> =
+            (0..n).filter(|&i| rx.get(i)).map(|i| i / 32).collect();
+        assert_eq!(words.len(), 8, "burst not spread: {words:?}");
+    }
+
+    #[test]
+    fn protection_forces_exp_msb() {
+        let p = BitProtection::proposed();
+        // A corrupted 0.25 whose exponent MSB got flipped decodes to a
+        // huge value; protection must restore a |.|<2 interpretation.
+        let corrupted = f32::from_bits(0.25f32.to_bits() | (1 << 30));
+        assert!(corrupted > 2.0);
+        let fixed = p.apply_word(corrupted.to_bits());
+        assert_eq!(fixed, 0.25);
+    }
+
+    #[test]
+    fn protection_clamps_and_zeros_nonfinite() {
+        let p = BitProtection::proposed();
+        assert_eq!(p.apply_word(1.5f32.to_bits()), 1.0); // clamp
+        assert_eq!(p.apply_word((-1.75f32).to_bits()), -1.0);
+        let nan_like = f32::NAN.to_bits();
+        let fixed = p.apply_word(nan_like);
+        assert!(fixed.is_finite());
+        // NaN has exponent 0xFF; forcing bit 30 to 0 gives exponent 0x7F
+        // which is finite — either way the result must be within clamp.
+        assert!(fixed.abs() <= 1.0);
+    }
+
+    #[test]
+    fn protection_none_is_identity() {
+        let p = BitProtection::none();
+        for x in [0.1f32, -5.0e8, f32::INFINITY] {
+            let y = p.apply_word(x.to_bits());
+            assert_eq!(y.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn bit_classes() {
+        assert_eq!(bit_class(0), BitClass::Sign);
+        assert_eq!(bit_class(1), BitClass::Exponent);
+        assert_eq!(bit_class(8), BitClass::Exponent);
+        assert_eq!(bit_class(9), BitClass::Fraction);
+        assert_eq!(bit_class(31), BitClass::Fraction);
+        assert_eq!(bit_class(32), BitClass::Sign); // second float
+    }
+
+    #[test]
+    fn exponent_flips_dominate_fraction_flips() {
+        let x = 0.0123f32;
+        let worst_frac = (9..32).map(|i| flip_impact(x, i)).fold(0.0f32, f32::max);
+        let exp_msb = flip_impact(x, 1);
+        assert!(exp_msb > 1e3 * worst_frac, "{exp_msb} vs {worst_frac}");
+    }
+
+    // Property-style randomized roundtrips (hand-rolled proptest).
+    #[test]
+    fn prop_pack_interleave_roundtrip_random() {
+        let mut rng = crate::rng::Rng::new(0xBEEF);
+        for trial in 0..50 {
+            let n = 1 + rng.below(300) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_scaled(0.0, 0.3) as f32).collect();
+            let depth = 1 + rng.below(64) as usize;
+            let bits = pack_f32s(&xs);
+            let il = BlockInterleaver::for_len(bits.len(), depth);
+            let rx = il.deinterleave(&il.interleave(&bits), bits.len());
+            assert_eq!(unpack_f32s(&rx), xs, "trial {trial} n {n} depth {depth}");
+        }
+    }
+
+    #[test]
+    fn prop_protection_preserves_in_range_values() {
+        // For any |x| < 1 with clean bits, protection is the identity.
+        let mut rng = crate::rng::Rng::new(77);
+        let p = BitProtection::proposed();
+        for _ in 0..1000 {
+            let x = rng.uniform(-0.999, 0.999) as f32;
+            assert_eq!(p.apply_word(x.to_bits()), x);
+        }
+    }
+}

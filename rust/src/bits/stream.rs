@@ -1,0 +1,257 @@
+//! Dense bit vector backed by `u64` words — the wire representation every
+//! substrate (modem, FEC, interleaver) operates on.
+//!
+//! Bit index 0 is the first bit on the wire. Within the backing words,
+//! bit `i` lives at word `i / 64`, bit `i % 64` (LSB-first in the word;
+//! the MSB-first float packing is handled by the callers).
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn new() -> Self {
+        BitVec::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitVec {
+            words: Vec::with_capacity(bits.div_ceil(64)),
+            len: 0,
+        }
+    }
+
+    /// All-zero vector of `n` bits.
+    pub fn zeros(n: usize) -> Self {
+        BitVec {
+            words: vec![0; n.div_ceil(64)],
+            len: n,
+        }
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bools(bs: &[bool]) -> Self {
+        let mut bv = BitVec::with_capacity(bs.len());
+        for &b in bs {
+            bv.push(b);
+        }
+        bv
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i >> 6];
+        let m = 1u64 << (i & 63);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] ^= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn push(&mut self, v: bool) {
+        if self.len == self.words.len() * 64 {
+            self.words.push(0);
+        }
+        let i = self.len;
+        self.len += 1;
+        if v {
+            self.words[i >> 6] |= 1u64 << (i & 63);
+        }
+    }
+
+    /// Append the 32 bits of `x`, most significant first (wire order for
+    /// IEEE-754 words).
+    pub fn push_u32_msb(&mut self, x: u32) {
+        for k in (0..32).rev() {
+            self.push((x >> k) & 1 == 1);
+        }
+    }
+
+    /// Read 32 bits starting at `pos`, MSB-first.
+    pub fn get_u32_msb(&self, pos: usize) -> u32 {
+        let mut x = 0u32;
+        for k in 0..32 {
+            x = (x << 1) | self.get(pos + k) as u32;
+        }
+        x
+    }
+
+    /// Append `k` bits of `x`, LSB-first (generic small-field helper).
+    pub fn push_bits_lsb(&mut self, x: u64, k: usize) {
+        for i in 0..k {
+            self.push((x >> i) & 1 == 1);
+        }
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.len {
+            return;
+        }
+        self.len = n;
+        self.words.truncate(n.div_ceil(64));
+        // Clear tail bits beyond len so equality stays well-defined.
+        let tail = n & 63;
+        if tail != 0 {
+            if let Some(w) = self.words.last_mut() {
+                *w &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Append the contents of `other`.
+    pub fn extend(&mut self, other: &BitVec) {
+        for i in 0..other.len {
+            self.push(other.get(i));
+        }
+    }
+
+    /// Sub-range copy [start, start+n).
+    pub fn slice(&self, start: usize, n: usize) -> BitVec {
+        assert!(start + n <= self.len);
+        let mut out = BitVec::with_capacity(n);
+        for i in 0..n {
+            out.push(self.get(start + i));
+        }
+        out
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Hamming distance to `other` (lengths must match).
+    pub fn hamming(&self, other: &BitVec) -> usize {
+        assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// XOR-accumulate `other` into self (lengths must match).
+    pub fn xor_with(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Iterate bits as bools.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Raw word view (for fast dot products in the FEC encoder).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+impl FromIterator<bool> for BitVec {
+    fn from_iter<T: IntoIterator<Item = bool>>(iter: T) -> Self {
+        let mut bv = BitVec::new();
+        for b in iter {
+            bv.push(b);
+        }
+        bv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_set() {
+        let mut bv = BitVec::new();
+        for i in 0..200 {
+            bv.push(i % 3 == 0);
+        }
+        assert_eq!(bv.len(), 200);
+        for i in 0..200 {
+            assert_eq!(bv.get(i), i % 3 == 0);
+        }
+        bv.set(100, true);
+        assert!(bv.get(100));
+        bv.flip(100);
+        assert!(!bv.get(100));
+    }
+
+    #[test]
+    fn u32_msb_roundtrip() {
+        let mut bv = BitVec::new();
+        let vals = [0u32, 1, 0x8000_0000, 0xDEAD_BEEF, u32::MAX];
+        for &v in &vals {
+            bv.push_u32_msb(v);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(bv.get_u32_msb(i * 32), v);
+        }
+    }
+
+    #[test]
+    fn truncate_clears_tail() {
+        let mut a = BitVec::new();
+        for _ in 0..100 {
+            a.push(true);
+        }
+        a.truncate(65);
+        let mut b = BitVec::zeros(65);
+        for i in 0..65 {
+            b.set(i, true);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.count_ones(), 65);
+    }
+
+    #[test]
+    fn hamming_and_xor() {
+        let a = BitVec::from_bools(&[true, false, true, true, false]);
+        let b = BitVec::from_bools(&[true, true, false, true, false]);
+        assert_eq!(a.hamming(&b), 2);
+        let mut c = a.clone();
+        c.xor_with(&b);
+        assert_eq!(c.count_ones(), 2);
+        c.xor_with(&b);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn slice_and_extend() {
+        let a = BitVec::from_bools(&[true, false, true, false, true, true]);
+        let s = a.slice(2, 3);
+        assert_eq!(s, BitVec::from_bools(&[true, false, true]));
+        let mut b = BitVec::from_bools(&[false]);
+        b.extend(&s);
+        assert_eq!(b, BitVec::from_bools(&[false, true, false, true]));
+    }
+}

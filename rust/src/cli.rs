@@ -1,0 +1,149 @@
+//! Tiny CLI argument parser (offline substitute for `clap`): positional
+//! subcommand + `--flag value` / `--flag=value` options + `--set k=v`
+//! config overrides.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: Option<String>,
+    /// `--key value` options (last wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--key` switches.
+    pub switches: Vec<String>,
+    /// `--set key=value` config overrides, in order.
+    pub overrides: Vec<(String, String)>,
+    /// Remaining positionals after the command.
+    pub positionals: Vec<String>,
+}
+
+/// Flags that take a value (everything else after `--` is a switch).
+const VALUE_FLAGS: &[&str] = &[
+    "out", "config", "set", "snr", "snr-list", "rounds", "clients", "mode",
+    "scheme", "modulation", "seed", "bits", "points", "target", "lr",
+    "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
+];
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (name, inline_val) = match flag.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                let takes_value = VALUE_FLAGS.contains(&name.as_str());
+                let value = match (inline_val, takes_value) {
+                    (Some(v), _) => Some(v),
+                    (None, true) => Some(it.next().ok_or_else(|| {
+                        Error::Config(format!("--{name} expects a value"))
+                    })?),
+                    (None, false) => None,
+                };
+                match (name.as_str(), value) {
+                    ("set", Some(v)) => {
+                        let (k, val) = v.split_once('=').ok_or_else(|| {
+                            Error::Config(format!("--set expects key=value, got `{v}`"))
+                        })?;
+                        args.overrides.push((k.to_string(), val.to_string()));
+                    }
+                    (_, Some(v)) => {
+                        args.options.insert(name, v);
+                    }
+                    (_, None) => args.switches.push(name),
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{name}: cannot parse `{v}`"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated f64 list option.
+    pub fn opt_f64_list(&self, name: &str) -> Result<Option<Vec<f64>>> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<f64>()
+                        .map_err(|_| Error::Config(format!("--{name}: bad number `{x}`")))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig3 --out results/fig3.csv --rounds 100 --quiet");
+        assert_eq!(a.command.as_deref(), Some("fig3"));
+        assert_eq!(a.opt("out"), Some("results/fig3.csv"));
+        assert_eq!(a.opt_parse::<usize>("rounds").unwrap(), Some(100));
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_overrides() {
+        let a = parse("run --config=exp.toml --set snr_db=20 --set scheme=ecrt");
+        assert_eq!(a.opt("config"), Some("exp.toml"));
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("snr_db".to_string(), "20".to_string()),
+                ("scheme".to_string(), "ecrt".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn lists_and_errors() {
+        let a = parse("ber --snr-list 0,5,10,15");
+        assert_eq!(a.opt_f64_list("snr-list").unwrap(), Some(vec![0.0, 5.0, 10.0, 15.0]));
+        assert!(Args::parse(vec!["x".into(), "--set".into()]).is_err());
+        assert!(Args::parse(vec!["x".into(), "--set".into(), "noequals".into()]).is_err());
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("run one two");
+        assert_eq!(a.positionals, vec!["one", "two"]);
+    }
+}

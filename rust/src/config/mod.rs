@@ -1,0 +1,340 @@
+//! Experiment configuration: a typed config struct, a hand-rolled
+//! TOML-subset parser (`key = value` with `[section]` headers, strings,
+//! numbers, booleans), and CLI-style `key=value` overrides.
+//!
+//! Precedence: defaults < config file < command-line overrides.
+
+pub mod parser;
+
+use crate::channel::{ChannelConfig, Fading};
+use crate::fec::{ArqConfig, DecoderKind};
+use crate::modem::Modulation;
+use crate::timing::Multiplexing;
+use crate::transport::Scheme;
+use crate::{Error, Result};
+use parser::Value;
+
+/// Full description of one FL-over-wireless experiment (paper §V setup).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Root seed; every stochastic component derives a substream.
+    pub seed: u64,
+    /// Number of local clients M (paper: 100).
+    pub clients: usize,
+    /// Label shards per client (paper: 2 digits).
+    pub shards_per_client: usize,
+    /// Clients participating per round (paper: all).
+    pub participants_per_round: usize,
+    /// Training / test set sizes (paper: 60k / 10k).
+    pub train_n: usize,
+    pub test_n: usize,
+    /// FL rounds to run.
+    pub rounds: usize,
+    /// Learning rate eta (paper: 0.01).
+    pub lr: f32,
+    /// Evaluate test accuracy every k rounds.
+    pub eval_every: usize,
+    /// Uplink scheme.
+    pub scheme: Scheme,
+    /// Modulation (paper default QPSK).
+    pub modulation: Modulation,
+    /// Receiver SNR in dB (paper default 10).
+    pub snr_db: f64,
+    /// Fading model (block = per-codeword quasi-static).
+    pub fading: Fading,
+    /// Fade block length in symbols.
+    pub fade_block_symbols: usize,
+    /// Interleaver spread for the proposed scheme (0 = off).
+    pub interleave_spread: usize,
+    /// Value clamp for the proposed scheme (<= 0 disables).
+    pub value_clamp: f32,
+    /// Force the exponent MSB to zero at the receiver.
+    pub force_exp_msb: bool,
+    /// Importance-aware slot mapping (extension; needs interleave = 0).
+    pub importance_mapping: bool,
+    /// ECRT decoder: bounded-distance t, or min-sum iterations.
+    pub ecrt_decoder: DecoderKind,
+    /// ARQ attempt budget per codeword.
+    pub max_attempts: usize,
+    /// Uplink multiplexing for round-time accounting.
+    pub mux: Multiplexing,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Where to look for real MNIST (falls back to synthetic).
+    pub data_dir: String,
+    /// Client minibatch per round (must match the train_step artifact).
+    pub batch: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 20230519,
+            clients: 100,
+            shards_per_client: 2,
+            participants_per_round: 100,
+            train_n: 60_000,
+            test_n: 10_000,
+            rounds: 300,
+            lr: 0.01,
+            eval_every: 10,
+            scheme: Scheme::Proposed,
+            modulation: Modulation::Qpsk,
+            snr_db: 10.0,
+            fading: Fading::Block,
+            fade_block_symbols: 324,
+            interleave_spread: 37,
+            value_clamp: 1.0,
+            force_exp_msb: true,
+            importance_mapping: false,
+            ecrt_decoder: DecoderKind::BoundedDistance(crate::fec::PAPER_T),
+            max_attempts: 64,
+            mux: Multiplexing::Tdma,
+            artifacts_dir: "artifacts".into(),
+            data_dir: "data/mnist".into(),
+            batch: 64,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse a config file then apply `key=value` overrides.
+    pub fn load(path: Option<&str>, overrides: &[(String, String)]) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)?;
+            let table = parser::parse(&text)?;
+            for (k, v) in &table {
+                cfg.apply(k, v)?;
+            }
+        }
+        for (k, v) in overrides {
+            let value = parser::parse_scalar(v);
+            cfg.apply(k, &value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply one dotted key (section prefix flattened by the parser).
+    pub fn apply(&mut self, key: &str, v: &Value) -> Result<()> {
+        let bad =
+            |k: &str, v: &Value| Error::Config(format!("bad value for `{k}`: {v:?}"));
+        match key {
+            "seed" => self.seed = v.as_u64().ok_or_else(|| bad(key, v))?,
+            "clients" | "fl.clients" => {
+                self.clients = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "shards_per_client" | "fl.shards_per_client" => {
+                self.shards_per_client = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "participants_per_round" | "fl.participants_per_round" => {
+                self.participants_per_round =
+                    v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "train_n" | "data.train_n" => {
+                self.train_n = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "test_n" | "data.test_n" => {
+                self.test_n = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "rounds" | "fl.rounds" => {
+                self.rounds = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "lr" | "fl.lr" => self.lr = v.as_f64().ok_or_else(|| bad(key, v))? as f32,
+            "eval_every" | "fl.eval_every" => {
+                self.eval_every = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "scheme" | "transport.scheme" => {
+                self.scheme = v
+                    .as_str()
+                    .and_then(Scheme::parse)
+                    .ok_or_else(|| bad(key, v))?
+            }
+            "modulation" | "transport.modulation" => {
+                self.modulation = v
+                    .as_str()
+                    .and_then(Modulation::parse)
+                    .ok_or_else(|| bad(key, v))?
+            }
+            "snr_db" | "channel.snr_db" => {
+                self.snr_db = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "fading" | "channel.fading" => {
+                self.fading = match v.as_str() {
+                    Some("fast") => Fading::Fast,
+                    Some("block") => Fading::Block,
+                    Some("none") | Some("awgn") => Fading::None,
+                    _ => return Err(bad(key, v)),
+                }
+            }
+            "fade_block_symbols" | "channel.fade_block_symbols" => {
+                self.fade_block_symbols = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "interleave_spread" | "transport.interleave_spread" => {
+                self.interleave_spread = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "value_clamp" | "transport.value_clamp" => {
+                self.value_clamp = v.as_f64().ok_or_else(|| bad(key, v))? as f32
+            }
+            "force_exp_msb" | "transport.force_exp_msb" => {
+                self.force_exp_msb = v.as_bool().ok_or_else(|| bad(key, v))?
+            }
+            "importance_mapping" | "transport.importance_mapping" => {
+                self.importance_mapping = v.as_bool().ok_or_else(|| bad(key, v))?
+            }
+            "ecrt_decoder" | "fec.decoder" => {
+                self.ecrt_decoder = match v.as_str() {
+                    Some("bounded") | Some("bounded_distance") => {
+                        DecoderKind::BoundedDistance(crate::fec::PAPER_T)
+                    }
+                    Some("minsum") | Some("min_sum") => DecoderKind::MinSum { max_iter: 30 },
+                    _ => return Err(bad(key, v)),
+                }
+            }
+            "max_attempts" | "fec.max_attempts" => {
+                self.max_attempts = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "mux" | "timing.mux" => {
+                self.mux = match v.as_str() {
+                    Some("tdma") => Multiplexing::Tdma,
+                    Some("fdma") => Multiplexing::Fdma,
+                    _ => return Err(bad(key, v)),
+                }
+            }
+            "artifacts_dir" => {
+                self.artifacts_dir =
+                    v.as_str().ok_or_else(|| bad(key, v))?.to_string()
+            }
+            "data_dir" | "data.dir" => {
+                self.data_dir = v.as_str().ok_or_else(|| bad(key, v))?.to_string()
+            }
+            "batch" | "fl.batch" => {
+                self.batch = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clients == 0 || self.participants_per_round == 0 {
+            return Err(Error::Config("clients must be > 0".into()));
+        }
+        if self.participants_per_round > self.clients {
+            return Err(Error::Config(format!(
+                "participants_per_round {} > clients {}",
+                self.participants_per_round, self.clients
+            )));
+        }
+        if self.train_n < self.clients * self.shards_per_client {
+            return Err(Error::Config("train_n too small for the partition".into()));
+        }
+        if !(0.0..=1.0).contains(&(self.lr as f64)) || self.lr <= 0.0 {
+            return Err(Error::Config(format!("lr {} outside (0, 1]", self.lr)));
+        }
+        if self.importance_mapping && self.interleave_spread != 0 {
+            return Err(Error::Config(
+                "importance_mapping requires interleave_spread = 0".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Derived channel config.
+    pub fn channel(&self) -> ChannelConfig {
+        ChannelConfig {
+            snr_db: self.snr_db,
+            fading: self.fading,
+            block_len: self.fade_block_symbols,
+            ..Default::default()
+        }
+    }
+
+    /// Derived transport config for this experiment's scheme.
+    pub fn transport(&self) -> crate::transport::TransportConfig {
+        use crate::bits::BitProtection;
+        let mut t = crate::transport::TransportConfig::new(
+            self.scheme,
+            self.modulation,
+            self.channel(),
+        );
+        t.arq = ArqConfig { max_attempts: self.max_attempts, decoder: self.ecrt_decoder };
+        t.interleave_spread = if self.importance_mapping { 0 } else { self.interleave_spread };
+        t.importance_mapping = self.importance_mapping;
+        t.protection = BitProtection {
+            force_exp_msb_zero: self.force_exp_msb,
+            value_clamp: (self.value_clamp > 0.0).then_some(self.value_clamp),
+            zero_non_finite: true,
+        };
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.clients, 100);
+        assert_eq!(c.shards_per_client, 2);
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.snr_db, 10.0);
+        assert_eq!(c.modulation, Modulation::Qpsk);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let overrides = vec![
+            ("scheme".to_string(), "ecrt".to_string()),
+            ("snr_db".to_string(), "20".to_string()),
+            ("clients".to_string(), "10".to_string()),
+            ("participants_per_round".to_string(), "10".to_string()),
+            ("modulation".to_string(), "256qam".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &overrides).unwrap();
+        assert_eq!(c.scheme, Scheme::Ecrt);
+        assert_eq!(c.snr_db, 20.0);
+        assert_eq!(c.clients, 10);
+        assert_eq!(c.modulation, Modulation::Qam256);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let path = "/tmp/awc_fl_cfg_test.toml";
+        std::fs::write(
+            path,
+            "seed = 7\n[fl]\nrounds = 50\nlr = 0.05\n[transport]\nscheme = \"proposed\"\n[channel]\nsnr_db = 16.0\nfading = \"block\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::load(Some(path), &[]).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.rounds, 50);
+        assert!((c.lr - 0.05).abs() < 1e-6);
+        assert_eq!(c.snr_db, 16.0);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let o = vec![("nope".to_string(), "1".to_string())];
+        assert!(ExperimentConfig::load(None, &o).is_err());
+        let o = vec![("scheme".to_string(), "carrier-pigeon".to_string())];
+        assert!(ExperimentConfig::load(None, &o).is_err());
+        let o = vec![("participants_per_round".to_string(), "500".to_string())];
+        assert!(ExperimentConfig::load(None, &o).is_err());
+    }
+
+    #[test]
+    fn transport_derivation() {
+        let mut c = ExperimentConfig::default();
+        c.value_clamp = 0.0;
+        let t = c.transport();
+        assert!(t.protection.value_clamp.is_none());
+        assert!(t.protection.force_exp_msb_zero);
+        assert_eq!(t.interleave_spread, 37);
+    }
+}

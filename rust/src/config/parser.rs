@@ -1,0 +1,179 @@
+//! Minimal TOML-subset parser (offline substitute for `serde` + `toml`).
+//!
+//! Supported: `[section]` headers (flattened to `section.key`), `key =
+//! value` with string (`"..."`), boolean, integer, and float scalars,
+//! `#` comments, and blank lines. Arrays/tables-of-tables are not needed
+//! by the experiment configs and are rejected loudly.
+
+use crate::{Error, Result};
+
+/// A parsed scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Guess the type of a CLI-provided scalar (no quotes required).
+pub fn parse_scalar(raw: &str) -> Value {
+    let s = raw.trim();
+    if let Some(stripped) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Value::Str(stripped.to_string());
+    }
+    match s {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(s.to_string())
+}
+
+/// Parse a config document into flattened `(section.key, value)` pairs in
+/// file order.
+pub fn parse(text: &str) -> Result<Vec<(String, Value)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: unclosed section", lineno + 1)))?
+                .trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(Error::Config(format!("line {}: bad section `{name}`", lineno + 1)));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(Error::Config(format!("line {}: expected `key = value`", lineno + 1)));
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() || val.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key or value", lineno + 1)));
+        }
+        if val.starts_with('[') || val.starts_with('{') {
+            return Err(Error::Config(format!(
+                "line {}: arrays/inline tables are not supported",
+                lineno + 1
+            )));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.push((full_key, parse_scalar(val)));
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("-3"), Value::Int(-3));
+        assert_eq!(parse_scalar("2.5"), Value::Float(2.5));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("\"qpsk\""), Value::Str("qpsk".into()));
+        assert_eq!(parse_scalar("qpsk"), Value::Str("qpsk".into()));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = "a = 1\n[fl]\nrounds = 10\nlr = 0.01\n[channel]\nsnr_db = 20 # comment\n";
+        let kv = parse(doc).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".into(), Value::Int(1)),
+                ("fl.rounds".into(), Value::Int(10)),
+                ("fl.lr".into(), Value::Float(0.01)),
+                ("channel.snr_db".into(), Value::Int(20)),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = "# full line comment\n\nx = \"a # not comment\" # trailing\n";
+        let kv = parse(doc).unwrap();
+        assert_eq!(kv, vec![("x".into(), Value::Str("a # not comment".into()))]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("k = [1, 2]\n").is_err());
+        assert!(parse("k =\n").is_err());
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(5).as_f64(), Some(5.0));
+        assert_eq!(Value::Int(-5).as_u64(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("x".into()).as_u64(), None);
+    }
+}

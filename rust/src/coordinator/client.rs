@@ -1,0 +1,95 @@
+//! Client-side state held by the coordinator (the simulation runs all LCs
+//! in-process; each client's behaviour is fully determined by its shard
+//! and its RNG substreams, so the loop parallelizes safely).
+
+use crate::data::{ClientShard, Dataset};
+use crate::rng::Rng;
+
+/// One local client (LC).
+#[derive(Clone, Debug)]
+pub struct ClientState {
+    pub id: usize,
+    pub shard: ClientShard,
+}
+
+impl ClientState {
+    pub fn new(shard: ClientShard) -> Self {
+        ClientState { id: shard.client_id, shard }
+    }
+
+    /// Number of local examples |D_m| (the aggregation weight numerator).
+    pub fn data_size(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Sample this round's minibatch indices (with replacement if the
+    /// shard is smaller than the batch — only in toy configs).
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng) -> Vec<usize> {
+        let n = self.shard.len();
+        if n >= batch {
+            rng.choose_k(n, batch)
+                .into_iter()
+                .map(|i| self.shard.indices[i])
+                .collect()
+        } else {
+            (0..batch)
+                .map(|_| self.shard.indices[rng.below(n as u64) as usize])
+                .collect()
+        }
+    }
+
+    /// Gather this round's (x, y) batch from the shared training set.
+    pub fn gather(
+        &self,
+        ds: &Dataset,
+        batch: usize,
+        num_classes: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let idxs = self.sample_batch(batch, rng);
+        ds.gather_batch(&idxs, num_classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_non_iid, synth};
+
+    #[test]
+    fn batch_sampling_within_shard() {
+        let ds = synth::generate(1, 1000, 0).train;
+        let shards = partition_non_iid(&ds, 10, 2, &mut Rng::new(1));
+        let c = ClientState::new(shards[3].clone());
+        let mut rng = Rng::new(2);
+        let idxs = c.sample_batch(32, &mut rng);
+        assert_eq!(idxs.len(), 32);
+        for &i in &idxs {
+            assert!(c.shard.indices.contains(&i));
+        }
+        // No duplicates when the shard is big enough.
+        let mut s = idxs.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 32);
+    }
+
+    #[test]
+    fn small_shard_samples_with_replacement() {
+        let shard = ClientShard { client_id: 0, indices: vec![1, 2, 3] };
+        let c = ClientState::new(shard);
+        let idxs = c.sample_batch(8, &mut Rng::new(3));
+        assert_eq!(idxs.len(), 8);
+        assert!(idxs.iter().all(|i| [1, 2, 3].contains(i)));
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let ds = synth::generate(1, 500, 0).train;
+        let shards = partition_non_iid(&ds, 5, 2, &mut Rng::new(4));
+        let c = ClientState::new(shards[0].clone());
+        let (x, y) = c.gather(&ds, 16, 10, &mut Rng::new(5));
+        assert_eq!(x.len(), 16 * 784);
+        assert_eq!(y.len(), 160);
+    }
+}

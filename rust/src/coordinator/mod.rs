@@ -1,0 +1,15 @@
+//! L3 coordinator: the federated-learning control plane (paper §II-A).
+//!
+//! [`server::FlServer`] owns the global model and drives rounds:
+//! broadcast (error-free downlink, per the paper), local FedSGD steps via
+//! the PJRT [`crate::runtime::Engine`], uplink through a
+//! [`crate::transport::Transport`] scheme, weighted aggregation (eq. 5),
+//! and the SGD update (eq. 6). [`experiments`] contains the drivers that
+//! regenerate the paper's figures.
+
+pub mod client;
+pub mod experiments;
+pub mod server;
+
+pub use client::ClientState;
+pub use server::{FlServer, RoundOutcome};

@@ -1,0 +1,197 @@
+//! The parameter server and FedSGD round loop (paper §II-A, Algorithm
+//! implicit in eq. 1-6).
+//!
+//! Per round: select participants, each computes a one-step minibatch
+//! gradient through the AOT-compiled L2 model (eq. 4), uploads it over
+//! the configured wireless transport (the experimental variable), the PS
+//! aggregates with |D_m|/|D| weights (eq. 5) and applies SGD (eq. 6).
+//! The downlink broadcast is error-free (paper §II-B justification).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::ClientState;
+use crate::data::{partition_non_iid, TrainTest};
+use crate::metrics::{RoundRecord, Trace};
+use crate::model::ParamSet;
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::timing::Ledger;
+use crate::transport::Transport;
+use crate::Result;
+
+/// Aggregated observables of one round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundOutcome {
+    pub round: usize,
+    pub comm_time_s: f64,
+    pub cumulative_comm_s: f64,
+    pub mean_loss: f64,
+    pub mean_ber: f64,
+    pub retransmissions: usize,
+    pub corrupted_frac: f64,
+    pub grad_max_abs: f32,
+}
+
+/// The FL control plane.
+pub struct FlServer<'e> {
+    pub cfg: ExperimentConfig,
+    engine: &'e Engine,
+    transport: Transport,
+    data: TrainTest,
+    clients: Vec<ClientState>,
+    params: ParamSet,
+    ledger: Ledger,
+    root_rng: Rng,
+    /// Total examples across all clients (aggregation denominator |D|).
+    total_data: usize,
+}
+
+impl<'e> FlServer<'e> {
+    /// Build the full system: dataset (synthetic or IDX), non-IID
+    /// partition, transport, and the initial global model.
+    pub fn new(cfg: ExperimentConfig, engine: &'e Engine, data: TrainTest) -> Result<FlServer<'e>> {
+        let root_rng = Rng::new(cfg.seed);
+        let mut part_rng = root_rng.substream("partition", 0, 0);
+        let shards =
+            partition_non_iid(&data.train, cfg.clients, cfg.shards_per_client, &mut part_rng);
+        let clients: Vec<ClientState> = shards.into_iter().map(ClientState::new).collect();
+        let total_data = clients.iter().map(ClientState::data_size).sum();
+        let mut init_rng = root_rng.substream("init", 0, 0);
+        let params = engine.init_params(&mut init_rng);
+        let transport = Transport::new(cfg.transport());
+        Ok(FlServer {
+            cfg,
+            engine,
+            transport,
+            data,
+            clients,
+            params,
+            ledger: Ledger::new(),
+            root_rng,
+            total_data,
+        })
+    }
+
+    /// Convenience constructor that loads the dataset per the config.
+    pub fn from_config(cfg: ExperimentConfig, engine: &'e Engine) -> Result<FlServer<'e>> {
+        let data = crate::data::load_default(&cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n)?;
+        FlServer::new(cfg, engine, data)
+    }
+
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
+    }
+
+    /// Participants for `round` (all clients when the config says so —
+    /// the paper's setting — otherwise a seeded subsample).
+    fn select(&self, round: usize) -> Vec<usize> {
+        if self.cfg.participants_per_round >= self.clients.len() {
+            (0..self.clients.len()).collect()
+        } else {
+            let mut rng = self.root_rng.substream("select", round as u64, 0);
+            rng.choose_k(self.clients.len(), self.cfg.participants_per_round)
+        }
+    }
+
+    /// Execute one full FL round.
+    pub fn run_round(&mut self, round: usize) -> Result<RoundOutcome> {
+        let selected = self.select(round);
+        let selected_data: usize =
+            selected.iter().map(|&c| self.clients[c].data_size()).sum();
+        let _ = self.total_data; // |D| fixed; weights below use the round's selection
+
+        let mut agg = ParamSet::zeros(&self.engine.manifest);
+        let mut loss_sum = 0.0f64;
+        let mut ber_sum = 0.0f64;
+        let mut corrupted = 0.0f64;
+        let mut retx = 0usize;
+        let mut grad_max = 0.0f32;
+
+        for &ci in &selected {
+            let client = &self.clients[ci];
+            // Local computation (eq. 4): one minibatch gradient.
+            let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
+            let (x, y) = client.gather(
+                &self.data.train,
+                self.cfg.batch,
+                self.engine.manifest.num_classes,
+                &mut brng,
+            );
+            let (loss, grads) = self.engine.train_step(&self.params, &x, &y)?;
+            loss_sum += loss as f64;
+            grad_max = grad_max.max(grads.max_abs());
+
+            // Uplink over the wireless substrate.
+            let flat = grads.flatten();
+            let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
+            let (rx, report) = self.transport.send(&flat, &mut crng);
+            let rx_grads = grads.unflatten_like(&rx)?;
+
+            // Weighted aggregation (eq. 5).
+            let w = client.data_size() as f32 / selected_data as f32;
+            agg.axpy(w, &rx_grads);
+
+            self.ledger.record_client(report.seconds);
+            ber_sum += report.ber();
+            corrupted += report.corrupted_floats as f64 / flat.len() as f64;
+            retx += report.retransmissions;
+        }
+
+        // Global update (eq. 6); downlink assumed error-free.
+        self.params.sgd_step(&agg, self.cfg.lr);
+        let comm = self.ledger.finish_round(self.cfg.mux);
+        let n = selected.len() as f64;
+        Ok(RoundOutcome {
+            round,
+            comm_time_s: comm,
+            cumulative_comm_s: self.ledger.total_s,
+            mean_loss: loss_sum / n,
+            mean_ber: ber_sum / n,
+            retransmissions: retx,
+            corrupted_frac: corrupted / n,
+            grad_max_abs: grad_max,
+        })
+    }
+
+    /// Evaluate global-model test accuracy.
+    pub fn evaluate(&self) -> Result<f64> {
+        self.engine.evaluate(&self.params, &self.data.test)
+    }
+
+    /// Run the configured number of rounds, evaluating every
+    /// `eval_every`; returns the full trace (one CSV row per round).
+    pub fn run(&mut self, progress: bool) -> Result<Trace> {
+        let mut trace = Trace::new(self.cfg.scheme.name());
+        for round in 0..self.cfg.rounds {
+            let out = self.run_round(round)?;
+            let eval_now = self.cfg.eval_every > 0
+                && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0);
+            let acc = if eval_now { Some(self.evaluate()?) } else { None };
+            if progress {
+                let acc_s = acc.map_or(String::new(), |a| format!(" acc={a:.4}"));
+                eprintln!(
+                    "[{}] round {:>4} loss={:.4} ber={:.4} t={:.3}s{}",
+                    self.cfg.scheme.name(),
+                    round,
+                    out.mean_loss,
+                    out.mean_ber,
+                    out.cumulative_comm_s,
+                    acc_s
+                );
+            }
+            trace.push(RoundRecord {
+                round,
+                comm_time_s: out.cumulative_comm_s,
+                test_accuracy: acc,
+                train_loss: out.mean_loss,
+                mean_ber: out.mean_ber,
+                retransmissions: out.retransmissions,
+                corrupted_frac: out.corrupted_frac,
+            });
+        }
+        Ok(trace)
+    }
+}

@@ -1,0 +1,143 @@
+//! IDX (the MNIST container format) loader — used automatically when real
+//! MNIST files are placed under `data/mnist/` (see [`super::load_default`]).
+
+use super::{Dataset, TrainTest};
+use crate::{Error, Result};
+use std::io::Read;
+use std::path::Path;
+
+const TRAIN_IMAGES: &str = "train-images-idx3-ubyte";
+const TRAIN_LABELS: &str = "train-labels-idx1-ubyte";
+const TEST_IMAGES: &str = "t10k-images-idx3-ubyte";
+const TEST_LABELS: &str = "t10k-labels-idx1-ubyte";
+
+/// Are all four canonical MNIST files present?
+pub fn mnist_files_present(dir: &str) -> bool {
+    [TRAIN_IMAGES, TRAIN_LABELS, TEST_IMAGES, TEST_LABELS]
+        .iter()
+        .all(|f| Path::new(dir).join(f).exists())
+}
+
+fn read_file(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+fn be32(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Parse an IDX3 (images) buffer into normalized floats.
+pub fn parse_idx3_images(buf: &[u8]) -> Result<(Vec<f32>, usize)> {
+    if buf.len() < 16 || be32(buf, 0) != 0x0000_0803 {
+        return Err(Error::Data("bad idx3 magic".into()));
+    }
+    let n = be32(buf, 4) as usize;
+    let rows = be32(buf, 8) as usize;
+    let cols = be32(buf, 12) as usize;
+    if rows != cols {
+        return Err(Error::Data(format!("non-square images {rows}x{cols}")));
+    }
+    let need = 16 + n * rows * cols;
+    if buf.len() < need {
+        return Err(Error::Data("idx3 truncated".into()));
+    }
+    let mut out = Vec::with_capacity(n * rows * cols);
+    for &p in &buf[16..need] {
+        let v = p as f32 / 255.0;
+        out.push((v - super::synth::NORM_MEAN) / super::synth::NORM_STD);
+    }
+    Ok((out, rows))
+}
+
+/// Parse an IDX1 (labels) buffer.
+pub fn parse_idx1_labels(buf: &[u8]) -> Result<Vec<u8>> {
+    if buf.len() < 8 || be32(buf, 0) != 0x0000_0801 {
+        return Err(Error::Data("bad idx1 magic".into()));
+    }
+    let n = be32(buf, 4) as usize;
+    if buf.len() < 8 + n {
+        return Err(Error::Data("idx1 truncated".into()));
+    }
+    let labels = buf[8..8 + n].to_vec();
+    if let Some(&bad) = labels.iter().find(|&&l| l > 9) {
+        return Err(Error::Data(format!("label {bad} out of range")));
+    }
+    Ok(labels)
+}
+
+fn load_split(dir: &Path, images: &str, labels: &str) -> Result<Dataset> {
+    let (imgs, hw) = parse_idx3_images(&read_file(&dir.join(images))?)?;
+    let labels = parse_idx1_labels(&read_file(&dir.join(labels))?)?;
+    if imgs.len() != labels.len() * hw * hw {
+        return Err(Error::Data("image/label count mismatch".into()));
+    }
+    Ok(Dataset { images: imgs, labels, hw })
+}
+
+/// Load the four canonical MNIST files from `dir`.
+pub fn load_mnist(dir: &str) -> Result<TrainTest> {
+    let d = Path::new(dir);
+    Ok(TrainTest {
+        train: load_split(d, TRAIN_IMAGES, TRAIN_LABELS)?,
+        test: load_split(d, TEST_IMAGES, TEST_LABELS)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx3(n: usize, hw: usize) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&(n as u32).to_be_bytes());
+        b.extend_from_slice(&(hw as u32).to_be_bytes());
+        b.extend_from_slice(&(hw as u32).to_be_bytes());
+        for i in 0..n * hw * hw {
+            b.push((i % 256) as u8);
+        }
+        b
+    }
+
+    fn make_idx1(labels: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        b.extend_from_slice(labels);
+        b
+    }
+
+    #[test]
+    fn parse_images_roundtrip() {
+        let buf = make_idx3(3, 4);
+        let (imgs, hw) = parse_idx3_images(&buf).unwrap();
+        assert_eq!(hw, 4);
+        assert_eq!(imgs.len(), 3 * 16);
+        // First pixel = 0 -> normalized background value.
+        let bg = (0.0 - super::super::synth::NORM_MEAN) / super::super::synth::NORM_STD;
+        assert!((imgs[0] - bg).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_labels_roundtrip() {
+        let labels = vec![0u8, 3, 9, 5];
+        assert_eq!(parse_idx1_labels(&make_idx1(&labels)).unwrap(), labels);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_idx3_images(&[0u8; 20]).is_err());
+        assert!(parse_idx1_labels(&[0u8; 4]).is_err());
+        let mut buf = make_idx3(3, 4);
+        buf.truncate(20);
+        assert!(parse_idx3_images(&buf).is_err());
+        assert!(parse_idx1_labels(&make_idx1(&[11u8])).is_err());
+    }
+
+    #[test]
+    fn files_present_negative() {
+        assert!(!mnist_files_present("/definitely/not/here"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Dataset substrate: synthetic MNIST, real-MNIST IDX loading, and the
+//! paper's non-IID partitioner.
+//!
+//! The paper trains on MNIST (60k/10k, 28x28, 10 digits) distributed
+//! non-IID: 100 clients, 2 digits per client, ~300 images per digit. This
+//! environment has no network, so [`synth`] procedurally generates an
+//! MNIST-shaped dataset (same sizes, same class structure, learnable by
+//! the same CNN); if real IDX files are present under `data/mnist/`, the
+//! loader uses them instead (see [`load_default`]).
+
+pub mod idx;
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition_non_iid, ClientShard};
+
+/// An in-memory image-classification dataset (NCHW floats, C = 1).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Images, flattened `n * 28 * 28`, normalized (mean/std).
+    pub images: Vec<f32>,
+    /// Labels 0..=9.
+    pub labels: Vec<u8>,
+    /// Image height = width.
+    pub hw: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn pixels_per_image(&self) -> usize {
+        self.hw * self.hw
+    }
+
+    /// Borrow image `i` as a pixel slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let p = self.pixels_per_image();
+        &self.images[i * p..(i + 1) * p]
+    }
+
+    /// Gather a batch (images, one-hot labels) for the given indices —
+    /// the exact memory layout the AOT `train_step` expects.
+    pub fn gather_batch(&self, idxs: &[usize], num_classes: usize) -> (Vec<f32>, Vec<f32>) {
+        let p = self.pixels_per_image();
+        let mut x = Vec::with_capacity(idxs.len() * p);
+        let mut y = vec![0f32; idxs.len() * num_classes];
+        for (bi, &i) in idxs.iter().enumerate() {
+            x.extend_from_slice(self.image(i));
+            y[bi * num_classes + self.labels[i] as usize] = 1.0;
+        }
+        (x, y)
+    }
+
+    /// Indices of every example with the given label.
+    pub fn indices_of_class(&self, class: u8) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == class).collect()
+    }
+
+    /// Per-class counts.
+    pub fn class_histogram(&self) -> [usize; 10] {
+        let mut h = [0usize; 10];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Train/test pair.
+#[derive(Clone, Debug)]
+pub struct TrainTest {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Load real MNIST from `dir` if the four IDX files exist, otherwise
+/// generate the synthetic dataset with the given seed and sizes.
+pub fn load_default(
+    dir: &str,
+    seed: u64,
+    train_n: usize,
+    test_n: usize,
+) -> crate::Result<TrainTest> {
+    if idx::mnist_files_present(dir) {
+        idx::load_mnist(dir)
+    } else {
+        Ok(synth::generate(seed, train_n, test_n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_batch_layout() {
+        let ds = synth::generate(1, 64, 16).train;
+        let (x, y) = ds.gather_batch(&[0, 5, 9], 10);
+        assert_eq!(x.len(), 3 * 28 * 28);
+        assert_eq!(y.len(), 30);
+        for (bi, &i) in [0usize, 5, 9].iter().enumerate() {
+            assert_eq!(
+                y[bi * 10 + ds.labels[i] as usize],
+                1.0,
+                "one-hot at {bi}"
+            );
+            assert_eq!(y[bi * 10..(bi + 1) * 10].iter().sum::<f32>(), 1.0);
+            assert_eq!(&x[bi * 784..(bi + 1) * 784], ds.image(i));
+        }
+    }
+
+    #[test]
+    fn load_default_falls_back_to_synth() {
+        let tt = load_default("/nonexistent/mnist", 3, 100, 20).unwrap();
+        assert_eq!(tt.train.len(), 100);
+        assert_eq!(tt.test.len(), 20);
+    }
+}

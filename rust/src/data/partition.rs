@@ -1,0 +1,138 @@
+//! Non-IID partitioner (paper §V: "we distribute the data in a non-iid
+//! way, with each LC having 2 digits and each digit having around 300
+//! images for training").
+//!
+//! The classic shard construction: sort the training set by label, cut it
+//! into `2 M` equal shards, deal 2 shards to each of the `M` clients. With
+//! balanced classes each shard is (almost always) single-digit, so each
+//! client sees at most 2 distinct digits.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// A client's local data: indices into the shared training set.
+#[derive(Clone, Debug)]
+pub struct ClientShard {
+    pub client_id: usize,
+    pub indices: Vec<usize>,
+}
+
+impl ClientShard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Distinct labels present in this shard.
+    pub fn distinct_labels(&self, ds: &Dataset) -> Vec<u8> {
+        let mut ls: Vec<u8> = self.indices.iter().map(|&i| ds.labels[i]).collect();
+        ls.sort_unstable();
+        ls.dedup();
+        ls
+    }
+}
+
+/// Partition `ds` across `m` clients, `shards_per_client` label-sorted
+/// shards each (2 reproduces the paper).
+pub fn partition_non_iid(
+    ds: &Dataset,
+    m: usize,
+    shards_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<ClientShard> {
+    assert!(m > 0 && shards_per_client > 0);
+    let n = ds.len();
+    let nshards = m * shards_per_client;
+    assert!(n >= nshards, "dataset too small: {n} examples, {nshards} shards");
+
+    // Sort example indices by label (stable on index for determinism).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (ds.labels[i], i));
+
+    // Deal shards randomly to clients.
+    let shard_size = n / nshards;
+    let mut shard_ids: Vec<usize> = (0..nshards).collect();
+    rng.shuffle(&mut shard_ids);
+
+    let mut out = Vec::with_capacity(m);
+    for c in 0..m {
+        let mut indices = Vec::with_capacity(shards_per_client * shard_size);
+        for s in 0..shards_per_client {
+            let shard = shard_ids[c * shards_per_client + s];
+            let start = shard * shard_size;
+            indices.extend_from_slice(&order[start..start + shard_size]);
+        }
+        out.push(ClientShard { client_id: c, indices });
+    }
+    out
+}
+
+/// IID control partition (uniform random split) for ablations.
+pub fn partition_iid(ds: &Dataset, m: usize, rng: &mut Rng) -> Vec<ClientShard> {
+    let mut order = rng.permutation(ds.len());
+    let per = ds.len() / m;
+    (0..m)
+        .map(|c| ClientShard {
+            client_id: c,
+            indices: order.drain(..per.min(order.len())).collect(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn paper_partition_shape() {
+        // Paper scale: 60k images, 100 clients, 2 digits each, ~300
+        // images per digit (=> 600 per client).
+        let ds = synth::generate(1, 6000, 0).train; // 1/10 scale for test speed
+        let mut rng = Rng::new(2);
+        let shards = partition_non_iid(&ds, 100, 2, &mut rng);
+        assert_eq!(shards.len(), 100);
+        let mut seen = vec![false; ds.len()];
+        for s in &shards {
+            assert_eq!(s.len(), 60); // 600 at full scale
+            let labels = s.distinct_labels(&ds);
+            assert!(labels.len() <= 2, "client {} labels {labels:?}", s.client_id);
+            for &i in &s.indices {
+                assert!(!seen[i], "index {i} assigned twice");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let ds = synth::generate(1, 1000, 0).train;
+        let a = partition_non_iid(&ds, 10, 2, &mut Rng::new(5));
+        let b = partition_non_iid(&ds, 10, 2, &mut Rng::new(5));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    fn iid_covers_all_classes_per_client() {
+        let ds = synth::generate(2, 2000, 0).train;
+        let mut rng = Rng::new(3);
+        let shards = partition_iid(&ds, 10, &mut rng);
+        for s in &shards {
+            assert_eq!(s.len(), 200);
+            // Each IID client should see most classes.
+            assert!(s.distinct_labels(&ds).len() >= 8);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_shards_panics() {
+        let ds = synth::generate(1, 10, 0).train;
+        partition_non_iid(&ds, 100, 2, &mut Rng::new(1));
+    }
+}

@@ -1,0 +1,214 @@
+//! Procedural synthetic MNIST (substitution documented in DESIGN.md §4).
+//!
+//! Each class is a 7x5 seed glyph of the corresponding digit, rendered to
+//! 28x28 with per-sample randomized affine jitter (shift, scale, shear),
+//! stroke thickening, multiplicative intensity jitter, and additive pixel
+//! noise. The result preserves what the experiments need from MNIST: 10
+//! visually distinct classes on 28x28 with intra-class variation that a
+//! small CNN learns to >95% test accuracy, non-IID shardable by label,
+//! and inputs bounded in [0, 1] pre-normalization (the §III premise).
+
+use super::{Dataset, TrainTest};
+use crate::rng::Rng;
+
+/// 7x5 seed bitmaps for digits 0-9 (classic 5x7 LCD font).
+const GLYPHS: [[u8; 7]; 10] = [
+    // Each row is 5 bits, MSB = leftmost pixel.
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// MNIST-convention normalization constants applied after rendering
+/// (mean/std of the generated corpus are close to these; using the
+/// canonical constants keeps parity with the usual MNIST pipelines).
+pub const NORM_MEAN: f32 = 0.1307;
+pub const NORM_STD: f32 = 0.3081;
+
+const HW: usize = 28;
+
+/// Sample one 28x28 image of `digit` into `out` (len 784), un-normalized
+/// in [0, 1].
+fn render(digit: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), HW * HW);
+    out.fill(0.0);
+    // Random affine: the glyph box (7x5) is placed into a ~20x14 box
+    // (scale ~2.8x) with jitter.
+    let scale_y = rng.uniform(2.4, 3.2);
+    let scale_x = rng.uniform(2.2, 3.0);
+    let shear = rng.uniform(-0.25, 0.25);
+    let off_y = rng.uniform(2.0, 6.0);
+    let off_x = rng.uniform(4.0, 9.0);
+    let thickness = rng.uniform(0.55, 1.0);
+    let intensity = rng.uniform(0.75, 1.0);
+
+    let glyph = &GLYPHS[digit];
+    // Forward-map each lit glyph cell into the image with a soft 2x2-ish
+    // footprint; the inverse-map approach would be cleaner but forward
+    // splatting plus thickness jitter gives a convincing stroke look.
+    for (gy, row) in glyph.iter().enumerate() {
+        for gx in 0..5 {
+            if row >> (4 - gx) & 1 == 0 {
+                continue;
+            }
+            let cy = off_y + gy as f64 * scale_y;
+            let cx = off_x + gx as f64 * scale_x + shear * gy as f64 * scale_x;
+            // Splat a disc of radius ~ scale * thickness.
+            let r = 0.75 * thickness * scale_x.min(scale_y);
+            let (ylo, yhi) = ((cy - r).floor() as i64, (cy + r).ceil() as i64);
+            let (xlo, xhi) = ((cx - r).floor() as i64, (cx + r).ceil() as i64);
+            for py in ylo..=yhi {
+                for px in xlo..=xhi {
+                    if !(0..HW as i64).contains(&py) || !(0..HW as i64).contains(&px) {
+                        continue;
+                    }
+                    let d2 = (py as f64 - cy).powi(2) + (px as f64 - cx).powi(2);
+                    if d2 <= r * r {
+                        let v = (1.0 - (d2 / (r * r)).sqrt() * 0.4) * intensity;
+                        let cell = &mut out[py as usize * HW + px as usize];
+                        *cell = cell.max(v as f32);
+                    }
+                }
+            }
+        }
+    }
+    // Additive pixel noise + clamp to [0, 1].
+    for p in out.iter_mut() {
+        let noisy = *p + rng.normal_scaled(0.0, 0.02) as f32;
+        *p = noisy.clamp(0.0, 1.0);
+    }
+}
+
+/// Generate `train_n` + `test_n` images with balanced classes,
+/// normalized with [`NORM_MEAN`]/[`NORM_STD`].
+pub fn generate(seed: u64, train_n: usize, test_n: usize) -> TrainTest {
+    let root = Rng::new(seed);
+    let make = |n: usize, purpose: &str| -> Dataset {
+        let mut rng = root.substream(purpose, n as u64, 0);
+        let mut images = vec![0f32; n * HW * HW];
+        let mut labels = Vec::with_capacity(n);
+        let mut buf = vec![0f32; HW * HW];
+        for i in 0..n {
+            let digit = (i % 10) as u8; // balanced classes
+            render(digit as usize, &mut rng, &mut buf);
+            for (dst, &src) in images[i * HW * HW..(i + 1) * HW * HW]
+                .iter_mut()
+                .zip(buf.iter())
+            {
+                *dst = (src - NORM_MEAN) / NORM_STD;
+            }
+            labels.push(digit);
+        }
+        // Shuffle so class order is not positional.
+        let mut perm = rng.permutation(n);
+        let mut images_s = vec![0f32; images.len()];
+        let mut labels_s = vec![0u8; n];
+        for (dst, src) in perm.drain(..).enumerate() {
+            images_s[dst * HW * HW..(dst + 1) * HW * HW]
+                .copy_from_slice(&images[src * HW * HW..(src + 1) * HW * HW]);
+            labels_s[dst] = labels[src];
+        }
+        Dataset { images: images_s, labels: labels_s, hw: HW }
+    };
+    TrainTest { train: make(train_n, "train"), test: make(test_n, "test") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_balance() {
+        let tt = generate(1, 1000, 200);
+        assert_eq!(tt.train.len(), 1000);
+        assert_eq!(tt.test.len(), 200);
+        let h = tt.train.class_histogram();
+        assert!(h.iter().all(|&c| c == 100), "{h:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(7, 50, 10);
+        let b = generate(7, 50, 10);
+        assert_eq!(a.train.images, b.train.images);
+        assert_eq!(a.train.labels, b.train.labels);
+        let c = generate(8, 50, 10);
+        assert_ne!(a.train.images, c.train.images);
+    }
+
+    #[test]
+    fn pixels_bounded_and_sparse() {
+        let tt = generate(2, 200, 0);
+        let lo = (0.0 - NORM_MEAN) / NORM_STD;
+        let hi = (1.0 - NORM_MEAN) / NORM_STD;
+        for &p in &tt.train.images {
+            assert!(p >= lo - 1e-5 && p <= hi + 1e-5);
+        }
+        // MNIST-like: mostly background.
+        let frac_ink = tt
+            .train
+            .images
+            .iter()
+            .filter(|&&p| p > lo + 0.1)
+            .count() as f64
+            / tt.train.images.len() as f64;
+        assert!((0.05..0.5).contains(&frac_ink), "{frac_ink}");
+    }
+
+    #[test]
+    fn intra_class_variation_exists() {
+        let tt = generate(3, 40, 0);
+        let zeros: Vec<usize> = tt.train.indices_of_class(0);
+        assert!(zeros.len() >= 2);
+        let a = tt.train.image(zeros[0]);
+        let b = tt.train.image(zeros[1]);
+        assert_ne!(a, b, "augmentation must vary samples");
+    }
+
+    #[test]
+    fn classes_visually_distinct() {
+        // Nearest-centroid classification of fresh samples must beat 70%
+        // — a sanity floor proving class structure (the CNN does better).
+        let tt = generate(4, 2000, 500);
+        let p = tt.train.pixels_per_image();
+        let mut centroids = vec![vec![0f32; p]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..tt.train.len() {
+            let l = tt.train.labels[i] as usize;
+            counts[l] += 1;
+            for (c, &v) in centroids[l].iter_mut().zip(tt.train.image(i)) {
+                *c += v;
+            }
+        }
+        for (c, n) in centroids.iter_mut().zip(counts) {
+            for v in c.iter_mut() {
+                *v /= n as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..tt.test.len() {
+            let img = tt.test.image(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 =
+                        centroids[a].iter().zip(img).map(|(c, v)| (c - v).powi(2)).sum();
+                    let db: f32 =
+                        centroids[b].iter().zip(img).map(|(c, v)| (c - v).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == tt.test.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / tt.test.len() as f64;
+        assert!(acc > 0.7, "nearest-centroid accuracy {acc}");
+    }
+}

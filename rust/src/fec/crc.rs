@@ -1,0 +1,152 @@
+//! CRC-32 (IEEE 802.3 polynomial 0x04C11DB7, reflected 0xEDB88320) —
+//! the frame check sequence ECRT appends to each packet so residual
+//! decoder errors trigger retransmission instead of corrupting the model.
+//!
+//! Table-driven, byte-at-a-time; bit-stream adapters for [`BitVec`].
+
+use crate::bits::BitVec;
+
+const POLY: u32 = 0xEDB8_8320;
+
+/// 256-entry lookup table, built at first use.
+fn table() -> &'static [u32; 256] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 == 1 { (c >> 1) ^ POLY } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of a byte slice (standard IEEE: init 0xFFFFFFFF, final xor).
+pub fn crc32_bytes(data: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = (c >> 8) ^ t[((c ^ b as u32) & 0xFF) as usize];
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// CRC-32 over a bit stream: bits are packed into bytes LSB-first in wire
+/// order (a fixed convention shared by append/check; any consistent
+/// packing yields the same error-detection power).
+pub fn crc32_bits(bits: &BitVec) -> u32 {
+    let mut bytes = Vec::with_capacity(bits.len().div_ceil(8));
+    let mut cur = 0u8;
+    for i in 0..bits.len() {
+        if bits.get(i) {
+            cur |= 1 << (i & 7);
+        }
+        if i & 7 == 7 {
+            bytes.push(cur);
+            cur = 0;
+        }
+    }
+    if bits.len() % 8 != 0 {
+        bytes.push(cur);
+    }
+    // Mix in the length so truncation/extension is detected.
+    bytes.extend_from_slice(&(bits.len() as u32).to_le_bytes());
+    crc32_bytes(&bytes)
+}
+
+/// Payload + 32-bit FCS (LSB-first on the wire).
+pub fn append_crc(payload: &BitVec) -> BitVec {
+    let fcs = crc32_bits(payload);
+    let mut out = payload.clone();
+    out.push_bits_lsb(fcs as u64, 32);
+    out
+}
+
+/// Split `frame` into payload and verify the FCS. Returns the payload and
+/// whether the check passed.
+pub fn check_crc(frame: &BitVec) -> (BitVec, bool) {
+    if frame.len() < 32 {
+        return (BitVec::new(), false);
+    }
+    let n = frame.len() - 32;
+    let payload = frame.slice(0, n);
+    let mut fcs = 0u32;
+    for i in 0..32 {
+        fcs |= (frame.get(n + i) as u32) << i;
+    }
+    let ok = crc32_bits(&payload) == fcs;
+    (payload, ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn known_vector() {
+        // Canonical check value: CRC-32("123456789") = 0xCBF43926.
+        assert_eq!(crc32_bytes(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32_bytes(b""), 0x0000_0000);
+    }
+
+    #[test]
+    fn append_check_roundtrip() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 7, 8, 63, 324, 5152] {
+            let payload: BitVec = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+            let frame = append_crc(&payload);
+            assert_eq!(frame.len(), n + 32);
+            let (got, ok) = check_crc(&frame);
+            assert!(ok, "n={n}");
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let mut rng = Rng::new(2);
+        let payload: BitVec = (0..500).map(|_| rng.bernoulli(0.5)).collect();
+        let frame = append_crc(&payload);
+        for pos in [0usize, 1, 100, 499, 500, 531] {
+            let mut bad = frame.clone();
+            bad.flip(pos);
+            let (_, ok) = check_crc(&bad);
+            assert!(!ok, "flip at {pos} undetected");
+        }
+    }
+
+    #[test]
+    fn detects_random_burst_errors() {
+        let mut rng = Rng::new(3);
+        let payload: BitVec = (0..1000).map(|_| rng.bernoulli(0.5)).collect();
+        let frame = append_crc(&payload);
+        let mut undetected = 0;
+        for _ in 0..2000 {
+            let mut bad = frame.clone();
+            let nerr = 1 + rng.below(16) as usize;
+            for _ in 0..nerr {
+                bad.flip(rng.below(bad.len() as u64) as usize);
+            }
+            if bad == frame {
+                continue; // even number of flips on same position
+            }
+            let (_, ok) = check_crc(&bad);
+            if ok {
+                undetected += 1;
+            }
+        }
+        // CRC-32 undetected fraction ~2^-32; zero expected in 2000 trials.
+        assert_eq!(undetected, 0);
+    }
+
+    #[test]
+    fn too_short_frame_fails() {
+        let (_, ok) = check_crc(&BitVec::from_bools(&[true; 10]));
+        assert!(!ok);
+    }
+}

@@ -1,0 +1,461 @@
+//! QC-LDPC code of IEEE 802.11n (rate 1/2, n = 648, Z = 27) — the FEC
+//! behind the paper's ECRT baseline (§V: "we use a coding rate of 1/2 to
+//! enhance error correction ... minimum Hamming distance is 15 ... error
+//! correction capability of 7 bits", citing Butler [15]).
+//!
+//! * Parity-check matrix: the 12 x 24 base (prototype) matrix expanded by
+//!   Z x Z cyclic-shift identities. Entries transcribed from IEEE
+//!   802.11n-2009 Annex R; structural validity (full rank, girth > 4,
+//!   regular expansion) is enforced by the tests rather than trusted.
+//! * Encoder: systematic via one-time GF(2) Gaussian elimination of H —
+//!   parity positions are the pivot columns (the dual-diagonal right
+//!   half), info bits the free columns. Encoding is then 324 word-wise
+//!   AND+popcount dot products.
+//! * Decoders:
+//!   - [`LdpcCode::decode_min_sum`]: normalized min-sum belief
+//!     propagation over soft LLRs (the real receiver);
+//!   - [`LdpcCode::decode_bounded_distance`]: the paper's abstraction —
+//!     success iff at most `t = 7` hard bit errors; used by the fast
+//!     protocol-level ECRT model in the FL sweeps.
+
+use crate::bits::BitVec;
+
+/// Cyclic shift of -1 means the all-zero Z x Z block.
+const NONE: i16 = -1;
+
+/// IEEE 802.11n-2009 rate-1/2 base matrix, Z = 27 (12 x 24).
+pub const BASE_11N_R12_Z27: [[i16; 24]; 12] = [
+    [0, NONE, NONE, NONE, 0, 0, NONE, NONE, 0, NONE, NONE, 0, 1, 0, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE],
+    [22, 0, NONE, NONE, 17, NONE, 0, 0, 12, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE],
+    [6, NONE, 0, NONE, 10, NONE, NONE, NONE, 24, NONE, 0, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE],
+    [2, NONE, NONE, 0, 20, NONE, NONE, NONE, 25, 0, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE, NONE, NONE, NONE],
+    [23, NONE, NONE, NONE, 3, NONE, NONE, NONE, 0, NONE, 9, 11, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE, NONE, NONE],
+    [24, NONE, 23, 1, 17, NONE, 3, NONE, 10, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE, NONE],
+    [25, NONE, NONE, NONE, 8, NONE, NONE, NONE, 7, 18, NONE, NONE, 0, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE, NONE],
+    [13, 24, NONE, NONE, 0, NONE, 8, NONE, 6, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE, NONE],
+    [7, 20, NONE, 16, 22, 10, NONE, NONE, 23, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE, NONE],
+    [11, NONE, NONE, NONE, 19, NONE, NONE, NONE, 13, NONE, 3, 17, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0, 0, NONE],
+    [25, NONE, 8, NONE, 23, 18, NONE, 14, 9, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0, 0],
+    [3, NONE, NONE, NONE, 16, NONE, NONE, 2, 25, 5, NONE, NONE, 1, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, NONE, 0],
+];
+
+/// Bounded-distance error-correction capability the paper assumes
+/// (t = floor((d_min - 1)/2) with d_min = 15, Butler [15]).
+pub const PAPER_T: usize = 7;
+
+const WORDS_N: usize = 11; // ceil(648 / 64)
+const WORDS_K: usize = 6; // ceil(324 / 64)
+
+/// An expanded QC-LDPC code with precomputed encoder and Tanner graph.
+pub struct LdpcCode {
+    /// Codeword length n (648).
+    pub n: usize,
+    /// Number of parity checks m (324).
+    pub m: usize,
+    /// Information length k = n - m (324).
+    pub k: usize,
+    /// Sparse rows: for each check, the variable indices it touches.
+    check_vars: Vec<Vec<u32>>,
+    /// For each variable, the checks it participates in.
+    var_checks: Vec<Vec<u32>>,
+    /// Column indices of information bits (free columns), length k.
+    info_cols: Vec<u32>,
+    /// Column indices of parity bits (pivot columns), length m.
+    parity_cols: Vec<u32>,
+    /// Row r: parity_cols[r]'s value = dot(parity_gen[r], info bits).
+    parity_gen: Vec<[u64; WORDS_K]>,
+    /// Total Tanner edges (for the decoder workspace).
+    edges: usize,
+}
+
+impl LdpcCode {
+    /// The paper's code: 802.11n rate 1/2, Z = 27, n = 648.
+    pub fn ieee80211n_648_r12() -> &'static LdpcCode {
+        use std::sync::OnceLock;
+        static CODE: OnceLock<LdpcCode> = OnceLock::new();
+        CODE.get_or_init(|| LdpcCode::from_base(&BASE_11N_R12_Z27, 27))
+    }
+
+    /// Expand a base matrix with lifting factor `z` and precompute the
+    /// systematic encoder.
+    pub fn from_base(base: &[[i16; 24]; 12], z: usize) -> LdpcCode {
+        let m = 12 * z;
+        let n = 24 * z;
+        let k = n - m;
+        // Sparse H.
+        let mut check_vars: Vec<Vec<u32>> = vec![Vec::new(); m];
+        let mut var_checks: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (bi, row) in base.iter().enumerate() {
+            for (bj, &shift) in row.iter().enumerate() {
+                if shift < 0 {
+                    continue;
+                }
+                let s = shift as usize % z;
+                for r in 0..z {
+                    let check = bi * z + r;
+                    let var = bj * z + (r + s) % z;
+                    check_vars[check].push(var as u32);
+                    var_checks[var].push(check as u32);
+                }
+            }
+        }
+        for cv in &mut check_vars {
+            cv.sort_unstable();
+        }
+        let edges = check_vars.iter().map(|v| v.len()).sum();
+
+        // Dense copy of H for Gaussian elimination: m rows of n bits.
+        let mut rows: Vec<[u64; WORDS_N]> = vec![[0u64; WORDS_N]; m];
+        for (c, vars) in check_vars.iter().enumerate() {
+            for &v in vars {
+                rows[c][(v >> 6) as usize] |= 1u64 << (v & 63);
+            }
+        }
+
+        // Eliminate, preferring pivots in the right (parity) half so the
+        // code stays systematic-in-front when the base design allows it.
+        let mut pivot_of_row: Vec<Option<u32>> = vec![None; m];
+        let mut is_pivot = vec![false; n];
+        let mut next_row = 0usize;
+        let col_order: Vec<usize> = (k..n).chain(0..k).collect();
+        for &col in &col_order {
+            if next_row == m {
+                break;
+            }
+            let (w, b) = (col >> 6, col & 63);
+            // Find a row at or below next_row with a 1 in this column.
+            let Some(pr) = (next_row..m).find(|&r| rows[r][w] >> b & 1 == 1) else {
+                continue;
+            };
+            rows.swap(next_row, pr);
+            let prow = rows[next_row];
+            for (r, row) in rows.iter_mut().enumerate() {
+                if r != next_row && row[w] >> b & 1 == 1 {
+                    for (a, pb) in row.iter_mut().zip(&prow) {
+                        *a ^= pb;
+                    }
+                }
+            }
+            pivot_of_row[next_row] = Some(col as u32);
+            is_pivot[col] = true;
+            next_row += 1;
+        }
+        assert_eq!(next_row, m, "parity-check matrix is rank-deficient");
+
+        let parity_cols: Vec<u32> = pivot_of_row.iter().map(|p| p.unwrap()).collect();
+        let info_cols: Vec<u32> =
+            (0..n as u32).filter(|&c| !is_pivot[c as usize]).collect();
+        assert_eq!(info_cols.len(), k);
+
+        // After full (reduced) elimination each row reads:
+        //   c[pivot_r] = sum_{free cols f with H'[r][f]=1} c[f]
+        let mut parity_gen = vec![[0u64; WORDS_K]; m];
+        for r in 0..m {
+            for (fi, &f) in info_cols.iter().enumerate() {
+                if rows[r][(f >> 6) as usize] >> (f & 63) & 1 == 1 {
+                    parity_gen[r][fi >> 6] |= 1u64 << (fi & 63);
+                }
+            }
+        }
+
+        LdpcCode { n, m, k, check_vars, var_checks, info_cols, parity_cols, parity_gen, edges }
+    }
+
+    /// Systematic encode: info bits land on `info_cols` (which are the
+    /// first k columns for the 802.11n design), parities on pivot columns.
+    pub fn encode(&self, info: &BitVec) -> BitVec {
+        assert_eq!(info.len(), self.k, "info length");
+        // Pack info into words once.
+        let mut iw = [0u64; WORDS_K];
+        for i in 0..self.k {
+            if info.get(i) {
+                iw[i >> 6] |= 1u64 << (i & 63);
+            }
+        }
+        let mut cw = BitVec::zeros(self.n);
+        for (i, &col) in self.info_cols.iter().enumerate() {
+            if iw[i >> 6] >> (i & 63) & 1 == 1 {
+                cw.set(col as usize, true);
+            }
+        }
+        for (r, gen) in self.parity_gen.iter().enumerate() {
+            let mut acc = 0u64;
+            for (a, b) in gen.iter().zip(&iw) {
+                acc ^= a & b;
+            }
+            if acc.count_ones() & 1 == 1 {
+                cw.set(self.parity_cols[r] as usize, true);
+            }
+        }
+        cw
+    }
+
+    /// Extract the information bits from a codeword.
+    pub fn extract_info(&self, cw: &BitVec) -> BitVec {
+        let mut info = BitVec::zeros(self.k);
+        for (i, &col) in self.info_cols.iter().enumerate() {
+            info.set(i, cw.get(col as usize));
+        }
+        info
+    }
+
+    /// H c == 0?
+    pub fn syndrome_ok(&self, cw: &BitVec) -> bool {
+        assert_eq!(cw.len(), self.n);
+        self.check_vars.iter().all(|vars| {
+            vars.iter().filter(|&&v| cw.get(v as usize)).count() % 2 == 0
+        })
+    }
+
+    /// Normalized min-sum decoding (flooding schedule, factor 0.75).
+    ///
+    /// `llr[v] > 0` means bit v is more likely 0. Returns the hard
+    /// decision and whether the syndrome converged to zero.
+    pub fn decode_min_sum(&self, llr: &[f32], max_iter: usize) -> (BitVec, bool) {
+        assert_eq!(llr.len(), self.n);
+        const ALPHA: f32 = 0.75;
+        // Edge arrays in check-major order.
+        let mut r_msg = vec![0f32; self.edges]; // check -> var
+        // Posterior per variable.
+        let mut post: Vec<f32> = llr.to_vec();
+        let mut hard = BitVec::zeros(self.n);
+        // Precompute edge offsets per check.
+        let mut offs = Vec::with_capacity(self.m + 1);
+        offs.push(0usize);
+        for vars in &self.check_vars {
+            offs.push(offs.last().unwrap() + vars.len());
+        }
+
+        for _iter in 0..max_iter {
+            // Check update using Q = post - R (extrinsic).
+            for (c, vars) in self.check_vars.iter().enumerate() {
+                let base = offs[c];
+                let mut sign = 1f32;
+                let (mut min1, mut min2) = (f32::INFINITY, f32::INFINITY);
+                let mut min_idx = 0usize;
+                for (j, &v) in vars.iter().enumerate() {
+                    let q = post[v as usize] - r_msg[base + j];
+                    let a = q.abs();
+                    if q < 0.0 {
+                        sign = -sign;
+                    }
+                    if a < min1 {
+                        min2 = min1;
+                        min1 = a;
+                        min_idx = j;
+                    } else if a < min2 {
+                        min2 = a;
+                    }
+                }
+                for (j, &v) in vars.iter().enumerate() {
+                    let q = post[v as usize] - r_msg[base + j];
+                    let mag = if j == min_idx { min2 } else { min1 };
+                    let s = sign * if q < 0.0 { -1.0 } else { 1.0 };
+                    let new_r = ALPHA * s * mag;
+                    // Update posterior incrementally: remove old R, add new.
+                    post[v as usize] += new_r - r_msg[base + j];
+                    r_msg[base + j] = new_r;
+                }
+            }
+            // Hard decision + syndrome early exit.
+            for v in 0..self.n {
+                hard.set(v, post[v] < 0.0);
+            }
+            if self.syndrome_ok(&hard) {
+                return (hard, true);
+            }
+        }
+        (hard, false)
+    }
+
+    /// The paper's bounded-distance abstraction: given the transmitted
+    /// codeword and the received hard bits, decoding succeeds iff the
+    /// channel introduced at most `t` errors (then the decoder output is
+    /// the transmitted codeword). This is the protocol-level fast model
+    /// used in the FL sweeps; `t = PAPER_T = 7` per Butler [15].
+    pub fn decode_bounded_distance(
+        &self,
+        tx: &BitVec,
+        rx_hard: &BitVec,
+        t: usize,
+    ) -> Option<BitVec> {
+        if tx.hamming(rx_hard) <= t {
+            Some(tx.clone())
+        } else {
+            None
+        }
+    }
+
+    /// Variable-degree profile (for structure tests).
+    pub fn var_degrees(&self) -> Vec<usize> {
+        self.var_checks.iter().map(|c| c.len()).collect()
+    }
+
+    /// Coding rate k/n.
+    pub fn rate(&self) -> f64 {
+        self.k as f64 / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn code() -> &'static LdpcCode {
+        LdpcCode::ieee80211n_648_r12()
+    }
+
+    fn random_info(rng: &mut Rng, k: usize) -> BitVec {
+        (0..k).map(|_| rng.bernoulli(0.5)).collect()
+    }
+
+    #[test]
+    fn dimensions_and_rate() {
+        let c = code();
+        assert_eq!((c.n, c.m, c.k), (648, 324, 324));
+        assert!((c.rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn systematic_in_front() {
+        // 802.11n right half is dual-diagonal invertible, so info columns
+        // must be exactly 0..k.
+        let c = code();
+        assert_eq!(c.info_cols, (0..c.k as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn encode_satisfies_all_checks() {
+        let c = code();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let info = random_info(&mut rng, c.k);
+            let cw = c.encode(&info);
+            assert!(c.syndrome_ok(&cw));
+            assert_eq!(c.extract_info(&cw), info);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let c = code();
+        let mut rng = Rng::new(2);
+        let a = random_info(&mut rng, c.k);
+        let b = random_info(&mut rng, c.k);
+        let mut ab = a.clone();
+        ab.xor_with(&b);
+        let mut cw = c.encode(&a);
+        cw.xor_with(&c.encode(&b));
+        assert_eq!(cw, c.encode(&ab));
+    }
+
+    #[test]
+    fn single_bit_error_breaks_syndrome() {
+        let c = code();
+        let mut rng = Rng::new(3);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        for pos in [0usize, 100, 323, 324, 647] {
+            let mut bad = cw.clone();
+            bad.flip(pos);
+            assert!(!c.syndrome_ok(&bad), "flip {pos}");
+        }
+    }
+
+    #[test]
+    fn min_sum_clean_passthrough() {
+        let c = code();
+        let mut rng = Rng::new(4);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        let llr: Vec<f32> = (0..c.n).map(|i| if cw.get(i) { -8.0 } else { 8.0 }).collect();
+        let (dec, ok) = c.decode_min_sum(&llr, 30);
+        assert!(ok);
+        assert_eq!(dec, cw);
+    }
+
+    #[test]
+    fn min_sum_corrects_many_hard_errors() {
+        // Far beyond the bounded-distance t = 7: min-sum at strong LLRs
+        // corrects dozens of scattered errors.
+        let c = code();
+        let mut rng = Rng::new(5);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        let mut llr: Vec<f32> = (0..c.n).map(|i| if cw.get(i) { -4.0 } else { 4.0 }).collect();
+        for pos in rng.choose_k(c.n, 40) {
+            llr[pos] = -llr[pos];
+        }
+        let (dec, ok) = c.decode_min_sum(&llr, 50);
+        assert!(ok, "did not converge");
+        assert_eq!(dec, cw);
+    }
+
+    #[test]
+    fn min_sum_gaussian_channel_waterfall() {
+        // BPSK over AWGN at Eb/N0 = 3 dB (rate 1/2 => Es/N0 = 0 dB):
+        // the 802.11n code decodes essentially always.
+        let c = code();
+        let mut rng = Rng::new(6);
+        let esn0 = crate::math::db_to_lin(0.0);
+        let sigma = (1.0 / (2.0 * esn0)).sqrt();
+        let mut fails = 0;
+        for _ in 0..30 {
+            let cw = c.encode(&random_info(&mut rng, c.k));
+            let llr: Vec<f32> = (0..c.n)
+                .map(|i| {
+                    let s = if cw.get(i) { -1.0 } else { 1.0 };
+                    let y = s + sigma * rng.normal();
+                    (2.0 * y / (sigma * sigma)) as f32
+                })
+                .collect();
+            let (dec, ok) = c.decode_min_sum(&llr, 50);
+            if !ok || dec != cw {
+                fails += 1;
+            }
+        }
+        assert!(fails <= 1, "{fails}/30 failures at Eb/N0 = 3 dB");
+    }
+
+    #[test]
+    fn min_sum_fails_in_deep_noise() {
+        // At very low SNR the decoder must report non-convergence.
+        let c = code();
+        let mut rng = Rng::new(7);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        let llr: Vec<f32> = (0..c.n)
+            .map(|i| {
+                let s = if cw.get(i) { -1.0 } else { 1.0 };
+                (0.3 * (s + 3.0 * rng.normal())) as f32
+            })
+            .collect();
+        let (_, ok) = c.decode_min_sum(&llr, 20);
+        assert!(!ok);
+    }
+
+    #[test]
+    fn bounded_distance_paper_t() {
+        let c = code();
+        let mut rng = Rng::new(8);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        let mut rx = cw.clone();
+        for pos in rng.choose_k(c.n, PAPER_T) {
+            rx.flip(pos);
+        }
+        assert_eq!(c.decode_bounded_distance(&cw, &rx, PAPER_T), Some(cw.clone()));
+        let mut rx8 = cw.clone();
+        for pos in rng.choose_k(c.n, PAPER_T + 1) {
+            rx8.flip(pos);
+        }
+        assert_eq!(c.decode_bounded_distance(&cw, &rx8, PAPER_T), None);
+    }
+
+    #[test]
+    fn qc_structure_degrees() {
+        // Every variable node must touch at least 2 checks; average check
+        // degree ~ 7 for this base matrix.
+        let c = code();
+        let deg = c.var_degrees();
+        assert!(deg.iter().all(|&d| d >= 2));
+        let avg_check: f64 = c.check_vars.iter().map(|v| v.len()).sum::<usize>() as f64 / c.m as f64;
+        assert!((6.0..8.5).contains(&avg_check), "{avg_check}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Forward error correction + reliability substrate behind the ECRT
+//! baseline: CRC-32 framing ([`crc`]), the IEEE 802.11n QC-LDPC code
+//! ([`ldpc`]), and stop-and-wait retransmission ([`arq`]).
+
+pub mod arq;
+pub mod conv_code;
+pub mod crc;
+pub mod ldpc;
+
+pub use arq::{ArqConfig, DecoderKind, FecStats};
+pub use ldpc::{LdpcCode, PAPER_T};

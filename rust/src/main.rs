@@ -1,0 +1,184 @@
+//! `awc-fl` — launcher for the Approximate-Wireless-Communication FL
+//! system. Subcommands map 1:1 to the paper's experiments (DESIGN.md §3).
+//!
+//! ```text
+//! awc-fl run    [--config f] [--set k=v ...]      one FL experiment
+//! awc-fl ber    [--snr-list 0,5,..] [--bits N]    E1  BER vs SNR
+//! awc-fl table1                                   E2  Table I
+//! awc-fl fig3   [--snr 10] [--rounds N] [--out f] E4  Fig. 3
+//! awc-fl fig4   --mode same-snr|same-ber          E5/E6  Fig. 4
+//! awc-fl ecrt-overhead [--snr-list ...]           E8  airtime ratios
+//! awc-fl gradbound [--rounds N]                   E7  gradient bound
+//! awc-fl info                                     artifact + system info
+//! ```
+
+use awc_fl::cli::Args;
+use awc_fl::config::ExperimentConfig;
+use awc_fl::coordinator::experiments::{self, Fig4Mode};
+use awc_fl::coordinator::FlServer;
+use awc_fl::metrics::{self, Trace};
+use awc_fl::runtime::Engine;
+use awc_fl::Result;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut overrides = args.overrides.clone();
+    // Common convenience flags mapped onto config keys.
+    for (flag, key) in [
+        ("snr", "snr_db"),
+        ("rounds", "rounds"),
+        ("clients", "clients"),
+        ("scheme", "scheme"),
+        ("modulation", "modulation"),
+        ("seed", "seed"),
+        ("lr", "lr"),
+        ("eval-every", "eval_every"),
+        ("participants", "participants_per_round"),
+        ("artifacts", "artifacts_dir"),
+        ("data-dir", "data_dir"),
+    ] {
+        if let Some(v) = args.opt(flag) {
+            overrides.push((key.to_string(), v.to_string()));
+        }
+    }
+    ExperimentConfig::load(args.opt("config"), &overrides)
+}
+
+fn write_traces(args: &Args, default_out: &str, traces: &[Trace]) -> Result<()> {
+    let out = args.opt("out").unwrap_or(default_out);
+    let refs: Vec<&Trace> = traces.iter().collect();
+    metrics::write_csv(out, &refs)?;
+    println!("wrote {out}");
+    for t in traces {
+        let acc = t.best_accuracy().map_or("n/a".into(), |a| format!("{a:.4}"));
+        let t80 = t
+            .time_to_accuracy(0.8)
+            .map_or("n/a".into(), |s| format!("{s:.2}s"));
+        println!("  {:<18} best_acc={acc:<8} time_to_80%={t80}", t.label);
+    }
+    if traces.len() > 1 && !args.has("no-plot") {
+        println!("\n{}", metrics::plot::plot_accuracy_vs_time(&refs, 72, 16));
+    }
+    Ok(())
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let progress = !args.has("quiet");
+    match args.command.as_deref() {
+        Some("run") => {
+            let cfg = load_cfg(args)?;
+            let engine = Engine::load(&cfg.artifacts_dir)?;
+            let mut server = FlServer::from_config(cfg.clone(), &engine)?;
+            let trace = server.run(progress)?;
+            write_traces(args, "results/run.csv", &[trace])?;
+        }
+        Some("ber") => {
+            let snrs = args
+                .opt_f64_list("snr-list")?
+                .unwrap_or_else(|| (0..=30).step_by(2).map(|s| s as f64).collect());
+            let bits = args.opt_parse::<usize>("bits")?.unwrap_or(1_000_000);
+            let seed = args.opt_parse::<u64>("seed")?.unwrap_or(1);
+            let rows = experiments::ber_sweep(&snrs, bits, seed);
+            let out = args.opt("out").unwrap_or("results/ber_snr.csv");
+            if let Some(parent) = std::path::Path::new(out).parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let mut csv = String::from("modulation,snr_db,ber_sim,ber_theory\n");
+            for (m, snr, sim, theo) in &rows {
+                csv.push_str(&format!("{},{snr},{sim:.6e},{theo:.6e}\n", m.name()));
+                println!("{:<8} {snr:>5} dB  sim {sim:.4e}  theory {theo:.4e}", m.name());
+            }
+            std::fs::write(out, csv)?;
+            println!("wrote {out}");
+        }
+        Some("table1") => {
+            println!("{}", experiments::table1());
+        }
+        Some("fig3") => {
+            let cfg = load_cfg(args)?;
+            let snr = args.opt_parse::<f64>("snr")?.unwrap_or(cfg.snr_db);
+            let engine = Engine::load(&cfg.artifacts_dir)?;
+            let traces = experiments::fig3(&cfg, &engine, snr, progress)?;
+            write_traces(args, "results/fig3.csv", &traces)?;
+        }
+        Some("fig4") => {
+            let cfg = load_cfg(args)?;
+            let mode = match args.opt("mode") {
+                Some("same-snr") | None => Fig4Mode::SameSnr,
+                Some("same-ber") => Fig4Mode::SameBer,
+                Some(m) => {
+                    return Err(awc_fl::Error::Config(format!(
+                        "--mode must be same-snr or same-ber, got {m}"
+                    )))
+                }
+            };
+            let engine = Engine::load(&cfg.artifacts_dir)?;
+            let traces = experiments::fig4(&cfg, &engine, mode, progress)?;
+            let default = match mode {
+                Fig4Mode::SameSnr => "results/fig4a.csv",
+                Fig4Mode::SameBer => "results/fig4b.csv",
+            };
+            write_traces(args, default, &traces)?;
+        }
+        Some("ecrt-overhead") => {
+            let snrs = args
+                .opt_f64_list("snr-list")?
+                .unwrap_or_else(|| vec![6.0, 8.0, 10.0, 14.0, 20.0, 26.0]);
+            let floats = args.opt_parse::<usize>("points")?.unwrap_or(21840);
+            let rows = experiments::ecrt_overhead(&snrs, floats, 1);
+            println!("{:<8} {:>14} {:>18}", "SNR(dB)", "avg attempts", "time vs uncoded");
+            for (snr, att, ratio) in rows {
+                println!("{snr:<8} {att:>14.3} {ratio:>17.2}x");
+            }
+        }
+        Some("gradbound") => {
+            let cfg = load_cfg(args)?;
+            let rounds = args.opt_parse::<usize>("rounds")?.unwrap_or(10);
+            let engine = Engine::load(&cfg.artifacts_dir)?;
+            let (max_abs, bounded) = experiments::gradient_bound(&cfg, &engine, rounds)?;
+            println!("max |g| over {rounds} rounds: {max_abs:.4}");
+            println!("all gradients within (-1, 1): {}", bounded == 1.0);
+        }
+        Some("info") => {
+            let cfg = load_cfg(args)?;
+            match Engine::load(&cfg.artifacts_dir) {
+                Ok(engine) => {
+                    let m = &engine.manifest;
+                    println!("artifacts: {}", cfg.artifacts_dir);
+                    println!(
+                        "model: {} params in {} tensors, train_batch={}, eval_batch={}",
+                        m.num_params(),
+                        m.params.len(),
+                        m.train_batch,
+                        m.eval_batch
+                    );
+                }
+                Err(e) => println!("artifacts not ready: {e}"),
+            }
+            println!("config defaults: {:#?}", ExperimentConfig::default());
+        }
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command `{cmd}`\n");
+            }
+            eprintln!(
+                "usage: awc-fl <run|ber|table1|fig3|fig4|ecrt-overhead|gradbound|info> [options]"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

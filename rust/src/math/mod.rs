@@ -1,0 +1,200 @@
+//! Small math substrate: complex arithmetic for the baseband simulation
+//! and special functions for theoretical BER curves.
+
+/// Complex number in f64 — the baseband symbol type.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Complex::new(self.re, -self.im)
+    }
+
+    /// |z|^2 — avoids the sqrt of `abs`.
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    /// self / other (complex division).
+    #[inline]
+    pub fn div(self, other: Complex) -> Self {
+        let d = other.norm_sq();
+        let n = self * other.conj();
+        Complex::new(n.re / d, n.im / d)
+    }
+}
+
+impl std::ops::Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl std::ops::Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl std::ops::Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+/// Complementary error function, Abramowitz & Stegun 7.1.26-style rational
+/// approximation refined with one continued-fraction term; |err| < 1.2e-7,
+/// ample for plotting theoretical BER references.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Gaussian Q-function Q(x) = P(N(0,1) > x).
+#[inline]
+pub fn q_func(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// dB -> linear power ratio.
+#[inline]
+pub fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// linear power ratio -> dB.
+#[inline]
+pub fn lin_to_db(lin: f64) -> f64 {
+    10.0 * lin.log10()
+}
+
+/// Theoretical average BER of gray-coded square M-QAM over *Rayleigh*
+/// fading with per-symbol SNR `snr_lin` (approximation: dominant-term
+/// union bound averaged over the fading distribution; exact for QPSK).
+///
+/// For QPSK this is the classic 0.5 (1 - sqrt(g/(1+g))) with g = SNR/2
+/// per bit. For 16/64/256-QAM it uses the nearest-neighbour approximation
+/// with average symbol energy normalized to 1.
+pub fn rayleigh_qam_ber(bits_per_symbol: u32, snr_lin: f64) -> f64 {
+    let m = 1u32 << bits_per_symbol;
+    let sqrt_m = (m as f64).sqrt();
+    let k = bits_per_symbol as f64;
+    // Per-axis PAM levels L = sqrt(M); d = minimum distance factor.
+    // Average energy of square M-QAM with levels +-1, +-3, ... is
+    // 2(M-1)/3 per symbol (both axes); normalized constellations scale by
+    // 1/sqrt(Es).
+    let a = 3.0 / (2.0 * (m as f64 - 1.0)); // = d^2/(4 Es) * 2... see below
+    // P(symbol-axis error) for PAM over AWGN: 2(1-1/L) Q(sqrt(2 a g))
+    // averaged over Rayleigh: Q(sqrt(2 a g)) -> 0.5 (1 - sqrt(a g/(1+a g))).
+    let g = snr_lin;
+    let avg_q = 0.5 * (1.0 - (a * g / (1.0 + a * g)).sqrt());
+    2.0 * (1.0 - 1.0 / sqrt_m) * avg_q / (k / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_arith() {
+        let a = Complex::new(1.0, 2.0);
+        let b = Complex::new(3.0, -1.0);
+        assert_eq!(a + b, Complex::new(4.0, 1.0));
+        assert_eq!(a - b, Complex::new(-2.0, 3.0));
+        assert_eq!(a * b, Complex::new(5.0, 5.0));
+        assert_eq!(a.conj(), Complex::new(1.0, -2.0));
+        assert!((a.norm_sq() - 5.0).abs() < 1e-12);
+        let q = a.div(b);
+        let back = q * b;
+        assert!((back.re - a.re).abs() < 1e-12 && (back.im - a.im).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        // Reference values from standard tables.
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157_299_2).abs() < 1e-6);
+        assert!((erfc(2.0) - 0.004_677_73).abs() < 1e-7);
+        assert!((erfc(-1.0) - 1.842_700_8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q_func_halves_at_zero() {
+        assert!((q_func(0.0) - 0.5).abs() < 1e-7);
+        // |erfc err| < 1.2e-7 absolute => Q(5) accurate to ~6e-8.
+        assert!((q_func(5.0) - 2.87e-7).abs() < 1e-7);
+        assert!((q_func(-5.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn db_roundtrip() {
+        for db in [-10.0, 0.0, 10.0, 23.5] {
+            assert!((lin_to_db(db_to_lin(db)) - db).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rayleigh_qpsk_ber_matches_paper_anchors() {
+        // Paper SS V: QPSK ~ 4e-2 at 10 dB, ~ 5e-3 at 20 dB.
+        let b10 = rayleigh_qam_ber(2, db_to_lin(10.0));
+        let b20 = rayleigh_qam_ber(2, db_to_lin(20.0));
+        assert!((b10 - 0.0436).abs() < 0.002, "{b10}");
+        assert!((b20 - 0.0049).abs() < 0.0005, "{b20}");
+    }
+
+    #[test]
+    fn higher_order_qam_worse_at_same_snr() {
+        let g = db_to_lin(10.0);
+        let q = rayleigh_qam_ber(2, g);
+        let q16 = rayleigh_qam_ber(4, g);
+        let q256 = rayleigh_qam_ber(8, g);
+        assert!(q < q16 && q16 < q256);
+    }
+}

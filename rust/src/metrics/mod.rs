@@ -1,0 +1,239 @@
+//! Experiment metrics: per-round records, summary statistics, and CSV /
+//! markdown emitters that regenerate the paper's figures.
+
+pub mod plot;
+
+use std::io::Write;
+use std::path::Path;
+
+/// One FL round's worth of observables — a row of the Fig. 3 CSV.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Cumulative uplink communication time at the end of this round, s.
+    pub comm_time_s: f64,
+    /// Test accuracy (if evaluated this round).
+    pub test_accuracy: Option<f64>,
+    /// Mean training loss reported by the clients.
+    pub train_loss: f64,
+    /// Mean payload BER across client uplinks this round.
+    pub mean_ber: f64,
+    /// Total ECRT retransmissions this round.
+    pub retransmissions: usize,
+    /// Mean fraction of floats still corrupted after protection.
+    pub corrupted_frac: f64,
+}
+
+/// A full experiment trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Trace { label: label.into(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// Final evaluated accuracy.
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.test_accuracy)
+    }
+
+    /// Best evaluated accuracy.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.test_accuracy)
+            .fold(None, |m, a| Some(m.map_or(a, |m: f64| m.max(a))))
+    }
+
+    /// First cumulative communication time at which accuracy >= `target`
+    /// (the Fig. 3 "time to X%" readout).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_accuracy.is_some_and(|a| a >= target))
+            .map(|r| r.comm_time_s)
+    }
+
+    /// CSV rows: label,round,comm_time_s,accuracy,loss,ber,retx,corrupted.
+    pub fn csv_rows(&self) -> String {
+        let mut s = String::new();
+        for r in &self.rounds {
+            let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
+            s.push_str(&format!(
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6}\n",
+                self.label,
+                r.round,
+                r.comm_time_s,
+                acc,
+                r.train_loss,
+                r.mean_ber,
+                r.retransmissions,
+                r.corrupted_frac
+            ));
+        }
+        s
+    }
+}
+
+/// CSV header matching [`Trace::csv_rows`].
+pub const CSV_HEADER: &str =
+    "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,retransmissions,corrupted_frac\n";
+
+/// Write traces to a CSV file (creating parent dirs).
+pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
+    if let Some(parent) = Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(CSV_HEADER.as_bytes())?;
+    for t in traces {
+        f.write_all(t.csv_rows().as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Simple streaming mean/min/max/count accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+/// Render an aligned markdown table (used by the CLI report printers).
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (c, cell) in row.iter().enumerate().take(ncol) {
+            width[c] = width[c].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |cells: &[String], width: &[usize]| -> String {
+        let mut s = String::from("|");
+        for (c, cell) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", cell, w = width[c]));
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(
+        &header.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &width,
+    ));
+    out.push_str(&line(
+        &width.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(),
+        &width,
+    ));
+    for row in rows {
+        out.push_str(&line(row, &width));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> Trace {
+        let mut t = Trace::new("proposed");
+        for round in 0..10 {
+            t.push(RoundRecord {
+                round,
+                comm_time_s: round as f64 * 2.0,
+                test_accuracy: (round % 2 == 0).then(|| 0.1 * round as f64),
+                train_loss: 2.3 - 0.1 * round as f64,
+                mean_ber: 0.04,
+                retransmissions: 0,
+                corrupted_frac: 0.01,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn accuracy_readouts() {
+        let t = trace();
+        assert_eq!(t.final_accuracy(), Some(0.8));
+        assert_eq!(t.best_accuracy(), Some(0.8));
+        assert_eq!(t.time_to_accuracy(0.35), Some(8.0)); // round 4
+        assert_eq!(t.time_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let t = trace();
+        let csv = t.csv_rows();
+        assert_eq!(csv.lines().count(), 10);
+        let first = csv.lines().next().unwrap();
+        assert!(first.starts_with("proposed,0,0.000000,0.0000,"));
+        // Non-eval rounds leave accuracy empty.
+        let second = csv.lines().nth(1).unwrap();
+        assert!(second.contains(",,"), "{second}");
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let t = trace();
+        let path = "/tmp/awc_fl_test_metrics/out.csv";
+        write_csv(path, &[&t]).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.starts_with(CSV_HEADER));
+        assert_eq!(body.lines().count(), 11);
+        std::fs::remove_dir_all("/tmp/awc_fl_test_metrics").ok();
+    }
+
+    #[test]
+    fn stats_accumulator() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 3);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+    }
+
+    #[test]
+    fn markdown_alignment() {
+        let md = markdown_table(
+            &["a", "long_header"],
+            &[vec!["x".into(), "y".into()], vec!["wwww".into(), "z".into()]],
+        );
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+}

@@ -1,0 +1,121 @@
+//! Terminal line plots for experiment traces — `awc-fl` renders Fig. 3 /
+//! Fig. 4 style accuracy-vs-time curves directly in the terminal so runs
+//! are interpretable without leaving the CLI.
+
+use super::Trace;
+
+/// Render multiple traces as an ASCII plot of accuracy vs cumulative
+/// communication time. `width` x `height` in character cells.
+pub fn plot_accuracy_vs_time(traces: &[&Trace], width: usize, height: usize) -> String {
+    let pts: Vec<(usize, Vec<(f64, f64)>)> = traces
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| {
+            (
+                ti,
+                t.rounds
+                    .iter()
+                    .filter_map(|r| r.test_accuracy.map(|a| (r.comm_time_s, a)))
+                    .collect(),
+            )
+        })
+        .collect();
+    let xmax = pts
+        .iter()
+        .flat_map(|(_, v)| v.iter().map(|p| p.0))
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let marks = ['P', 'E', 'N', '*', '+', 'x', 'o'];
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (ti, series) in &pts {
+        let mark = marks[*ti % marks.len()];
+        // Connect consecutive points with linear interpolation so curves
+        // read as lines, not scatter.
+        for w in series.windows(2) {
+            let [(x0, y0), (x1, y1)] = [w[0], w[1]];
+            let steps = width * 2;
+            for s in 0..=steps {
+                let f = s as f64 / steps as f64;
+                let x = x0 + f * (x1 - x0);
+                let y = y0 + f * (y1 - y0);
+                let col = ((x / xmax) * (width - 1) as f64).round() as usize;
+                let row = ((1.0 - y) * (height - 1) as f64).round() as usize;
+                if row < height && col < width {
+                    grid[row][col] = mark;
+                }
+            }
+        }
+        if let Some(&(x, y)) = series.first() {
+            let col = ((x / xmax) * (width - 1) as f64).round() as usize;
+            let row = ((1.0 - y) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str("accuracy\n");
+    for (r, row) in grid.iter().enumerate() {
+        let yval = 1.0 - r as f64 / (height - 1) as f64;
+        let label = if r % 2 == 0 {
+            format!("{yval:>5.2} |")
+        } else {
+            "      |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "      +{}\n       0{:>w$.1}s  (uplink communication time)\n",
+        "-".repeat(width),
+        xmax,
+        w = width - 1
+    ));
+    for (ti, t) in traces.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[ti % marks.len()], t.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RoundRecord;
+
+    fn trace(label: &str, slope: f64) -> Trace {
+        let mut t = Trace::new(label);
+        for round in 0..20 {
+            t.push(RoundRecord {
+                round,
+                comm_time_s: round as f64,
+                test_accuracy: (round % 5 == 0)
+                    .then(|| (slope * round as f64).min(0.95)),
+                ..Default::default()
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn renders_all_series_and_axes() {
+        let a = trace("proposed", 0.05);
+        let b = trace("ecrt", 0.02);
+        let s = plot_accuracy_vs_time(&[&a, &b], 60, 12);
+        assert!(s.contains("P"));
+        assert!(s.contains("E"));
+        assert!(s.contains("proposed"));
+        assert!(s.contains("ecrt"));
+        assert!(s.contains("accuracy"));
+        // Every grid line has the same width.
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.len() > 14);
+    }
+
+    #[test]
+    fn empty_traces_do_not_panic() {
+        let t = Trace::new("empty");
+        let s = plot_accuracy_vs_time(&[&t], 40, 8);
+        assert!(s.contains("empty"));
+    }
+}

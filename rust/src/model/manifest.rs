@@ -1,0 +1,140 @@
+//! Parser for `artifacts/manifest.txt` — the schema contract emitted by
+//! `python/compile/aot.py` and consumed by the runtime + coordinator.
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Batch the `train_step` artifact was lowered with.
+    pub train_batch: usize,
+    /// Batch the `predict` artifact was lowered with.
+    pub eval_batch: usize,
+    /// Image height/width.
+    pub image_hw: usize,
+    pub num_classes: usize,
+    /// Parameter schema in canonical order: (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// (logical name, file name) artifact entries.
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut train_batch = None;
+        let mut eval_batch = None;
+        let mut image_hw = None;
+        let mut num_classes = None;
+        let mut params = Vec::new();
+        let mut artifacts = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let bad = || Error::Artifact(format!("manifest line {}: `{raw}`", ln + 1));
+            match toks.as_slice() {
+                ["train_batch", v] => train_batch = Some(v.parse().map_err(|_| bad())?),
+                ["eval_batch", v] => eval_batch = Some(v.parse().map_err(|_| bad())?),
+                ["image_hw", v] => image_hw = Some(v.parse().map_err(|_| bad())?),
+                ["num_classes", v] => num_classes = Some(v.parse().map_err(|_| bad())?),
+                ["param", name, dims] => {
+                    let shape: Vec<usize> = dims
+                        .split(',')
+                        .map(|d| d.parse().map_err(|_| bad()))
+                        .collect::<Result<_>>()?;
+                    params.push((name.to_string(), shape));
+                }
+                ["artifact", name, file] => {
+                    artifacts.push((name.to_string(), file.to_string()))
+                }
+                _ => return Err(bad()),
+            }
+        }
+        let missing = |f: &str| Error::Artifact(format!("manifest missing `{f}`"));
+        let man = Manifest {
+            train_batch: train_batch.ok_or_else(|| missing("train_batch"))?,
+            eval_batch: eval_batch.ok_or_else(|| missing("eval_batch"))?,
+            image_hw: image_hw.ok_or_else(|| missing("image_hw"))?,
+            num_classes: num_classes.ok_or_else(|| missing("num_classes"))?,
+            params,
+            artifacts,
+        };
+        if man.params.is_empty() {
+            return Err(missing("param entries"));
+        }
+        Ok(man)
+    }
+
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = Path::new(dir).join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    /// Absolute path of a named artifact.
+    pub fn artifact_path(&self, dir: &str, name: &str) -> Result<String> {
+        self.artifacts
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, f)| Path::new(dir).join(f).to_string_lossy().into_owned())
+            .ok_or_else(|| Error::Artifact(format!("artifact `{name}` not in manifest")))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# comment\ntrain_batch 64\neval_batch 256\nimage_hw 28\n\
+        num_classes 10\nparam conv1_w 10,1,5,5\nparam conv1_b 10\n\
+        artifact train_step train_step.hlo.txt\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 64);
+        assert_eq!(m.eval_batch, 256);
+        assert_eq!(m.params[0], ("conv1_w".to_string(), vec![10, 1, 5, 5]));
+        assert_eq!(m.num_params(), 260);
+        assert_eq!(
+            m.artifact_path("artifacts", "train_step").unwrap(),
+            "artifacts/train_step.hlo.txt"
+        );
+        assert!(m.artifact_path("artifacts", "nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("train_batch x\n").is_err());
+        assert!(Manifest::parse("param p 1,2\n").is_err()); // missing batches
+        assert!(Manifest::parse("wat\n").is_err());
+        assert!(Manifest::parse(
+            "train_batch 1\neval_batch 1\nimage_hw 28\nnum_classes 10\n"
+        )
+        .is_err()); // no params
+    }
+
+    #[test]
+    fn load_real_artifacts_if_present() {
+        // Integration against the actual generated manifest when built.
+        if std::path::Path::new("artifacts/manifest.txt").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert_eq!(m.num_params(), 21840);
+            assert_eq!(m.params.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Model-side plumbing at L3: the parameter store mirroring the L2 CNN,
+//! the artifact manifest parser, initialization, flatten/unflatten for
+//! the wireless path, and the SGD update (paper eq. 6).
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// A named dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The model's full parameter (or gradient) set, in the canonical order
+/// shared with `python/compile/model.py` via the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Zero-initialized set with the manifest's schema.
+    pub fn zeros(man: &Manifest) -> ParamSet {
+        ParamSet {
+            tensors: man
+                .params
+                .iter()
+                .map(|(n, s)| Tensor::zeros(n, s))
+                .collect(),
+        }
+    }
+
+    /// Kaiming-uniform init matching `model.init_params` in L2: weights
+    /// U(-sqrt(6/fan_in), +sqrt(6/fan_in)), biases zero.
+    pub fn init(man: &Manifest, rng: &mut Rng) -> ParamSet {
+        let mut set = ParamSet::zeros(man);
+        for t in &mut set.tensors {
+            if t.name.ends_with("_b") {
+                continue;
+            }
+            let fan_in: usize = if t.shape.len() == 4 {
+                t.shape[1..].iter().product()
+            } else {
+                t.shape[0]
+            };
+            let bound = (6.0 / fan_in as f64).sqrt();
+            for v in &mut t.data {
+                *v = rng.uniform(-bound, bound) as f32;
+            }
+        }
+        set
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    /// Flatten to one contiguous vector (the uplink payload).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for t in &self.tensors {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::flatten`] against this set's schema.
+    pub fn unflatten_like(&self, flat: &[f32]) -> Result<ParamSet> {
+        if flat.len() != self.num_params() {
+            return Err(Error::Shape(format!(
+                "flat length {} != param count {}",
+                flat.len(),
+                self.num_params()
+            )));
+        }
+        let mut out = self.clone();
+        let mut off = 0;
+        for t in &mut out.tensors {
+            let n = t.numel();
+            t.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(out)
+    }
+
+    /// In-place SGD: w <- w - eta * g (paper eq. 6).
+    pub fn sgd_step(&mut self, grads: &ParamSet, eta: f32) {
+        debug_assert_eq!(self.tensors.len(), grads.tensors.len());
+        for (w, g) in self.tensors.iter_mut().zip(&grads.tensors) {
+            debug_assert_eq!(w.data.len(), g.data.len());
+            for (wv, gv) in w.data.iter_mut().zip(&g.data) {
+                *wv -= eta * gv;
+            }
+        }
+    }
+
+    /// Weighted accumulate: self += weight * other (aggregation eq. 5).
+    pub fn axpy(&mut self, weight: f32, other: &ParamSet) {
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (av, bv) in a.data.iter_mut().zip(&b.data) {
+                *av += weight * bv;
+            }
+        }
+    }
+
+    /// Scale all entries.
+    pub fn scale(&mut self, s: f32) {
+        for t in &mut self.tensors {
+            for v in &mut t.data {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Zero all entries (reuse as an aggregation accumulator).
+    pub fn zero(&mut self) {
+        for t in &mut self.tensors {
+            t.data.fill(0.0);
+        }
+    }
+
+    /// Global L2 norm.
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Largest |entry|.
+    pub fn max_abs(&self) -> f32 {
+        self.tensors
+            .iter()
+            .flat_map(|t| t.data.iter())
+            .fold(0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            "train_batch 64\neval_batch 256\nimage_hw 28\nnum_classes 10\n\
+             param conv1_w 10,1,5,5\nparam conv1_b 10\nparam conv2_w 20,10,5,5\n\
+             param conv2_b 20\nparam fc1_w 320,50\nparam fc1_b 50\n\
+             param fc2_w 50,10\nparam fc2_b 10\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn paper_model_size() {
+        let p = ParamSet::zeros(&manifest());
+        assert_eq!(p.num_params(), 21840);
+        assert_eq!(p.tensors.len(), 8);
+    }
+
+    #[test]
+    fn init_bounds_and_determinism() {
+        let man = manifest();
+        let a = ParamSet::init(&man, &mut Rng::new(1));
+        let b = ParamSet::init(&man, &mut Rng::new(1));
+        assert_eq!(a, b);
+        // conv1_w fan_in = 25 -> bound ~0.4899.
+        let c1 = &a.tensors[0];
+        let bound = (6.0f32 / 25.0).sqrt();
+        assert!(c1.data.iter().all(|v| v.abs() <= bound));
+        assert!(c1.data.iter().any(|v| v.abs() > bound * 0.5));
+        // biases zero
+        assert!(a.tensors[1].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let man = manifest();
+        let p = ParamSet::init(&man, &mut Rng::new(2));
+        let flat = p.flatten();
+        assert_eq!(flat.len(), 21840);
+        let q = p.unflatten_like(&flat).unwrap();
+        assert_eq!(p, q);
+        assert!(p.unflatten_like(&flat[..100]).is_err());
+    }
+
+    #[test]
+    fn sgd_and_axpy() {
+        let man = manifest();
+        let mut w = ParamSet::init(&man, &mut Rng::new(3));
+        let before = w.flatten();
+        let mut g = ParamSet::zeros(&man);
+        for t in &mut g.tensors {
+            t.data.fill(1.0);
+        }
+        w.sgd_step(&g, 0.1);
+        for (a, b) in w.flatten().iter().zip(&before) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+        let mut acc = ParamSet::zeros(&man);
+        acc.axpy(0.5, &g);
+        acc.axpy(0.5, &g);
+        assert!(acc.flatten().iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        acc.scale(2.0);
+        assert!((acc.max_abs() - 2.0).abs() < 1e-6);
+        assert!((acc.l2_norm() - (21840f64).sqrt() * 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,199 @@
+//! Constellation analysis: Table I (MSB/LSB error counts of gray-coded
+//! 16-QAM) and per-bit-position error probability — the paper's evidence
+//! that gray-coded high-order QAM has *built-in protection for MSBs*.
+
+use super::{Constellation, Modulation};
+use crate::math::Complex;
+
+/// One row of the paper's Table I.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NeighbourRow {
+    /// Symbol index in the paper's row-major Fig. 2 numbering (s0..s15).
+    pub symbol: usize,
+    /// Row-major indices of the potential error symbols (grid
+    /// 8-neighbourhood — the symbols a noise-perturbed decode most likely
+    /// lands on).
+    pub neighbours: Vec<usize>,
+    /// How many of those neighbours differ from `symbol` in the MSB.
+    pub msb_errors: usize,
+    /// How many differ in the LSB.
+    pub lsb_errors: usize,
+}
+
+/// Paper Fig. 2 numbering: s_i laid out row-major on the 4x4 grid,
+/// top-left first, columns gray-coded by bits (b0 b1) = 00,01,11,10 and
+/// rows by (b2 b3) = 00,01,11,10. Returns the symbol-bit pattern at grid
+/// cell (row, col).
+pub fn fig2_bits(row: usize, col: usize, modulation: Modulation) -> u32 {
+    let c = Constellation::new(modulation);
+    let half = modulation.bits_per_symbol() / 2;
+    // Column = I level index left->right; row = Q level *top->bottom*,
+    // i.e. the top row is the highest Q amplitude... In Fig. 2 the rows
+    // top->bottom carry gray 00,01,11,10 like the columns left->right,
+    // so rows map to Q level indices top = L-1 ... bottom = 0? The grid
+    // analysis only needs *adjacency + bit labels*, which the gray code
+    // makes symmetric under axis flips; we use row index = Q level
+    // directly (flip-invariant).
+    let _ = &c;
+    let i_gray = super::binary_to_gray(col as u32);
+    let q_gray = super::binary_to_gray(row as u32);
+    (i_gray << half) | q_gray
+}
+
+/// Grid 8-neighbourhood analysis of a gray-coded square QAM — generalizes
+/// the paper's Table I to any square modulation.
+pub fn neighbour_table(modulation: Modulation) -> Vec<NeighbourRow> {
+    let l = modulation.levels_per_axis();
+    let k = modulation.bits_per_symbol();
+    let mut rows = Vec::with_capacity(l * l);
+    for r in 0..l {
+        for c in 0..l {
+            let sym = fig2_bits(r, c, modulation);
+            let idx = r * l + c;
+            let mut neighbours = Vec::new();
+            let mut msb = 0;
+            let mut lsb = 0;
+            for dr in -1i64..=1 {
+                for dc in -1i64..=1 {
+                    if dr == 0 && dc == 0 {
+                        continue;
+                    }
+                    let (nr, nc) = (r as i64 + dr, c as i64 + dc);
+                    if nr < 0 || nc < 0 || nr >= l as i64 || nc >= l as i64 {
+                        continue;
+                    }
+                    let nsym = fig2_bits(nr as usize, nc as usize, modulation);
+                    neighbours.push(nr as usize * l + nc as usize);
+                    if (sym ^ nsym) >> (k - 1) & 1 == 1 {
+                        msb += 1;
+                    }
+                    if (sym ^ nsym) & 1 == 1 {
+                        lsb += 1;
+                    }
+                }
+            }
+            neighbours.sort_unstable();
+            rows.push(NeighbourRow { symbol: idx, neighbours, msb_errors: msb, lsb_errors: lsb });
+        }
+    }
+    rows
+}
+
+/// Monte-Carlo per-bit-position BER at a given per-symbol SNR over
+/// Rayleigh fading — quantifies the MSB protection that Fig. 4(b)
+/// exploits. Returns `k` error rates, index 0 = symbol MSB.
+pub fn per_position_ber(
+    modulation: Modulation,
+    snr_db: f64,
+    nsymbols: usize,
+    rng: &mut crate::rng::Rng,
+) -> Vec<f64> {
+    let c = Constellation::new(modulation);
+    let k = modulation.bits_per_symbol();
+    let snr = crate::math::db_to_lin(snr_db);
+    let sigma2 = 1.0 / snr; // Es = 1
+    let mut errs = vec![0u64; k];
+    for _ in 0..nsymbols {
+        let sym = (rng.next_u64() & ((1 << k) - 1)) as u32;
+        let s = c.map_symbol(sym);
+        let h = rng.cn(1.0);
+        let n = rng.cn(sigma2);
+        let r = h * s + n;
+        let y = r.div(h); // receiver knows the gain (eq. 8)
+        let dec = c.slice_symbol(y);
+        let diff = sym ^ dec;
+        for (j, e) in errs.iter_mut().enumerate() {
+            if (diff >> (k - 1 - j)) & 1 == 1 {
+                *e += 1;
+            }
+        }
+    }
+    errs.iter().map(|&e| e as f64 / nsymbols as f64).collect()
+}
+
+/// Average BER over all positions (helper for the E1 sweep).
+pub fn average_ber(per_pos: &[f64]) -> f64 {
+    per_pos.iter().sum::<f64>() / per_pos.len() as f64
+}
+
+/// Minimum-distance nearest neighbours of each constellation point — used
+/// to sanity-check that the grid 8-neighbourhood is the right error model
+/// (at moderate SNR virtually all symbol errors land there).
+pub fn nearest_point_distance(modulation: Modulation) -> f64 {
+    let c = Constellation::new(modulation);
+    let pts: Vec<Complex> = c.points();
+    let mut dmin = f64::INFINITY;
+    for i in 0..pts.len() {
+        for j in 0..pts.len() {
+            if i != j {
+                dmin = dmin.min((pts[i] - pts[j]).norm_sq().sqrt());
+            }
+        }
+    }
+    dmin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// The paper's Table I, verbatim.
+    #[test]
+    fn table1_matches_paper() {
+        let t = neighbour_table(Modulation::Qam16);
+        // s0: neighbours {s1, s4, s5}, MSB 0, LSB 2.
+        assert_eq!(t[0].neighbours, vec![1, 4, 5]);
+        assert_eq!((t[0].msb_errors, t[0].lsb_errors), (0, 2));
+        // s1: {s0, s2, s4, s5, s6}, MSB 2, LSB 3.
+        assert_eq!(t[1].neighbours, vec![0, 2, 4, 5, 6]);
+        assert_eq!((t[1].msb_errors, t[1].lsb_errors), (2, 3));
+        // s4: {s0, s1, s5, s8, s9}, MSB 0, LSB 2.
+        assert_eq!(t[4].neighbours, vec![0, 1, 5, 8, 9]);
+        assert_eq!((t[4].msb_errors, t[4].lsb_errors), (0, 2));
+        // s5: {s0, s1, s2, s4, s6, s8, s9, s10}, MSB 3, LSB 3.
+        assert_eq!(t[5].neighbours, vec![0, 1, 2, 4, 6, 8, 9, 10]);
+        assert_eq!((t[5].msb_errors, t[5].lsb_errors), (3, 3));
+    }
+
+    #[test]
+    fn msb_total_protection_dominates_lsb() {
+        // Summed over all 16 symbols, MSB error opportunities must be
+        // strictly fewer than LSB ones — the built-in protection claim.
+        for m in [Modulation::Qam16, Modulation::Qam64, Modulation::Qam256] {
+            let t = neighbour_table(m);
+            let msb: usize = t.iter().map(|r| r.msb_errors).sum();
+            let lsb: usize = t.iter().map(|r| r.lsb_errors).sum();
+            assert!(msb < lsb, "{m:?}: msb {msb} lsb {lsb}");
+        }
+    }
+
+    #[test]
+    fn per_position_ber_monotone_msb_best() {
+        let mut rng = Rng::new(42);
+        let ber = per_position_ber(Modulation::Qam16, 16.0, 200_000, &mut rng);
+        assert_eq!(ber.len(), 4);
+        // I-axis MSB (pos 0) must beat the I-axis inner bit (pos 1);
+        // same for the Q axis (pos 2 vs 3). Axes are symmetric.
+        assert!(ber[0] < ber[1] * 0.8, "{ber:?}");
+        assert!(ber[2] < ber[3] * 0.8, "{ber:?}");
+        assert!((ber[0] - ber[2]).abs() < 0.01, "{ber:?}");
+    }
+
+    #[test]
+    fn qpsk_positions_equal() {
+        // Paper SSIV-A: "The error probability for the first and second
+        // bits in QPSK is the same."
+        let mut rng = Rng::new(43);
+        let ber = per_position_ber(Modulation::Qpsk, 10.0, 200_000, &mut rng);
+        assert!((ber[0] - ber[1]).abs() < 0.005, "{ber:?}");
+    }
+
+    #[test]
+    fn min_distance_shrinks_with_order() {
+        let d4 = nearest_point_distance(Modulation::Qpsk);
+        let d16 = nearest_point_distance(Modulation::Qam16);
+        let d256 = nearest_point_distance(Modulation::Qam256);
+        assert!(d4 > d16 && d16 > d256);
+    }
+}

@@ -1,0 +1,271 @@
+//! Deterministic pseudo-random substrate.
+//!
+//! No `rand` crate in the offline vendor set, so this module provides the
+//! generators the simulation needs: SplitMix64 (seeding / key derivation),
+//! xoshiro256++ (bulk stream), Box–Muller normals, circularly-symmetric
+//! complex Gaussians (for `h ~ CN(0,1)` and AWGN), and utility sampling.
+//!
+//! Determinism contract: every stochastic component of the system draws
+//! from a [`Rng`] derived via [`Rng::substream`] from an experiment-level
+//! seed with a stable purpose key, so every figure regenerates bit-exactly.
+
+use crate::math::Complex;
+
+/// SplitMix64 step — used for seeding and key mixing (Steele et al.).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG (Blackman & Vigna) — fast, 256-bit state, suitable
+/// for the Monte-Carlo channel volumes this simulator pushes (~1e9 draws).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed deterministically from a single u64 via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Derive an independent stream keyed by `(purpose, a, b)`.
+    ///
+    /// Used as e.g. `rng.substream("channel", client_id, round)` so that
+    /// client/round randomness is stable under reordering and threading.
+    pub fn substream(&self, purpose: &str, a: u64, b: u64) -> Rng {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+        for &byte in purpose.as_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mut mix = self.s[0] ^ h;
+        let mut sm = mix;
+        mix = splitmix64(&mut sm) ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut sm2 = mix;
+        let fin = splitmix64(&mut sm2) ^ b.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        Rng::new(fin)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let res = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        res
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). Rejection-free Lemire reduction.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.gauss_spare = Some(r * s);
+        r * c
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Circularly-symmetric complex Gaussian CN(0, sigma2):
+    /// real and imaginary parts each N(0, sigma2/2).
+    #[inline]
+    pub fn cn(&mut self, sigma2: f64) -> Complex {
+        let s = (sigma2 * 0.5).sqrt();
+        Complex::new(s * self.normal(), s * self.normal())
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from 0..n (k <= n), order randomized.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose_k: k={k} > n={n}");
+        let mut perm = self.permutation(n);
+        perm.truncate(k);
+        perm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn substreams_are_stable_and_independent() {
+        let root = Rng::new(7);
+        let mut s1 = root.substream("channel", 3, 9);
+        let mut s1b = root.substream("channel", 3, 9);
+        let mut s2 = root.substream("channel", 3, 10);
+        let mut s3 = root.substream("data", 3, 9);
+        let v1: Vec<u64> = (0..8).map(|_| s1.next_u64()).collect();
+        let v1b: Vec<u64> = (0..8).map(|_| s1b.next_u64()).collect();
+        let v2: Vec<u64> = (0..8).map(|_| s2.next_u64()).collect();
+        let v3: Vec<u64> = (0..8).map(|_| s3.next_u64()).collect();
+        assert_eq!(v1, v1b);
+        assert_ne!(v1, v2);
+        assert_ne!(v1, v3);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 5e-3);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01);
+        assert!((m2 / nf - 1.0).abs() < 0.02);
+        assert!((m4 / nf - 3.0).abs() < 0.1); // kurtosis of N(0,1)
+    }
+
+    #[test]
+    fn complex_gaussian_power() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let p: f64 = (0..n).map(|_| r.cn(1.0).norm_sq()).sum::<f64>() / n as f64;
+        assert!((p - 1.0).abs() < 0.02, "E|h|^2 = {p}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(6);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(7);
+        let mut p = r.permutation(100);
+        p.sort_unstable();
+        assert_eq!(p, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(8);
+        let ks = r.choose_k(50, 20);
+        let mut s = ks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 20);
+        assert!(ks.iter().all(|&i| i < 50));
+    }
+}

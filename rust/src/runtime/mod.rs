@@ -1,0 +1,167 @@
+//! PJRT runtime — loads the AOT artifacts (HLO text lowered once by
+//! `python/compile/aot.py`) and executes them on the XLA CPU client.
+//! This is the only place L3 touches XLA; Python never runs here.
+//!
+//! Interchange is HLO *text*: `HloModuleProto::from_text_file` re-parses
+//! and re-assigns instruction ids, avoiding the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects (see DESIGN.md §1 and
+//! /opt/xla-example/README.md).
+
+use crate::data::Dataset;
+use crate::model::{Manifest, ParamSet};
+use crate::{Error, Result};
+
+/// A compiled artifact plus its entry metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Run with the given literals, unwrap the single tuple output.
+    fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The L3 runtime: one PJRT CPU client and the compiled model entries.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    train: Executable,
+    predict: Executable,
+    pub manifest: Manifest,
+}
+
+fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    if numel != data.len() {
+        return Err(Error::Shape(format!(
+            "literal data {} != shape {:?}",
+            data.len(),
+            shape
+        )));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+impl Engine {
+    /// Load + compile the artifacts in `dir` (requires `make artifacts`).
+    pub fn load(dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<Executable> {
+            let path = manifest.artifact_path(dir, name)?;
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Executable { exe: client.compile(&comp)?, name: name.to_string() })
+        };
+        let train = compile("train_step")?;
+        let predict = compile("predict")?;
+        Ok(Engine { client, train, predict, manifest })
+    }
+
+    fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
+        if params.tensors.len() != self.manifest.params.len() {
+            return Err(Error::Shape("param set does not match manifest".into()));
+        }
+        params
+            .tensors
+            .iter()
+            .map(|t| literal_f32(&t.data, &t.shape))
+            .collect()
+    }
+
+    /// One FedSGD local step: returns (loss, gradients). `x` is
+    /// `[train_batch, 1, hw, hw]` flattened, `y` one-hot
+    /// `[train_batch, classes]`.
+    pub fn train_step(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<(f32, ParamSet)> {
+        let b = self.manifest.train_batch;
+        let hw = self.manifest.image_hw;
+        let nc = self.manifest.num_classes;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
+        inputs.push(literal_f32(y, &[b, nc])?);
+        let out = self.train.run(&inputs)?;
+        if out.len() != 1 + params.tensors.len() {
+            return Err(Error::Runtime(format!(
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                1 + params.tensors.len()
+            )));
+        }
+        let loss: f32 = out[0].get_first_element()?;
+        let mut grads = ParamSet::zeros(&self.manifest);
+        for (g, lit) in grads.tensors.iter_mut().zip(&out[1..]) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != g.numel() {
+                return Err(Error::Shape(format!(
+                    "grad {} numel {} != {}",
+                    g.name,
+                    v.len(),
+                    g.numel()
+                )));
+            }
+            g.data = v;
+        }
+        Ok((loss, grads))
+    }
+
+    /// Log-probabilities for one eval batch `[eval_batch, 1, hw, hw]`.
+    pub fn predict(&self, params: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.manifest.eval_batch;
+        let hw = self.manifest.image_hw;
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
+        let out = self.predict.run(&inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Test-set accuracy: batches of `eval_batch`, zero-padded tail.
+    pub fn evaluate(&self, params: &ParamSet, test: &Dataset) -> Result<f64> {
+        let b = self.manifest.eval_batch;
+        let nc = self.manifest.num_classes;
+        let pix = test.pixels_per_image();
+        let mut correct = 0usize;
+        let mut x = vec![0f32; b * pix];
+        let mut i = 0;
+        while i < test.len() {
+            let take = b.min(test.len() - i);
+            x.fill(0.0);
+            x[..take * pix]
+                .copy_from_slice(&test.images[i * pix..(i + take) * pix]);
+            let logp = self.predict(params, &x)?;
+            for j in 0..take {
+                let row = &logp[j * nc..(j + 1) * nc];
+                // NaN-tolerant argmax: a destroyed model (e.g. the naive
+                // erroneous uplink) produces NaN logits; treat NaN as
+                // -inf so evaluation degrades to chance instead of
+                // panicking.
+                let mut pred = 0usize;
+                let mut best = f32::NEG_INFINITY;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > best {
+                        best = v;
+                        pred = k;
+                    }
+                }
+                if pred == test.labels[i + j] as usize {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        Ok(correct as f64 / test.len().max(1) as f64)
+    }
+
+    /// Initialize parameters per the manifest schema.
+    pub fn init_params(&self, rng: &mut crate::rng::Rng) -> ParamSet {
+        ParamSet::init(&self.manifest, rng)
+    }
+}
+
+// Integration tests for the runtime live in rust/tests/ — they need built
+// artifacts, which `make test` guarantees before running cargo test.

@@ -1,0 +1,165 @@
+//! Airtime / latency accounting — the x-axis of the paper's Fig. 3.
+//!
+//! The paper compares schemes by *communication time*, so the model below
+//! charges every scheme the same physical constants and lets the protocol
+//! differences (FEC rate overhead, retransmissions, ACK turnarounds)
+//! produce the ratios. Constants default to 802.11n-flavoured OFDM
+//! numbers; Fig. 3's claims are ratios, which are invariant to the
+//! absolute symbol rate (DESIGN.md §4).
+
+/// Physical + MAC constants of the simulated link.
+#[derive(Clone, Copy, Debug)]
+pub struct AirtimeModel {
+    /// Modulated symbols per second per client link (complex baseband).
+    pub symbol_rate: f64,
+    /// Preamble + PHY header per transmission burst, seconds.
+    pub preamble_s: f64,
+    /// ACK/NAK turnaround charged per ARQ attempt (SIFS + ACK), seconds.
+    pub ack_s: f64,
+    /// Per-bit FEC encoding/decoding compute charge at the edge device,
+    /// seconds (the paper's "computation overhead for FEC"; 0 disables).
+    pub fec_compute_per_bit_s: f64,
+}
+
+impl Default for AirtimeModel {
+    fn default() -> Self {
+        AirtimeModel {
+            // 20 MHz 802.11n OFDM: 52 data subcarriers / 4 us symbol
+            // ~ 13 Msym/s effective single-stream rate.
+            symbol_rate: 13.0e6,
+            preamble_s: 44e-6,
+            ack_s: 44e-6,
+            fec_compute_per_bit_s: 0.0,
+        }
+    }
+}
+
+impl AirtimeModel {
+    /// Airtime of one uncoded burst of `symbols` symbols.
+    pub fn burst_time(&self, symbols: usize) -> f64 {
+        self.preamble_s + symbols as f64 / self.symbol_rate
+    }
+
+    /// Airtime of an ECRT delivery under selective-repeat ARQ with
+    /// 802.11-style aggregation: every codeword transmission pays its
+    /// symbol time; each *burst* (initial aggregated MPDU + one per
+    /// retransmission round) pays a preamble + block-ACK turnaround; FEC
+    /// compute is charged per coded bit.
+    pub fn ecrt_time(&self, stats: &crate::fec::FecStats) -> f64 {
+        let bursts = stats.bursts.max(1) as f64;
+        bursts * (self.preamble_s + self.ack_s)
+            + stats.symbols_sent as f64 / self.symbol_rate
+            + stats.coded_bits_sent as f64 * self.fec_compute_per_bit_s
+    }
+}
+
+/// Cumulative per-round communication-time ledger.
+///
+/// The paper's uplink is TDMA ("each user is assigned to a specific time
+/// slot"), so a round's uplink time is the *sum* of the client slot times;
+/// [`Ledger::finish_round`] also supports the FDMA/parallel convention
+/// (max over clients) for the ablation bench.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    round_client_times: Vec<f64>,
+    /// Cumulative communication time, seconds.
+    pub total_s: f64,
+    /// Per-round totals.
+    pub per_round_s: Vec<f64>,
+}
+
+/// How client slots combine into round time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Multiplexing {
+    /// Sequential slots (paper's TDMA uplink): round time = sum.
+    Tdma,
+    /// Fully parallel (orthogonal bands): round time = max.
+    Fdma,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Ledger::default()
+    }
+
+    /// Record one client's uplink time within the current round.
+    pub fn record_client(&mut self, seconds: f64) {
+        self.round_client_times.push(seconds);
+    }
+
+    /// Close the round, returning its communication time.
+    pub fn finish_round(&mut self, mux: Multiplexing) -> f64 {
+        let t = match mux {
+            Multiplexing::Tdma => self.round_client_times.iter().sum(),
+            Multiplexing::Fdma => self.round_client_times.iter().cloned().fold(0.0, f64::max),
+        };
+        self.round_client_times.clear();
+        self.total_s += t;
+        self.per_round_s.push(t);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fec::FecStats;
+
+    #[test]
+    fn burst_time_scales_with_symbols() {
+        let m = AirtimeModel::default();
+        let t1 = m.burst_time(13_000_000);
+        assert!((t1 - (1.0 + 44e-6)).abs() < 1e-9);
+        assert!(m.burst_time(0) == m.preamble_s);
+    }
+
+    #[test]
+    fn ecrt_time_charges_overhead() {
+        let m = AirtimeModel::default();
+        let stats = FecStats {
+            info_bits: 324,
+            codewords: 1,
+            transmissions: 2, // one retransmission
+            coded_bits_sent: 1296,
+            symbols_sent: 648,
+            exhausted: 0,
+            bursts: 2,
+        };
+        let t = m.ecrt_time(&stats);
+        let expect = 2.0 * (m.preamble_s + m.ack_s) + 648.0 / m.symbol_rate;
+        assert!((t - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecrt_at_least_2x_uncoded_when_no_retx() {
+        // Rate-1/2 coding doubles symbols: the Fig. 3 20 dB floor.
+        let m = AirtimeModel { preamble_s: 0.0, ack_s: 0.0, ..Default::default() };
+        let info_bits = 324 * 100;
+        let uncoded_syms = info_bits / 2; // QPSK
+        let stats = FecStats {
+            info_bits,
+            codewords: 100,
+            transmissions: 100,
+            coded_bits_sent: 2 * info_bits,
+            symbols_sent: 2 * uncoded_syms,
+            exhausted: 0,
+            bursts: 1,
+        };
+        let ratio = m.ecrt_time(&stats) / m.burst_time(uncoded_syms);
+        assert!((ratio - 2.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn ledger_tdma_sums_fdma_maxes() {
+        let mut l = Ledger::new();
+        l.record_client(1.0);
+        l.record_client(2.0);
+        l.record_client(3.0);
+        assert!((l.finish_round(Multiplexing::Tdma) - 6.0).abs() < 1e-12);
+        l.record_client(1.0);
+        l.record_client(5.0);
+        assert!((l.finish_round(Multiplexing::Fdma) - 5.0).abs() < 1e-12);
+        assert!((l.total_s - 11.0).abs() < 1e-12);
+        assert_eq!(l.per_round_s.len(), 2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Gradient compression baselines (paper §I positions them as *parallel*
+//! to approximate transmission: "gradient compression is different from
+//! and runs parallel to our proposed approximate wireless communication
+//! method"). Implemented so the ablation bench can quantify that claim:
+//! compression shrinks the payload, approximate transmission removes the
+//! FEC/ARQ overhead — and they compose.
+//!
+//! * [`TopK`] — magnitude top-k sparsification (Aji & Heafield [6]:
+//!   "99% of gradients could be dropped"), wire format = (index, value)
+//!   pairs.
+//! * [`OneBitSgd`] — sign quantization with per-tensor scale (Seide et
+//!   al. [5]) and local error feedback.
+
+use crate::rng::Rng;
+
+/// A compression scheme: encode to a bit-budget payload, decode back to
+/// a dense gradient estimate.
+pub trait Compressor {
+    /// Dense gradient -> (wire floats, metadata floats). The wire format
+    /// stays f32-based so it can ride the same Transport as raw grads.
+    fn compress(&mut self, grads: &[f32]) -> Vec<f32>;
+    /// Inverse of [`Self::compress`].
+    fn decompress(&self, wire: &[f32], n: usize) -> Vec<f32>;
+    /// Wire payload bits for `n` gradient entries.
+    fn wire_bits(&self, n: usize) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Top-k sparsification with error feedback (the residual of dropped
+/// coordinates is carried into the next round, as in [6]).
+pub struct TopK {
+    /// Fraction kept, e.g. 0.01 for "drop 99%".
+    pub keep: f64,
+    residual: Vec<f32>,
+}
+
+impl TopK {
+    pub fn new(keep: f64) -> Self {
+        assert!((0.0..=1.0).contains(&keep) && keep > 0.0);
+        TopK { keep, residual: Vec::new() }
+    }
+
+    fn k(&self, n: usize) -> usize {
+        ((n as f64 * self.keep).ceil() as usize).clamp(1, n)
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&mut self, grads: &[f32]) -> Vec<f32> {
+        let n = grads.len();
+        if self.residual.len() != n {
+            self.residual = vec![0.0; n];
+        }
+        // Accumulate error feedback.
+        let acc: Vec<f32> =
+            grads.iter().zip(&self.residual).map(|(g, r)| g + r).collect();
+        let k = self.k(n);
+        // Partial select of the k largest |acc|.
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            acc[b].abs().partial_cmp(&acc[a].abs()).unwrap()
+        });
+        let mut chosen: Vec<usize> = idx[..k].to_vec();
+        chosen.sort_unstable();
+        // Residual = everything not sent.
+        self.residual = acc.clone();
+        let mut wire = Vec::with_capacity(2 * k);
+        for &i in &chosen {
+            wire.push(i as f32); // index (exact for n < 2^24)
+            wire.push(acc[i]);
+            self.residual[i] = 0.0;
+        }
+        wire
+    }
+
+    fn decompress(&self, wire: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        for pair in wire.chunks_exact(2) {
+            let i = pair[0] as usize;
+            if i < n && pair[1].is_finite() {
+                out[i] = pair[1];
+            }
+        }
+        out
+    }
+
+    fn wire_bits(&self, n: usize) -> usize {
+        self.k(n) * 64 // (index, value) as two f32 words
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+/// 1-bit SGD: sign per coordinate + one mean-magnitude scale, with error
+/// feedback. Wire format: [scale, packed signs as f32 words of 32 signs].
+pub struct OneBitSgd {
+    residual: Vec<f32>,
+}
+
+impl OneBitSgd {
+    pub fn new() -> Self {
+        OneBitSgd { residual: Vec::new() }
+    }
+}
+
+impl Default for OneBitSgd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for OneBitSgd {
+    fn compress(&mut self, grads: &[f32]) -> Vec<f32> {
+        let n = grads.len();
+        if self.residual.len() != n {
+            self.residual = vec![0.0; n];
+        }
+        let acc: Vec<f32> =
+            grads.iter().zip(&self.residual).map(|(g, r)| g + r).collect();
+        let scale = acc.iter().map(|v| v.abs() as f64).sum::<f64>() / n as f64;
+        let scale = scale as f32;
+        let mut wire = Vec::with_capacity(1 + n.div_ceil(32));
+        wire.push(scale);
+        for chunk in acc.chunks(32) {
+            let mut word = 0u32;
+            for (j, &v) in chunk.iter().enumerate() {
+                if v >= 0.0 {
+                    word |= 1 << j;
+                }
+            }
+            wire.push(f32::from_bits(word));
+        }
+        // Error feedback: residual = acc - decoded.
+        for (r, &v) in self.residual.iter_mut().zip(&acc) {
+            let dec = if v >= 0.0 { scale } else { -scale };
+            *r = v - dec;
+        }
+        wire
+    }
+
+    fn decompress(&self, wire: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        if wire.is_empty() {
+            return out;
+        }
+        let scale = wire[0].abs().min(1.0); // received scale, clamped sane
+        for i in 0..n {
+            let word = wire[1 + i / 32].to_bits();
+            let sign = if (word >> (i % 32)) & 1 == 1 { 1.0 } else { -1.0 };
+            out[i] = sign * scale;
+        }
+        out
+    }
+
+    fn wire_bits(&self, n: usize) -> usize {
+        32 + n.div_ceil(32) * 32
+    }
+
+    fn name(&self) -> &'static str {
+        "1bit"
+    }
+}
+
+/// Convergence-free sanity metric used by tests/benches: cosine
+/// similarity between the true and reconstructed gradient.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Synthetic gradient with a realistic heavy-ish tail.
+pub fn synth_grads(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let z = rng.normal_scaled(0.0, 0.02);
+            if rng.bernoulli(0.02) {
+                (z * 10.0) as f32
+            } else {
+                z as f32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_largest_and_compresses() {
+        let mut c = TopK::new(0.01);
+        let mut rng = Rng::new(1);
+        let g = synth_grads(10_000, &mut rng);
+        let wire = c.compress(&g);
+        assert_eq!(wire.len(), 2 * 100);
+        let back = c.decompress(&wire, g.len());
+        // Kept coordinates are exact.
+        let kept: Vec<usize> =
+            (0..g.len()).filter(|&i| back[i] != 0.0).collect();
+        assert_eq!(kept.len(), 100);
+        let min_kept = kept.iter().map(|&i| g[i].abs()).fold(f32::INFINITY, f32::min);
+        let max_dropped = (0..g.len())
+            .filter(|i| !kept.contains(i))
+            .map(|i| g[i].abs())
+            .fold(0f32, f32::max);
+        assert!(min_kept >= max_dropped, "{min_kept} vs {max_dropped}");
+        // (index, value) pairs at keep=1% => 50x fewer payload bits.
+        assert!(c.wire_bits(g.len()) * 50 <= g.len() * 32);
+    }
+
+    #[test]
+    fn topk_error_feedback_accumulates() {
+        let mut c = TopK::new(0.1);
+        let g = vec![0.1f32, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01];
+        let _ = c.compress(&g); // k=1 sends index 0 only
+        // Round 2: residuals make the small coordinates win eventually.
+        let wire2 = c.compress(&vec![0.0; 10]);
+        assert_eq!(wire2.len(), 2);
+        assert_ne!(wire2[0] as usize, 0, "residual should promote a dropped coord");
+    }
+
+    #[test]
+    fn onebit_roundtrip_properties() {
+        let mut c = OneBitSgd::new();
+        let mut rng = Rng::new(2);
+        let g = synth_grads(5_000, &mut rng);
+        let wire = c.compress(&g);
+        assert_eq!(wire.len(), 1 + 5_000usize.div_ceil(32));
+        let back = c.decompress(&wire, g.len());
+        // Signs preserved, single magnitude.
+        for (a, b) in g.iter().zip(&back) {
+            assert_eq!(a.signum() >= 0.0, *b >= 0.0);
+        }
+        let mags: std::collections::BTreeSet<u32> =
+            back.iter().map(|v| v.abs().to_bits()).collect();
+        assert_eq!(mags.len(), 1);
+        // 32x compression.
+        assert!(c.wire_bits(g.len()) < g.len() * 32 / 30);
+    }
+
+    #[test]
+    fn both_preserve_gradient_direction() {
+        let mut rng = Rng::new(3);
+        let g = synth_grads(21_840, &mut rng);
+        let mut topk = TopK::new(0.05);
+        let w = topk.compress(&g);
+        let cos_topk = cosine(&g, &topk.decompress(&w, g.len()));
+        let mut ob = OneBitSgd::new();
+        let w = ob.compress(&g);
+        let cos_1bit = cosine(&g, &ob.decompress(&w, g.len()));
+        assert!(cos_topk > 0.6, "topk cosine {cos_topk}");
+        assert!(cos_1bit > 0.3, "1bit cosine {cos_1bit}");
+    }
+
+    #[test]
+    fn decompress_is_robust_to_corrupted_wire() {
+        // Composition with the approximate channel: corrupted indices /
+        // NaN values must not panic or explode.
+        let mut c = TopK::new(0.01);
+        let mut rng = Rng::new(4);
+        let g = synth_grads(1_000, &mut rng);
+        let mut wire = c.compress(&g);
+        wire[0] = 1e9; // out-of-range index
+        wire[1] = f32::NAN; // bad value
+        let back = c.decompress(&wire, g.len());
+        assert!(back.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,133 @@
+//! Importance-aware bit-to-symbol-slot mapping (extension ablation).
+//!
+//! Gray-coded square QAM protects the half-plane bits of each symbol
+//! (positions 0 and k/2) better than the inner bits (Table I, Fig. 4b).
+//! The paper observes this built-in protection; this module goes one step
+//! further — an explicit permutation that lands the *important* float
+//! bits (sign + exponent, wire positions 0..=8) on the protected slots.
+//!
+//! The permutation operates on windows of 32 bits (one float = 32/k
+//! symbols; k in {2, 4, 8} divides 32). Within a window the symbol slots
+//! are ranked strong-first, the float bits importance-first, and matched
+//! rank-to-rank. For QPSK every slot is equally strong, so the map is the
+//! identity.
+
+use crate::bits::BitVec;
+use crate::modem::Modulation;
+
+/// A window permutation and its inverse.
+#[derive(Clone, Debug)]
+pub struct ImportanceMap {
+    /// `perm[i]` = wire position whose bit is sent in window slot `i`.
+    perm: Vec<usize>,
+    inv: Vec<usize>,
+    window: usize,
+}
+
+impl ImportanceMap {
+    pub fn new(modulation: Modulation) -> Self {
+        let k = modulation.bits_per_symbol();
+        let window = 32usize;
+        assert!(
+            window % k == 0,
+            "importance mapping needs k | 32 (got k = {k})"
+        );
+        // Rank slots: position j within a symbol; strong slots are the
+        // half-plane bits j == 0 (I) and j == k/2 (Q); then by depth
+        // (distance into the gray axis word).
+        let mut slots: Vec<usize> = (0..window).collect();
+        let strength = |slot: usize| -> usize {
+            let j = slot % k;
+            let axis_pos = if j < k / 2 { j } else { j - k / 2 };
+            axis_pos // 0 = half-plane bit = strongest
+        };
+        slots.sort_by_key(|&s| (strength(s), s));
+        // Rank float bits by importance: sign (0), exponent MSB->LSB
+        // (1..=8), fraction MSB->LSB (9..=31) — wire order is already
+        // importance order for IEEE-754.
+        let bits: Vec<usize> = (0..window).collect();
+        let mut perm = vec![0usize; window];
+        for (slot, bit) in slots.iter().zip(bits.iter()) {
+            perm[*slot] = *bit;
+        }
+        let mut inv = vec![0usize; window];
+        for (slot, &bit) in perm.iter().enumerate() {
+            inv[bit] = slot;
+        }
+        ImportanceMap { perm, inv, window }
+    }
+
+    /// Apply to a packed float bitstream (length must be a multiple of
+    /// the 32-bit window, which `pack_f32s` guarantees).
+    pub fn apply(&self, bits: &BitVec) -> BitVec {
+        assert_eq!(bits.len() % self.window, 0);
+        let mut out = BitVec::zeros(bits.len());
+        for w in (0..bits.len()).step_by(self.window) {
+            for slot in 0..self.window {
+                out.set(w + slot, bits.get(w + self.perm[slot]));
+            }
+        }
+        out
+    }
+
+    /// Inverse mapping.
+    pub fn invert(&self, bits: &BitVec) -> BitVec {
+        assert_eq!(bits.len() % self.window, 0);
+        let mut out = BitVec::zeros(bits.len());
+        for w in (0..bits.len()).step_by(self.window) {
+            for bit in 0..self.window {
+                out.set(w + bit, bits.get(w + self.inv[bit]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::pack_f32s;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_modulations() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f32> = (0..100).map(|_| rng.normal_scaled(0.0, 0.1) as f32).collect();
+        let bits = pack_f32s(&xs);
+        for m in [Modulation::Qpsk, Modulation::Qam16, Modulation::Qam256] {
+            let map = ImportanceMap::new(m);
+            let mapped = map.apply(&bits);
+            assert_eq!(map.invert(&mapped), bits, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn qpsk_map_is_identity() {
+        let map = ImportanceMap::new(Modulation::Qpsk);
+        assert_eq!(map.perm, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn qam16_puts_sign_and_exponent_on_strong_slots() {
+        let map = ImportanceMap::new(Modulation::Qam16);
+        // Strong slots for k=4: symbol positions 0 and 2 -> window slots
+        // {0,2,4,6,...,30} interleaved per symbol: slots s where s%4 in
+        // {0,2}. There are 16 strong slots; the 16 most important bits
+        // (sign + 8 exponent + 7 top fraction) must occupy them.
+        let strong: Vec<usize> = (0..32).filter(|s| s % 4 == 0 || s % 4 == 2).collect();
+        let mut bits_on_strong: Vec<usize> = strong.iter().map(|&s| map.perm[s]).collect();
+        bits_on_strong.sort_unstable();
+        assert_eq!(bits_on_strong, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn qam256_puts_exponent_on_strongest() {
+        let map = ImportanceMap::new(Modulation::Qam256);
+        // k=8: strongest slots are s%8==0 (I half) and s%8==4 (Q half):
+        // 8 slots for the 8 most important bits (sign + exp[0..7)).
+        let strongest: Vec<usize> = (0..32).filter(|s| s % 8 == 0 || s % 8 == 4).collect();
+        let mut bits: Vec<usize> = strongest.iter().map(|&s| map.perm[s]).collect();
+        bits.sort_unstable();
+        assert_eq!(bits, (0..8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,455 @@
+//! Uplink transport schemes (paper §IV-B and §V).
+//!
+//! A [`Transport`] moves a client's gradient vector to the PS over the
+//! wireless substrate and reports what it cost. Four schemes:
+//!
+//! | scheme | FEC | ReTX | interleave | bit protection | delivery |
+//! |--------|-----|------|-----------|----------------|----------|
+//! | [`Scheme::Perfect`] | – | – | – | – | exact (genie) |
+//! | [`Scheme::Ecrt`] | LDPC 1/2 | stop-and-wait | – | – | exact |
+//! | [`Scheme::Naive`] | – | – | – | – | erroneous |
+//! | [`Scheme::Proposed`] | – | – | block | bit-2 force + clamp | erroneous-but-bounded |
+//!
+//! `Perfect` is the error-free ideal (charged the uncoded airtime) used
+//! as the accuracy upper bound; the other three are the arms of Fig. 3.
+
+pub mod compress;
+pub mod mapping;
+
+use crate::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
+use crate::channel::{Channel, ChannelConfig};
+use crate::fec::{self, ArqConfig};
+use crate::math::Complex;
+use crate::modem::{Constellation, Modulation};
+use crate::rng::Rng;
+use crate::timing::AirtimeModel;
+
+/// Uplink scheme selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Genie channel: exact delivery at uncoded airtime.
+    Perfect,
+    /// Error Correction and ReTransmission — LDPC-1/2 + ARQ (baseline).
+    Ecrt,
+    /// Erroneous transmission with no mitigation at all.
+    Naive,
+    /// The paper's approximate scheme: interleaving + receiver-side
+    /// exponent-MSB forcing + value clamp, no FEC, no retransmission.
+    Proposed,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 4] =
+        [Scheme::Perfect, Scheme::Ecrt, Scheme::Naive, Scheme::Proposed];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Perfect => "perfect",
+            Scheme::Ecrt => "ecrt",
+            Scheme::Naive => "naive",
+            Scheme::Proposed => "proposed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "perfect" => Some(Scheme::Perfect),
+            "ecrt" => Some(Scheme::Ecrt),
+            "naive" => Some(Scheme::Naive),
+            "proposed" | "approx" => Some(Scheme::Proposed),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a transmission costs / suffered — consumed by the metrics
+/// sink and the Fig. 3 x-axis.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TxReport {
+    /// Wall airtime of the delivery, seconds.
+    pub seconds: f64,
+    /// Payload bits (32 x number of gradient floats).
+    pub payload_bits: usize,
+    /// Symbols that went over the air (incl. coding + retransmission).
+    pub symbols_sent: usize,
+    /// Channel-level bit errors in the delivered payload *before*
+    /// receiver-side protection (0 for Perfect/Ecrt).
+    pub bit_errors: usize,
+    /// Errors hitting sign / exponent / fraction wire positions.
+    pub errors_sign: usize,
+    pub errors_exp: usize,
+    pub errors_frac: usize,
+    /// Floats still corrupted after protection.
+    pub corrupted_floats: usize,
+    /// ECRT retransmissions (0 otherwise).
+    pub retransmissions: usize,
+}
+
+impl TxReport {
+    /// Residual BER of the delivered payload.
+    pub fn ber(&self) -> f64 {
+        self.bit_errors as f64 / self.payload_bits.max(1) as f64
+    }
+}
+
+/// Transport configuration (built from the experiment config).
+#[derive(Clone, Copy, Debug)]
+pub struct TransportConfig {
+    pub scheme: Scheme,
+    pub modulation: Modulation,
+    pub channel: ChannelConfig,
+    pub airtime: AirtimeModel,
+    pub arq: ArqConfig,
+    /// Column width (original-stream spacing) of the block interleaver
+    /// used by `Proposed`; 0 disables interleaving. Odd values >= 33
+    /// guarantee a fade block spreads across distinct floats.
+    pub interleave_spread: usize,
+    /// Receiver-side protection used by `Proposed`.
+    pub protection: BitProtection,
+    /// Optional importance-aware bit-to-symbol-slot mapping (extension
+    /// ablation; see [`mapping`]). Mutually exclusive with interleaving.
+    pub importance_mapping: bool,
+}
+
+impl TransportConfig {
+    pub fn new(scheme: Scheme, modulation: Modulation, channel: ChannelConfig) -> Self {
+        TransportConfig {
+            scheme,
+            modulation,
+            channel,
+            airtime: AirtimeModel::default(),
+            arq: ArqConfig::default(),
+            interleave_spread: 37,
+            protection: BitProtection::proposed(),
+            importance_mapping: false,
+        }
+    }
+}
+
+/// A ready-to-use uplink: constellation + channel instance + scheme
+/// plumbing. One per experiment; `send` is re-entrant given distinct RNG
+/// streams, so clients can fan out across threads.
+pub struct Transport {
+    pub cfg: TransportConfig,
+    con: Constellation,
+    channel: Channel,
+    imap: Option<mapping::ImportanceMap>,
+}
+
+impl Transport {
+    pub fn new(cfg: TransportConfig) -> Self {
+        let imap = if cfg.importance_mapping {
+            assert!(
+                cfg.interleave_spread == 0,
+                "importance mapping requires interleave_spread = 0 \
+                 (slot alignment is destroyed by bit interleaving)"
+            );
+            Some(mapping::ImportanceMap::new(cfg.modulation))
+        } else {
+            None
+        };
+        Transport {
+            con: Constellation::new(cfg.modulation),
+            channel: Channel::new(cfg.channel),
+            imap,
+            cfg,
+        }
+    }
+
+    /// Deliver `grads` to the PS; returns the received vector + report.
+    pub fn send(&self, grads: &[f32], rng: &mut Rng) -> (Vec<f32>, TxReport) {
+        match self.cfg.scheme {
+            Scheme::Perfect => self.send_perfect(grads),
+            Scheme::Ecrt => self.send_ecrt(grads, rng),
+            Scheme::Naive => self.send_erroneous(grads, rng, BitProtection::none(), 0, false),
+            Scheme::Proposed => self.send_erroneous(
+                grads,
+                rng,
+                self.cfg.protection,
+                self.cfg.interleave_spread,
+                self.cfg.importance_mapping,
+            ),
+        }
+    }
+
+    fn send_perfect(&self, grads: &[f32]) -> (Vec<f32>, TxReport) {
+        let payload_bits = grads.len() * 32;
+        let symbols = payload_bits.div_ceil(self.con.modulation.bits_per_symbol());
+        let report = TxReport {
+            seconds: self.cfg.airtime.burst_time(symbols),
+            payload_bits,
+            symbols_sent: symbols,
+            ..Default::default()
+        };
+        (grads.to_vec(), report)
+    }
+
+    fn send_ecrt(&self, grads: &[f32], rng: &mut Rng) -> (Vec<f32>, TxReport) {
+        let bits = pack_f32s(grads);
+        let framed = fec::crc::append_crc(&bits);
+        let (delivered, stats) =
+            fec::arq::transmit_reliable(&framed, &self.con, &self.channel, rng, &self.cfg.arq);
+        let (payload, crc_ok) = fec::crc::check_crc(&delivered);
+        // With the retry budget of the paper configurations the CRC always
+        // passes; a residual failure falls back to the corrupted payload
+        // (and is visible in the report).
+        let rx_bits = if crc_ok { payload } else { delivered.slice(0, bits.len()) };
+        let out = unpack_f32s(&rx_bits);
+        let report = TxReport {
+            seconds: self.cfg.airtime.ecrt_time(&stats),
+            payload_bits: bits.len(),
+            symbols_sent: stats.symbols_sent,
+            bit_errors: rx_bits.hamming(&bits),
+            retransmissions: stats.retransmissions(),
+            ..Default::default()
+        };
+        (out, report)
+    }
+
+    fn send_erroneous(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        protection: BitProtection,
+        interleave_spread: usize,
+        importance: bool,
+    ) -> (Vec<f32>, TxReport) {
+        let tx_bits = pack_f32s(grads);
+        let n = tx_bits.len();
+
+        // TX chain: (importance map | interleave) -> modulate.
+        let mapped_tx;
+        let wire_bits: &BitVec = if importance {
+            mapped_tx = self.imap.as_ref().unwrap().apply(&tx_bits);
+            &mapped_tx
+        } else {
+            &tx_bits
+        };
+        let interleaver = (interleave_spread > 0).then(|| {
+            BlockInterleaver::new(n.div_ceil(interleave_spread), interleave_spread)
+        });
+        let air_tx;
+        let air_bits: &BitVec = match &interleaver {
+            Some(il) => {
+                air_tx = il.interleave(wire_bits);
+                &air_tx
+            }
+            None => wire_bits,
+        };
+
+        let symbols = self.con.modulate(air_bits);
+        let mut eq: Vec<Complex> = Vec::new();
+        self.channel.transmit_equalized(&symbols, rng, &mut eq);
+        let rx_air = self.con.demodulate(&eq, air_bits.len());
+
+        // RX chain: deinterleave -> unmap -> protect.
+        let rx_bits = match &interleaver {
+            Some(il) => il.deinterleave(&rx_air, n),
+            None => {
+                let mut b = rx_air;
+                b.truncate(n);
+                b
+            }
+        };
+        let rx_bits = if importance {
+            self.imap.as_ref().unwrap().invert(&rx_bits)
+        } else {
+            rx_bits
+        };
+
+        // Error anatomy before protection.
+        let mut report = TxReport {
+            payload_bits: n,
+            symbols_sent: symbols.len(),
+            seconds: self.cfg.airtime.burst_time(symbols.len()),
+            ..Default::default()
+        };
+        for i in 0..n {
+            if rx_bits.get(i) != tx_bits.get(i) {
+                report.bit_errors += 1;
+                match crate::bits::bit_class(i) {
+                    crate::bits::BitClass::Sign => report.errors_sign += 1,
+                    crate::bits::BitClass::Exponent => report.errors_exp += 1,
+                    crate::bits::BitClass::Fraction => report.errors_frac += 1,
+                }
+            }
+        }
+
+        let mut out = unpack_f32s(&rx_bits);
+        protection.apply(&mut out);
+        report.corrupted_floats = out
+            .iter()
+            .zip(grads)
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        (out, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Fading;
+
+    fn grads(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect()
+    }
+
+    fn cfg(scheme: Scheme, snr_db: f64) -> TransportConfig {
+        TransportConfig::new(
+            scheme,
+            Modulation::Qpsk,
+            ChannelConfig { snr_db, fading: Fading::Block, block_len: 324, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn perfect_is_exact_and_fast() {
+        let mut rng = Rng::new(1);
+        let g = grads(&mut rng, 1000);
+        let t = Transport::new(cfg(Scheme::Perfect, 10.0));
+        let (out, rep) = t.send(&g, &mut rng);
+        assert_eq!(out, g);
+        assert_eq!(rep.bit_errors, 0);
+        assert!(rep.seconds > 0.0);
+    }
+
+    #[test]
+    fn ecrt_is_exact_but_expensive() {
+        let mut rng = Rng::new(2);
+        let g = grads(&mut rng, 2000);
+        let ecrt = Transport::new(cfg(Scheme::Ecrt, 10.0));
+        let perfect = Transport::new(cfg(Scheme::Perfect, 10.0));
+        let (out, rep) = ecrt.send(&g, &mut rng);
+        assert_eq!(out, g, "ECRT must deliver bit-exactly");
+        assert_eq!(rep.bit_errors, 0);
+        let (_, rp) = perfect.send(&g, &mut rng);
+        // Fig. 3 at 10 dB: ECRT >= ~2.5x the uncoded airtime.
+        assert!(rep.seconds > 2.3 * rp.seconds, "{} vs {}", rep.seconds, rp.seconds);
+    }
+
+    #[test]
+    fn naive_corrupts_catastrophically() {
+        let mut rng = Rng::new(3);
+        let g = grads(&mut rng, 8000);
+        let t = Transport::new(cfg(Scheme::Naive, 10.0));
+        let (out, rep) = t.send(&g, &mut rng);
+        // Block fading widens the per-trial BER spread; 8000 floats at
+        // 10 dB should still land near the 4.4e-2 Rayleigh average.
+        let ber = rep.ber();
+        assert!((ber - 0.044).abs() < 0.015, "BER {ber}");
+        // Unprotected exponent flips produce huge or non-finite values.
+        let max = out.iter().filter(|x| x.is_finite()).fold(0f32, |m, &x| m.max(x.abs()));
+        assert!(max > 100.0, "naive max finite |g| = {max}");
+    }
+
+    #[test]
+    fn proposed_bounds_all_values() {
+        let mut rng = Rng::new(4);
+        let g = grads(&mut rng, 4000);
+        let t = Transport::new(cfg(Scheme::Proposed, 10.0));
+        let (out, rep) = t.send(&g, &mut rng);
+        assert!(rep.bit_errors > 0, "channel should corrupt at 10 dB");
+        assert!(out.iter().all(|x| x.is_finite() && x.abs() <= 1.0));
+        // Same airtime as naive (no FEC / no ReTX).
+        let naive = Transport::new(cfg(Scheme::Naive, 10.0));
+        let (_, rn) = naive.send(&g, &mut rng);
+        let ratio = rep.seconds / rn.seconds;
+        assert!((ratio - 1.0).abs() < 0.01, "{ratio}");
+    }
+
+    #[test]
+    fn proposed_mse_much_lower_than_naive() {
+        let mut rng = Rng::new(5);
+        let g = grads(&mut rng, 21840); // one full model
+        let naive = Transport::new(cfg(Scheme::Naive, 10.0));
+        let prop = Transport::new(cfg(Scheme::Proposed, 10.0));
+        let (on, _) = naive.send(&g, &mut rng);
+        let (op, _) = prop.send(&g, &mut rng);
+        // Naive output can contain NaN/Inf (exponent 0xFF); cap per-float
+        // damage so the comparison is well-defined.
+        let sse = |v: &[f32]| {
+            v.iter()
+                .zip(&g)
+                .map(|(a, b)| {
+                    let d = (a - b) as f64;
+                    if d.is_finite() {
+                        d * d
+                    } else {
+                        1e76
+                    }
+                })
+                .sum::<f64>()
+        };
+        assert!(
+            sse(&op) * 1e3 < sse(&on),
+            "proposed {} vs naive {}",
+            sse(&op),
+            sse(&on)
+        );
+    }
+
+    #[test]
+    fn interleaving_spreads_burst_errors_across_floats() {
+        // The paper's stated purpose (SSIV-A): "To avoid block corruption
+        // ... reducing the likelihood of multiple error bits taking place
+        // together". Verify the mechanism: under block fading, the
+        // fraction of corrupted floats that took >= 4 bit errors must
+        // drop sharply with interleaving.
+        let mut rng = Rng::new(6);
+        let g = grads(&mut rng, 21840);
+        let multi_bit_frac = |spread: usize, rng: &mut Rng| -> f64 {
+            let mut c = cfg(Scheme::Naive, 8.0);
+            c.interleave_spread = spread;
+            c.scheme = Scheme::Proposed;
+            let mut cfg2 = c;
+            cfg2.protection = BitProtection::none(); // observe raw bits
+            let t = Transport::new(cfg2);
+            let (mut multi, mut any) = (0usize, 0usize);
+            for _ in 0..3 {
+                let (out, _) = t.send(&g, rng);
+                for (a, b) in out.iter().zip(&g) {
+                    let d = (a.to_bits() ^ b.to_bits()).count_ones();
+                    if d > 0 {
+                        any += 1;
+                    }
+                    if d >= 4 {
+                        multi += 1;
+                    }
+                }
+            }
+            multi as f64 / any.max(1) as f64
+        };
+        let with = multi_bit_frac(37, &mut rng);
+        let without = multi_bit_frac(0, &mut rng);
+        assert!(
+            with < without * 0.6,
+            "multi-bit fraction with {with} vs without {without}"
+        );
+    }
+
+    #[test]
+    fn high_snr_proposed_nearly_exact() {
+        let mut rng = Rng::new(7);
+        let g = grads(&mut rng, 2000);
+        let t = Transport::new(cfg(Scheme::Proposed, 40.0));
+        let (out, rep) = t.send(&g, &mut rng);
+        assert_eq!(rep.bit_errors, 0);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn reports_error_anatomy() {
+        let mut rng = Rng::new(8);
+        let g = grads(&mut rng, 10000);
+        let t = Transport::new(cfg(Scheme::Naive, 10.0));
+        let (_, rep) = t.send(&g, &mut rng);
+        assert_eq!(
+            rep.bit_errors,
+            rep.errors_sign + rep.errors_exp + rep.errors_frac
+        );
+        // Positions are uniform under QPSK: exponent (8/32) should see
+        // ~8x the sign errors (1/32).
+        assert!(rep.errors_exp > 3 * rep.errors_sign);
+    }
+}

@@ -1,0 +1,143 @@
+//! End-to-end FL integration: the full coordinator loop over the real
+//! runtime, wireless substrate, and synthetic dataset — small scale so
+//! it runs inside `cargo test` (release profile recommended).
+
+use awc_fl::config::ExperimentConfig;
+use awc_fl::coordinator::FlServer;
+use awc_fl::runtime::Engine;
+use awc_fl::transport::Scheme;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP fl_it: {e}");
+            None
+        }
+    }
+}
+
+fn small_cfg(scheme: Scheme) -> ExperimentConfig {
+    ExperimentConfig {
+        clients: 8,
+        participants_per_round: 8,
+        train_n: 1600,
+        test_n: 400,
+        rounds: 20,
+        eval_every: 5,
+        // The paper's eta = 0.01 is tuned for 100 aggregated clients;
+        // the 8-client test federation uses a proportionally larger step.
+        lr: 0.1,
+        scheme,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn perfect_uplink_learns() {
+    let Some(engine) = engine() else { return };
+    let mut server = FlServer::from_config(small_cfg(Scheme::Perfect), &engine).unwrap();
+    let trace = server.run(false).unwrap();
+    let first = trace.rounds[0].test_accuracy.unwrap();
+    let best = trace.best_accuracy().unwrap();
+    assert!(best > first + 0.15, "no learning: {first} -> {best}");
+    assert!(best > 0.4, "best accuracy {best}");
+}
+
+#[test]
+fn proposed_close_to_perfect_at_10db() {
+    let Some(engine) = engine() else { return };
+    let run = |scheme| {
+        let mut server = FlServer::from_config(small_cfg(scheme), &engine).unwrap();
+        server.run(false).unwrap().best_accuracy().unwrap()
+    };
+    let perfect = run(Scheme::Perfect);
+    let proposed = run(Scheme::Proposed);
+    assert!(
+        proposed > perfect - 0.15,
+        "proposed {proposed} too far below perfect {perfect}"
+    );
+}
+
+#[test]
+fn naive_uplink_does_not_learn() {
+    let Some(engine) = engine() else { return };
+    let mut server = FlServer::from_config(small_cfg(Scheme::Naive), &engine).unwrap();
+    let trace = server.run(false).unwrap();
+    // Paper Fig. 3: flat ~10% (random guessing) — give it slack to 25%.
+    assert!(
+        trace.best_accuracy().unwrap() < 0.25,
+        "naive learned: {:?}",
+        trace.best_accuracy()
+    );
+}
+
+#[test]
+fn ecrt_learns_but_costs_more_time() {
+    let Some(engine) = engine() else { return };
+    let run = |scheme| {
+        let mut server = FlServer::from_config(small_cfg(scheme), &engine).unwrap();
+        let t = server.run(false).unwrap();
+        (
+            t.best_accuracy().unwrap(),
+            t.rounds.last().unwrap().comm_time_s,
+        )
+    };
+    let (acc_e, time_e) = run(Scheme::Ecrt);
+    let (acc_p, time_p) = run(Scheme::Proposed);
+    // Same number of rounds => ECRT (exact grads) must be in the same
+    // accuracy band as proposed (slight gradient noise can swing a short
+    // run either way)...
+    assert!(acc_e > acc_p - 0.15, "ecrt {acc_e} vs proposed {acc_p}");
+    assert!(acc_e > 0.4, "ecrt must learn: {acc_e}");
+    // ...but at >= ~2.4x the communication time at 10 dB.
+    let ratio = time_e / time_p;
+    assert!(ratio > 2.2, "ECRT/proposed time ratio {ratio}");
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let Some(engine) = engine() else { return };
+    let run = |seed| {
+        let mut cfg = small_cfg(Scheme::Proposed);
+        cfg.seed = seed;
+        cfg.rounds = 4;
+        cfg.eval_every = 2;
+        let mut server = FlServer::from_config(cfg, &engine).unwrap();
+        server.run(false).unwrap()
+    };
+    let a = run(42);
+    let b = run(42);
+    let c = run(43);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.mean_ber, y.mean_ber);
+        assert_eq!(x.comm_time_s, y.comm_time_s);
+    }
+    assert!(
+        a.rounds
+            .iter()
+            .zip(&c.rounds)
+            .any(|(x, y)| x.train_loss != y.train_loss),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn subsampled_participation() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = small_cfg(Scheme::Proposed);
+    cfg.participants_per_round = 3;
+    cfg.rounds = 4;
+    cfg.eval_every = 0;
+    let mut server = FlServer::from_config(cfg, &engine).unwrap();
+    let out = server.run_round(0).unwrap();
+    // 3 clients x one uncoded model upload each.
+    assert!(out.comm_time_s > 0.0);
+    let per_client = 21840.0 * 32.0 / 2.0 / 13.0e6; // QPSK symbols / rate
+    assert!(
+        (out.comm_time_s - 3.0 * (per_client + 44e-6)).abs() < per_client * 0.1,
+        "round time {}",
+        out.comm_time_s
+    );
+}

@@ -1,0 +1,119 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the L3 <-> L2
+//! boundary. These need `make artifacts` to have run; they skip (with a
+//! loud message) when artifacts are absent so plain `cargo test` still
+//! works in a fresh checkout.
+
+use awc_fl::data::synth;
+use awc_fl::rng::Rng;
+use awc_fl::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP runtime_it: {e}");
+            None
+        }
+    }
+}
+
+fn batch(engine: &Engine, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let tt = synth::generate(seed, engine.manifest.train_batch, 0);
+    let idxs: Vec<usize> = (0..engine.manifest.train_batch).collect();
+    tt.train.gather_batch(&idxs, engine.manifest.num_classes)
+}
+
+#[test]
+fn manifest_matches_paper_model() {
+    let Some(engine) = engine() else { return };
+    assert_eq!(engine.manifest.num_params(), 21840);
+    assert_eq!(engine.manifest.params.len(), 8);
+    assert_eq!(engine.manifest.image_hw, 28);
+    assert_eq!(engine.manifest.num_classes, 10);
+}
+
+#[test]
+fn train_step_loss_and_grads_sane() {
+    let Some(engine) = engine() else { return };
+    let params = engine.init_params(&mut Rng::new(1));
+    let (x, y) = batch(&engine, 2);
+    let (loss, grads) = engine.train_step(&params, &x, &y).unwrap();
+    // Fresh Kaiming-initialized model: finite, same order as ln(10) — the
+    // exact value depends on init-time logit spread over the normalized
+    // synthetic images (sgd_on_fixed_batch_reduces_loss checks learning).
+    assert!(loss.is_finite() && (1.0..12.0).contains(&loss), "initial loss {loss}");
+    assert_eq!(grads.num_params(), 21840);
+    assert!(grads.l2_norm() > 1e-3, "gradients must be nonzero");
+    // SSIII bound: |g| <= B^l (finite, small multiple of 1). At a fresh
+    // random init the last-layer logit spread can push |g| past 1; the
+    // empirical (-1,1) concentration (E7) is a *training-time* property,
+    // checked below after a few steps.
+    assert!(grads.max_abs().is_finite() && grads.max_abs() < 8.0);
+    let mut p = params.clone();
+    for _ in 0..5 {
+        let (_, g) = engine.train_step(&p, &x, &y).unwrap();
+        p.sgd_step(&g, 0.05);
+    }
+    let (_, g) = engine.train_step(&p, &x, &y).unwrap();
+    assert!(g.max_abs() < 1.5, "post-warmup max |g| = {}", g.max_abs());
+}
+
+#[test]
+fn sgd_on_fixed_batch_reduces_loss() {
+    let Some(engine) = engine() else { return };
+    let mut params = engine.init_params(&mut Rng::new(3));
+    let (x, y) = batch(&engine, 4);
+    let (loss0, _) = engine.train_step(&params, &x, &y).unwrap();
+    let mut last = loss0;
+    for _ in 0..8 {
+        let (l, g) = engine.train_step(&params, &x, &y).unwrap();
+        params.sgd_step(&g, 0.1);
+        last = l;
+    }
+    assert!(last < loss0 - 0.2, "loss {loss0} -> {last}");
+}
+
+#[test]
+fn train_step_deterministic() {
+    let Some(engine) = engine() else { return };
+    let params = engine.init_params(&mut Rng::new(5));
+    let (x, y) = batch(&engine, 6);
+    let (l1, g1) = engine.train_step(&params, &x, &y).unwrap();
+    let (l2, g2) = engine.train_step(&params, &x, &y).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1.flatten(), g2.flatten());
+}
+
+#[test]
+fn predict_log_probs_normalized() {
+    let Some(engine) = engine() else { return };
+    let params = engine.init_params(&mut Rng::new(7));
+    let eb = engine.manifest.eval_batch;
+    let tt = synth::generate(8, eb, 0);
+    let idxs: Vec<usize> = (0..eb).collect();
+    let (x, _) = tt.train.gather_batch(&idxs, 10);
+    let logp = engine.predict(&params, &x).unwrap();
+    assert_eq!(logp.len(), eb * 10);
+    for i in 0..eb {
+        let p: f32 = logp[i * 10..(i + 1) * 10].iter().map(|l| l.exp()).sum();
+        assert!((p - 1.0).abs() < 1e-3, "row {i}: sum p = {p}");
+    }
+}
+
+#[test]
+fn evaluate_fresh_model_near_chance() {
+    let Some(engine) = engine() else { return };
+    let params = engine.init_params(&mut Rng::new(9));
+    let tt = synth::generate(10, 10, 1000);
+    let acc = engine.evaluate(&params, &tt.test).unwrap();
+    assert!((0.0..0.35).contains(&acc), "untrained accuracy {acc}");
+}
+
+#[test]
+fn shape_errors_are_rejected() {
+    let Some(engine) = engine() else { return };
+    let params = engine.init_params(&mut Rng::new(11));
+    let bad_x = vec![0f32; 17];
+    let y = vec![0f32; engine.manifest.train_batch * 10];
+    assert!(engine.train_step(&params, &bad_x, &y).is_err());
+}
