@@ -1,9 +1,13 @@
 //! Minimal benchmark harness (criterion is unavailable in the offline
 //! vendor set). Provides warmup + repeated timing with mean / p50 / p95
-//! reporting, and a `black_box` to defeat dead-code elimination.
+//! reporting, a `black_box` to defeat dead-code elimination, and a
+//! hand-rolled JSON sink ([`Sink`]) so benches can emit machine-readable
+//! records (`{name, iters, mean_s, p50_s, p95_s, throughput}`) that track
+//! the perf trajectory across PRs.
 //!
 //! Used by every `[[bench]]` target via `#[path = "harness.rs"] mod
-//! harness;`.
+//! harness;` — each bench uses a subset of these helpers.
+#![allow(dead_code)]
 
 use std::time::Instant;
 
@@ -74,7 +78,8 @@ pub fn fmt_time(s: f64) -> String {
 }
 
 /// Throughput helper: items per second given a per-iteration item count.
-pub fn report_throughput(name: &str, items_per_iter: f64, s: &Summary) {
+/// Returns the computed rate so callers can record it.
+pub fn report_throughput(name: &str, items_per_iter: f64, s: &Summary) -> f64 {
     let per_s = items_per_iter / s.mean_s;
     let human = if per_s >= 1e9 {
         format!("{:.2} G/s", per_s / 1e9)
@@ -86,4 +91,82 @@ pub fn report_throughput(name: &str, items_per_iter: f64, s: &Summary) {
         format!("{per_s:.2} /s")
     };
     println!("{name:<44}        throughput {human}");
+    per_s
+}
+
+/// One machine-readable benchmark record.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    /// Items per second, when the bench has a natural item count.
+    pub throughput: Option<f64>,
+}
+
+/// Collects [`Record`]s and writes them as a JSON array (no serde in the
+/// offline vendor set, so the emitter is hand-rolled).
+#[derive(Clone, Debug, Default)]
+pub struct Sink {
+    records: Vec<Record>,
+}
+
+impl Sink {
+    pub fn new() -> Self {
+        Sink::default()
+    }
+
+    /// Append one bench result.
+    pub fn push(&mut self, name: &str, s: &Summary, throughput: Option<f64>) {
+        self.records.push(Record {
+            name: name.to_string(),
+            iters: s.iters,
+            mean_s: s.mean_s,
+            p50_s: s.p50_s,
+            p95_s: s.p95_s,
+            throughput,
+        });
+    }
+
+    /// Serialize all records to a JSON file at `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let tp = r
+                .throughput
+                .map_or("null".to_string(), |t| format!("{t:.6e}"));
+            out.push_str(&format!(
+                "  {{\"name\": {}, \"iters\": {}, \"mean_s\": {:.6e}, \
+                 \"p50_s\": {:.6e}, \"p95_s\": {:.6e}, \"throughput\": {}}}{}\n",
+                json_string(&r.name),
+                r.iters,
+                r.mean_s,
+                r.p50_s,
+                r.p95_s,
+                tp,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("]\n");
+        std::fs::write(path, out)
+    }
+}
+
+/// Minimal JSON string escaping (bench names are ASCII).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }

@@ -4,6 +4,11 @@
 //! per-client transport sends, and (when artifacts exist) the PJRT
 //! train_step / predict round-trips.
 //!
+//! Besides the console table, every case is appended to
+//! `BENCH_hotpath.json` at the repo root as
+//! `{name, iters, mean_s, p50_s, p95_s, throughput}` so the perf
+//! trajectory is tracked across PRs.
+//!
 //! Run: `cargo bench --bench hotpath`
 
 #[path = "harness.rs"]
@@ -16,51 +21,65 @@ use awc_fl::fec::LdpcCode;
 use awc_fl::math::Complex;
 use awc_fl::modem::{Constellation, Modulation};
 use awc_fl::rng::Rng;
-use awc_fl::transport::{Scheme, Transport};
-use harness::{bench, black_box, report_throughput};
+use awc_fl::transport::{Scheme, Transport, TxScratch};
+use harness::{bench, black_box, report_throughput, Sink};
 
 const MODEL_FLOATS: usize = 21_840; // the paper CNN
 const MODEL_BITS: usize = MODEL_FLOATS * 32;
 
+/// Machine-readable results land at the repo root.
+const JSON_OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+
 fn main() {
+    let mut sink = Sink::new();
     let mut rng = Rng::new(1);
     let grads: Vec<f32> =
         (0..MODEL_FLOATS).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect();
     let bits = pack_f32s(&grads);
 
-    println!("=== L3 hot paths (payload = one model: {MODEL_FLOATS} floats / {MODEL_BITS} bits) ===\n");
+    println!(
+        "=== L3 hot paths (payload = one model: {MODEL_FLOATS} floats / {MODEL_BITS} bits) ===\n"
+    );
 
     // RNG base cost.
-    let s = bench("rng: complex gaussian draw x1e6", 2, 10, || {
+    let name = "rng: complex gaussian draw x1e6";
+    let s = bench(name, 2, 10, || {
         let mut acc = 0.0;
         for _ in 0..1_000_000 {
             acc += rng.cn(1.0).re;
         }
         black_box(acc);
     });
-    report_throughput("rng", 1e6, &s);
+    let tp = report_throughput("rng", 1e6, &s);
+    sink.push(name, &s, Some(tp));
 
     // Modem.
     let con = Constellation::new(Modulation::Qpsk);
     let mut syms = Vec::new();
-    let s = bench("modem: QPSK modulate (1 model)", 2, 20, || {
+    let name = "modem: QPSK modulate (1 model)";
+    let s = bench(name, 2, 20, || {
         syms = con.modulate(black_box(&bits));
     });
-    report_throughput("modem mod (symbols)", syms.len() as f64, &s);
+    let tp = report_throughput("modem mod (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
 
     let eqs: Vec<Complex> = syms.clone();
-    let s = bench("modem: QPSK demodulate (1 model)", 2, 20, || {
+    let name = "modem: QPSK demodulate (1 model)";
+    let s = bench(name, 2, 20, || {
         black_box(con.demodulate(black_box(&eqs), MODEL_BITS));
     });
-    report_throughput("modem demod (symbols)", syms.len() as f64, &s);
+    let tp = report_throughput("modem demod (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
 
     let con256 = Constellation::new(Modulation::Qam256);
     let syms256 = con256.modulate(&bits);
-    let s = bench("modem: 256-QAM mod+demod (1 model)", 2, 20, || {
+    let name = "modem: 256-QAM mod+demod (1 model)";
+    let s = bench(name, 2, 20, || {
         let m = con256.modulate(black_box(&bits));
         black_box(con256.demodulate(&m, MODEL_BITS));
     });
-    report_throughput("modem 256 (symbols)", syms256.len() as f64 * 2.0, &s);
+    let tp = report_throughput("modem 256 (symbols)", syms256.len() as f64 * 2.0, &s);
+    sink.push(name, &s, Some(tp));
 
     // Channel.
     let ch = Channel::new(ChannelConfig {
@@ -69,39 +88,47 @@ fn main() {
         ..Default::default()
     });
     let mut eq = Vec::new();
-    let s = bench("channel: block-fade+AWGN+equalize (1 model)", 2, 20, || {
+    let name = "channel: block-fade+AWGN+equalize (1 model)";
+    let s = bench(name, 2, 20, || {
         ch.transmit_equalized(black_box(&syms), &mut rng, &mut eq);
         black_box(&eq);
     });
-    report_throughput("channel (symbols)", syms.len() as f64, &s);
+    let tp = report_throughput("channel (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
 
     // Interleaver.
     let il = BlockInterleaver::new(MODEL_BITS.div_ceil(37), 37);
-    let s = bench("bits: interleave+deinterleave (1 model)", 2, 20, || {
+    let name = "bits: interleave+deinterleave (1 model)";
+    let s = bench(name, 2, 20, || {
         let t = il.interleave(black_box(&bits));
         black_box(il.deinterleave(&t, MODEL_BITS));
     });
-    report_throughput("interleave (bits)", MODEL_BITS as f64 * 2.0, &s);
+    let tp = report_throughput("interleave (bits)", MODEL_BITS as f64 * 2.0, &s);
+    sink.push(name, &s, Some(tp));
 
     // Pack / unpack / protect.
-    let s = bench("bits: pack+unpack+protect (1 model)", 2, 20, || {
+    let name = "bits: pack+unpack+protect (1 model)";
+    let s = bench(name, 2, 20, || {
         let b = pack_f32s(black_box(&grads));
         let mut v = unpack_f32s(&b);
         BitProtection::proposed().apply(&mut v);
         black_box(v);
     });
-    report_throughput("pack+unpack (floats)", MODEL_FLOATS as f64, &s);
+    let tp = report_throughput("pack+unpack (floats)", MODEL_FLOATS as f64, &s);
+    sink.push(name, &s, Some(tp));
 
     // LDPC.
     let code = LdpcCode::ieee80211n_648_r12();
     let info: BitVec = (0..code.k).map(|_| rng.bernoulli(0.5)).collect();
     let cw = code.encode(&info);
-    let s = bench("fec: LDPC encode x100", 2, 20, || {
+    let name = "fec: LDPC encode x100";
+    let s = bench(name, 2, 20, || {
         for _ in 0..100 {
             black_box(code.encode(black_box(&info)));
         }
     });
-    report_throughput("ldpc encode (info bits)", (code.k * 100) as f64, &s);
+    let tp = report_throughput("ldpc encode (info bits)", (code.k * 100) as f64, &s);
+    sink.push(name, &s, Some(tp));
 
     let llr: Vec<f32> = (0..code.n)
         .map(|i| {
@@ -109,14 +136,16 @@ fn main() {
             (2.0 + rng.normal()) as f32 * sgn
         })
         .collect();
-    let s = bench("fec: min-sum decode x10 (converging)", 2, 10, || {
+    let name = "fec: min-sum decode x10 (converging)";
+    let s = bench(name, 2, 10, || {
         for _ in 0..10 {
             black_box(code.decode_min_sum(black_box(&llr), 30));
         }
     });
-    report_throughput("ldpc decode (coded bits)", (code.n * 10) as f64, &s);
+    let tp = report_throughput("ldpc decode (coded bits)", (code.n * 10) as f64, &s);
+    sink.push(name, &s, Some(tp));
 
-    // Transport end-to-end per scheme.
+    // Transport end-to-end per scheme (thread-local scratch via `send`).
     for scheme in [Scheme::Naive, Scheme::Proposed, Scheme::Ecrt] {
         let cfg = ExperimentConfig {
             scheme,
@@ -127,7 +156,25 @@ fn main() {
         let s = bench(&label, 1, if scheme == Scheme::Ecrt { 3 } else { 10 }, || {
             black_box(t.send(black_box(&grads), &mut rng));
         });
-        report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        let tp = report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        sink.push(&label, &s, Some(tp));
+    }
+
+    // Explicit-scratch variant: the zero-steady-state-allocation path the
+    // coordinator workers use.
+    {
+        let cfg = ExperimentConfig {
+            scheme: Scheme::Proposed,
+            ..ExperimentConfig::default()
+        };
+        let t = Transport::new(cfg.transport());
+        let mut scratch = TxScratch::new();
+        let name = "transport: proposed send_with scratch (1 model)";
+        let s = bench(name, 1, 10, || {
+            black_box(t.send_with(black_box(&grads), &mut rng, &mut scratch));
+        });
+        let tp = report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        sink.push(name, &s, Some(tp));
     }
 
     // PJRT round-trips (needs artifacts).
@@ -141,17 +188,26 @@ fn main() {
             for i in 0..b {
                 y[i * 10 + i % 10] = 1.0;
             }
-            let s = bench("runtime: train_step (B=64)", 1, 10, || {
+            let name = "runtime: train_step (B=64)";
+            let s = bench(name, 1, 10, || {
                 black_box(engine.train_step(&params, &x, &y).unwrap());
             });
-            report_throughput("train_step (examples)", b as f64, &s);
+            let tp = report_throughput("train_step (examples)", b as f64, &s);
+            sink.push(name, &s, Some(tp));
             let eb = engine.manifest.eval_batch;
             let xe: Vec<f32> = (0..eb * 784).map(|_| prng.normal() as f32 * 0.3).collect();
-            let s = bench("runtime: predict (B=256)", 1, 10, || {
+            let name = "runtime: predict (B=256)";
+            let s = bench(name, 1, 10, || {
                 black_box(engine.predict(&params, &xe).unwrap());
             });
-            report_throughput("predict (examples)", eb as f64, &s);
+            let tp = report_throughput("predict (examples)", eb as f64, &s);
+            sink.push(name, &s, Some(tp));
         }
         Err(e) => println!("\n(runtime benches skipped — {e})"),
+    }
+
+    match sink.write_json(JSON_OUT) {
+        Ok(()) => println!("\nwrote {JSON_OUT}"),
+        Err(e) => eprintln!("\nfailed to write {JSON_OUT}: {e}"),
     }
 }

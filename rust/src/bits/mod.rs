@@ -13,6 +13,13 @@
 //!   the "second bit") is always 0, so the receiver *forces* it to 0
 //!   regardless of what was decoded (Fig. 1), optionally followed by a
 //!   magnitude clamp to the known gradient range.
+//!
+//! Packing and interleaving are word-parallel: floats enter the stream as
+//! bit-reversed 32-bit halves of `u64` words (two floats per word) and
+//! the interleaver walks precomputed permutation tables, assembling each
+//! output word in a register instead of issuing per-bit `get`/`set`
+//! calls. The per-bit originals survive under `#[cfg(test)]` as
+//! reference oracles.
 
 pub mod stream;
 
@@ -54,36 +61,73 @@ pub const BITS_PER_F32: usize = 32;
 /// Pack a slice of floats into an MSB-first bit vector.
 pub fn pack_f32s(xs: &[f32]) -> BitVec {
     let mut bv = BitVec::with_capacity(xs.len() * BITS_PER_F32);
-    for &x in xs {
-        bv.push_u32_msb(x.to_bits());
-    }
+    pack_f32s_into(xs, &mut bv);
     bv
+}
+
+/// Pack into an existing vector (cleared first), reusing its allocation.
+/// Word-parallel: two floats per backing word.
+pub fn pack_f32s_into(xs: &[f32], out: &mut BitVec) {
+    out.clear();
+    let mut pairs = xs.chunks_exact(2);
+    for pair in &mut pairs {
+        let lo = pair[0].to_bits().reverse_bits() as u64;
+        let hi = pair[1].to_bits().reverse_bits() as u64;
+        out.push_bits_lsb(lo | (hi << 32), 64);
+    }
+    if let [last] = pairs.remainder() {
+        out.push_bits_lsb(last.to_bits().reverse_bits() as u64, 32);
+    }
 }
 
 /// Unpack an MSB-first bit vector back into floats. The bit length must be
 /// a multiple of 32.
 pub fn unpack_f32s(bv: &BitVec) -> Vec<f32> {
+    let mut out = Vec::with_capacity(bv.len() / BITS_PER_F32);
+    unpack_f32s_into(bv, &mut out);
+    out
+}
+
+/// Unpack into an existing vector (cleared first), reusing its allocation.
+pub fn unpack_f32s_into(bv: &BitVec, out: &mut Vec<f32>) {
     assert!(
         bv.len() % BITS_PER_F32 == 0,
         "bit length {} not a multiple of 32",
         bv.len()
     );
     let n = bv.len() / BITS_PER_F32;
-    let mut out = Vec::with_capacity(n);
+    let words = bv.words();
+    out.clear();
+    out.reserve(n);
     for i in 0..n {
-        out.push(f32::from_bits(bv.get_u32_msb(i * BITS_PER_F32)));
+        let w = words[i >> 1];
+        let half = if i & 1 == 0 { w as u32 } else { (w >> 32) as u32 };
+        out.push(f32::from_bits(half.reverse_bits()));
     }
-    out
 }
 
 /// Rectangular block interleaver: write row-major into an R x C matrix,
 /// read column-major. De-interleaving applies the inverse permutation.
 /// Spreads a burst of `b` adjacent channel errors across ~`b` different
 /// rows, i.e. across different floats/codewords (paper §IV-A).
+///
+/// `cols` is the *spread*: adjacent bits in the interleaved (air) domain
+/// come from original-stream positions `cols` apart, so any spread >= 33
+/// puts every bit of an air-domain burst of length <= `rows` into a
+/// distinct float.
+///
+/// Construction precomputes the forward and inverse permutation tables,
+/// so `interleave`/`deinterleave` are straight word-assembling gathers.
+/// Build one interleaver per payload shape and reuse it (the transport
+/// caches it in [`crate::transport::TxScratch`]).
 #[derive(Clone, Debug)]
 pub struct BlockInterleaver {
     rows: usize,
     cols: usize,
+    /// `fwd[k]` = original-stream index feeding interleaved position `k`.
+    fwd: Vec<u32>,
+    /// `inv[j]` = interleaved position feeding original index `j`.
+    inv: Vec<u32>,
 }
 
 impl BlockInterleaver {
@@ -91,14 +135,28 @@ impl BlockInterleaver {
     /// the payload size.
     pub fn new(rows: usize, cols: usize) -> Self {
         assert!(rows > 0 && cols > 0);
-        BlockInterleaver { rows, cols }
+        let cap = rows * cols;
+        assert!(cap <= u32::MAX as usize, "interleaver capacity overflow");
+        let mut fwd = Vec::with_capacity(cap);
+        for c in 0..cols {
+            for r in 0..rows {
+                fwd.push((r * cols + c) as u32);
+            }
+        }
+        let mut inv = vec![0u32; cap];
+        for (k, &src) in fwd.iter().enumerate() {
+            inv[src as usize] = k as u32;
+        }
+        BlockInterleaver { rows, cols, fwd, inv }
     }
 
-    /// Interleaver sized for `n` bits with spreading depth `depth`:
-    /// rows = depth, cols = ceil(n / depth).
-    pub fn for_len(n: usize, depth: usize) -> Self {
-        let depth = depth.max(1);
-        BlockInterleaver::new(depth, n.div_ceil(depth))
+    /// Interleaver sized for `n` bits with spreading depth `spread`:
+    /// rows = ceil(n / spread), cols = spread — the same convention
+    /// `Transport` uses, so adjacent air-domain bits are `spread` apart
+    /// in the original stream.
+    pub fn for_len(n: usize, spread: usize) -> Self {
+        let spread = spread.max(1);
+        BlockInterleaver::new(n.div_ceil(spread).max(1), spread)
     }
 
     fn capacity(&self) -> usize {
@@ -108,37 +166,49 @@ impl BlockInterleaver {
     /// Interleave. Payload shorter than R*C is padded with zeros that the
     /// matching [`Self::deinterleave`] strips again.
     pub fn interleave(&self, bits: &BitVec) -> BitVec {
+        let mut out = BitVec::new();
+        self.interleave_into(bits, &mut out);
+        out
+    }
+
+    /// Interleave into an existing vector, reusing its allocation.
+    pub fn interleave_into(&self, bits: &BitVec, out: &mut BitVec) {
         let n = bits.len();
         assert!(n <= self.capacity(), "payload {} > capacity {}", n, self.capacity());
-        let mut out = BitVec::zeros(self.capacity());
-        let mut k = 0usize;
-        // Read column-major from the conceptual row-major matrix.
-        for c in 0..self.cols {
-            for r in 0..self.rows {
-                let src = r * self.cols + c;
-                let bit = if src < n { bits.get(src) } else { false };
-                out.set(k, bit);
-                k += 1;
-            }
-        }
-        out.truncate(self.capacity());
-        out
+        out.reset_zeros(self.capacity());
+        gather(&self.fwd, bits, out, n);
     }
 
     /// Inverse of [`Self::interleave`]; `orig_len` strips the pad.
     pub fn deinterleave(&self, bits: &BitVec, orig_len: usize) -> BitVec {
+        let mut out = BitVec::new();
+        self.deinterleave_into(bits, orig_len, &mut out);
+        out
+    }
+
+    /// De-interleave into an existing vector, reusing its allocation.
+    pub fn deinterleave_into(&self, bits: &BitVec, orig_len: usize, out: &mut BitVec) {
         assert_eq!(bits.len(), self.capacity());
-        let mut out = BitVec::zeros(self.capacity());
-        let mut k = 0usize;
-        for c in 0..self.cols {
-            for r in 0..self.rows {
-                let dst = r * self.cols + c;
-                out.set(dst, bits.get(k));
-                k += 1;
+        out.reset_zeros(self.capacity());
+        gather(&self.inv, bits, out, bits.len());
+        out.truncate(orig_len);
+    }
+}
+
+/// Word-assembling permutation gather: `out[k] = src[table[k]]`, with
+/// source positions `>= src_len` reading as zero (the interleaver pad).
+fn gather(table: &[u32], src: &BitVec, out: &mut BitVec, src_len: usize) {
+    let src_words = src.words();
+    let out_words = out.words_mut();
+    for (ow, chunk) in out_words.iter_mut().zip(table.chunks(64)) {
+        let mut w = 0u64;
+        for (j, &s) in chunk.iter().enumerate() {
+            let s = s as usize;
+            if s < src_len {
+                w |= ((src_words[s >> 6] >> (s & 63)) & 1) << j;
             }
         }
-        out.truncate(orig_len);
-        out
+        *ow = w;
     }
 }
 
@@ -227,6 +297,14 @@ pub fn bit_class(i: usize) -> BitClass {
     }
 }
 
+/// Per-`u64` masks of the sign / exponent / fraction wire positions. The
+/// 32-bit float layout repeats with period 32, which divides 64, so each
+/// class is a single word constant: error anatomy over a whole payload is
+/// XOR + AND + popcount per word instead of a per-bit classify loop.
+pub const SIGN_MASK_U64: u64 = 0x0000_0001_0000_0001;
+pub const EXP_MASK_U64: u64 = 0x0000_01FE_0000_01FE;
+pub const FRAC_MASK_U64: u64 = !(SIGN_MASK_U64 | EXP_MASK_U64);
+
 /// Expected absolute value change from flipping wire bit `pos` of `x` —
 /// used by tests and the importance-mapping analysis.
 pub fn flip_impact(x: f32, pos: usize) -> f32 {
@@ -242,6 +320,68 @@ pub fn flip_impact(x: f32, pos: usize) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Per-bit reference implementations retained as oracles.
+    mod reference {
+        use super::{BitVec, BITS_PER_F32};
+
+        pub fn pack_f32s(xs: &[f32]) -> BitVec {
+            let mut bv = BitVec::with_capacity(xs.len() * BITS_PER_F32);
+            for &x in xs {
+                let b = x.to_bits();
+                for k in (0..32).rev() {
+                    bv.push((b >> k) & 1 == 1);
+                }
+            }
+            bv
+        }
+
+        pub fn unpack_f32s(bv: &BitVec) -> Vec<f32> {
+            assert!(bv.len() % BITS_PER_F32 == 0);
+            let n = bv.len() / BITS_PER_F32;
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut x = 0u32;
+                for k in 0..32 {
+                    x = (x << 1) | bv.get(i * BITS_PER_F32 + k) as u32;
+                }
+                out.push(f32::from_bits(x));
+            }
+            out
+        }
+
+        pub fn interleave(rows: usize, cols: usize, bits: &BitVec) -> BitVec {
+            let n = bits.len();
+            let cap = rows * cols;
+            assert!(n <= cap);
+            let mut out = BitVec::zeros(cap);
+            let mut k = 0usize;
+            for c in 0..cols {
+                for r in 0..rows {
+                    let src = r * cols + c;
+                    let bit = if src < n { bits.get(src) } else { false };
+                    out.set(k, bit);
+                    k += 1;
+                }
+            }
+            out
+        }
+
+        pub fn deinterleave(rows: usize, cols: usize, bits: &BitVec, orig_len: usize) -> BitVec {
+            let cap = rows * cols;
+            assert_eq!(bits.len(), cap);
+            let mut out = BitVec::zeros(cap);
+            let mut k = 0usize;
+            for c in 0..cols {
+                for r in 0..rows {
+                    out.set(r * cols + c, bits.get(k));
+                    k += 1;
+                }
+            }
+            out.truncate(orig_len);
+            out
+        }
+    }
 
     #[test]
     fn fields_roundtrip() {
@@ -274,6 +414,19 @@ mod tests {
     }
 
     #[test]
+    fn pack_unpack_match_per_bit_reference() {
+        let mut rng = crate::rng::Rng::new(0xF32);
+        // Odd and even float counts exercise the half-word tail.
+        for n in [1usize, 2, 3, 64, 65, 683] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_scaled(0.0, 0.4) as f32).collect();
+            let fast = pack_f32s(&xs);
+            let slow = reference::pack_f32s(&xs);
+            assert_eq!(fast, slow, "n {n}");
+            assert_eq!(unpack_f32s(&fast), reference::unpack_f32s(&slow), "n {n}");
+        }
+    }
+
+    #[test]
     fn wire_bit_order_is_msb_first() {
         // 2.0f32 has exactly one set bit: word bit 30 => wire bit 1.
         let bv = pack_f32s(&[2.0]);
@@ -302,10 +455,43 @@ mod tests {
     }
 
     #[test]
+    fn interleaver_matches_per_bit_reference() {
+        let mut rng = crate::rng::Rng::new(0x11EA);
+        for &(rows, cols) in &[(1usize, 1usize), (5, 7), (64, 32), (100, 37), (13, 64)] {
+            let cap = rows * cols;
+            for n in [cap, cap - cap / 3, 1] {
+                let bits: BitVec = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+                let il = BlockInterleaver::new(rows, cols);
+                let tx = il.interleave(&bits);
+                assert_eq!(tx, reference::interleave(rows, cols, &bits), "{rows}x{cols} n {n}");
+                let rx = il.deinterleave(&tx, n);
+                assert_eq!(
+                    rx,
+                    reference::deinterleave(rows, cols, &tx, n),
+                    "{rows}x{cols} n {n}"
+                );
+                assert_eq!(rx, bits);
+            }
+        }
+    }
+
+    #[test]
+    fn for_len_matches_transport_convention() {
+        // Regression for the transposed-constructor bug: `for_len(n, s)`
+        // must build the same interleaver `Transport::send_erroneous`
+        // builds, rows = ceil(n/s) and cols = s.
+        for (n, s) in [(21_840 * 32, 37), (1000, 8), (37, 37), (5, 64)] {
+            let a = BlockInterleaver::for_len(n, s);
+            let b = BlockInterleaver::new(n.div_ceil(s).max(1), s);
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols), "n {n} s {s}");
+        }
+    }
+
+    #[test]
     fn interleaver_spreads_bursts() {
         // A burst of 8 adjacent errors in the interleaved domain must land
         // in >= 8 distinct rows (here: distinct 32-bit words) after
-        // de-interleaving when depth >= burst length.
+        // de-interleaving when the spread >= the word size.
         let n = 32 * 64; // 64 floats
         let zeros = BitVec::zeros(n);
         let il = BlockInterleaver::for_len(n, 32);
@@ -317,6 +503,55 @@ mod tests {
         let words: std::collections::HashSet<usize> =
             (0..n).filter(|&i| rx.get(i)).map(|i| i / 32).collect();
         assert_eq!(words.len(), 8, "burst not spread: {words:?}");
+    }
+
+    #[test]
+    fn for_len_spreads_bursts_across_distinct_floats() {
+        // The documented property behind `interleave_spread = 37`: every
+        // air-domain burst no longer than `rows` de-interleaves onto
+        // distinct floats because adjacent air bits are 37 (> 32)
+        // original positions apart.
+        let floats = 256;
+        let n = floats * 32;
+        let spread = 37;
+        let il = BlockInterleaver::for_len(n, spread);
+        let rows = n.div_ceil(spread);
+        for &(start, blen) in &[(0usize, 8usize), (1234, 33), (n - 50, 40), (777, 64)] {
+            let mut tx = il.interleave(&BitVec::zeros(n));
+            for i in start..(start + blen).min(tx.len()) {
+                tx.set(i, true);
+            }
+            let rx = il.deinterleave(&tx, n);
+            let burst_in_payload = rx.count_ones(); // pad positions drop
+            let hit: std::collections::HashSet<usize> =
+                (0..n).filter(|&i| rx.get(i)).map(|i| i / 32).collect();
+            assert!(blen <= rows, "test burst fits one column run");
+            assert_eq!(
+                hit.len(),
+                burst_in_payload,
+                "burst at {start}+{blen} hit a float twice: {hit:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_anatomy_masks_match_bit_class() {
+        for j in 0..64usize {
+            let m = 1u64 << j;
+            let expect = bit_class(j % 32);
+            let got = if SIGN_MASK_U64 & m != 0 {
+                BitClass::Sign
+            } else if EXP_MASK_U64 & m != 0 {
+                BitClass::Exponent
+            } else {
+                assert!(FRAC_MASK_U64 & m != 0);
+                BitClass::Fraction
+            };
+            assert_eq!(got, expect, "bit {j}");
+        }
+        assert_eq!(SIGN_MASK_U64 | EXP_MASK_U64 | FRAC_MASK_U64, u64::MAX);
+        assert_eq!(SIGN_MASK_U64 & EXP_MASK_U64, 0);
+        assert_eq!(EXP_MASK_U64 & FRAC_MASK_U64, 0);
     }
 
     #[test]

@@ -4,6 +4,17 @@
 //! Bit index 0 is the first bit on the wire. Within the backing words,
 //! bit `i` lives at word `i / 64`, bit `i % 64` (LSB-first in the word;
 //! the MSB-first float packing is handled by the callers).
+//!
+//! All bulk operations (`push_u32_msb`, `get_u32_msb`, `push_bits_lsb`,
+//! `get_bits_lsb`, `extend`, `slice`) are word-parallel: they move up to
+//! 64 bits per shift/mask instead of looping bit by bit. The original
+//! per-bit implementations are kept under `#[cfg(test)]` as reference
+//! oracles so equivalence stays provable.
+//!
+//! Invariant: `words.len() == len.div_ceil(64)` and every bit at index
+//! `>= len` inside the last word is zero. All mutators preserve this;
+//! [`BitVec::words_mut`] hands out raw words and makes the *caller*
+//! responsible for keeping the tail clean.
 
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct BitVec {
@@ -31,6 +42,25 @@ impl BitVec {
         }
     }
 
+    /// Build from raw words; `words.len()` must equal `len.div_ceil(64)`.
+    /// Tail bits beyond `len` in the last word are cleared.
+    pub fn from_words(mut words: Vec<u64>, len: usize) -> Self {
+        assert_eq!(
+            words.len(),
+            len.div_ceil(64),
+            "word count {} does not cover {} bits",
+            words.len(),
+            len
+        );
+        let tail = len & 63;
+        if tail != 0 {
+            if let Some(w) = words.last_mut() {
+                *w &= (1u64 << tail) - 1;
+            }
+        }
+        BitVec { words, len }
+    }
+
     /// Build from a bool slice.
     pub fn from_bools(bs: &[bool]) -> Self {
         let mut bv = BitVec::with_capacity(bs.len());
@@ -48,6 +78,19 @@ impl BitVec {
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    /// Reset to `n` zero bits, reusing the existing allocation.
+    pub fn reset_zeros(&mut self, n: usize) {
+        self.words.clear();
+        self.words.resize(n.div_ceil(64), 0);
+        self.len = n;
+    }
+
+    /// Reset to an empty vector, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.len = 0;
     }
 
     #[inline]
@@ -87,26 +130,57 @@ impl BitVec {
     }
 
     /// Append the 32 bits of `x`, most significant first (wire order for
-    /// IEEE-754 words).
+    /// IEEE-754 words). Word-parallel: one reverse + one word insert.
+    #[inline]
     pub fn push_u32_msb(&mut self, x: u32) {
-        for k in (0..32).rev() {
-            self.push((x >> k) & 1 == 1);
-        }
+        // Wire bit `len + j` must be bit `31 - j` of `x`; in the LSB-first
+        // word layout that is exactly the bit-reversal of `x`.
+        self.push_bits_lsb(x.reverse_bits() as u64, 32);
     }
 
     /// Read 32 bits starting at `pos`, MSB-first.
+    #[inline]
     pub fn get_u32_msb(&self, pos: usize) -> u32 {
-        let mut x = 0u32;
-        for k in 0..32 {
-            x = (x << 1) | self.get(pos + k) as u32;
-        }
-        x
+        debug_assert!(pos + 32 <= self.len);
+        (self.get_bits_lsb(pos, 32) as u32).reverse_bits()
     }
 
-    /// Append `k` bits of `x`, LSB-first (generic small-field helper).
+    /// Append the low `k` bits of `x` (`k <= 64`), LSB-first. One or two
+    /// word operations regardless of `k`.
+    #[inline]
     pub fn push_bits_lsb(&mut self, x: u64, k: usize) {
-        for i in 0..k {
-            self.push((x >> i) & 1 == 1);
+        debug_assert!(k <= 64);
+        if k == 0 {
+            return;
+        }
+        let x = if k < 64 { x & ((1u64 << k) - 1) } else { x };
+        let off = self.len & 63;
+        if off == 0 {
+            self.words.push(x);
+        } else {
+            *self.words.last_mut().unwrap() |= x << off;
+            if off + k > 64 {
+                self.words.push(x >> (64 - off));
+            }
+        }
+        self.len += k;
+    }
+
+    /// Read `k <= 64` bits starting at `pos`, LSB-first. Positions at or
+    /// beyond `len` read as zero (the modulation-pad convention).
+    #[inline]
+    pub fn get_bits_lsb(&self, pos: usize, k: usize) -> u64 {
+        debug_assert!((1..=64).contains(&k));
+        let w = pos >> 6;
+        let off = pos & 63;
+        let mut v = self.words.get(w).copied().unwrap_or(0) >> off;
+        if off + k > 64 {
+            v |= self.words.get(w + 1).copied().unwrap_or(0) << (64 - off);
+        }
+        if k < 64 {
+            v & ((1u64 << k) - 1)
+        } else {
+            v
         }
     }
 
@@ -125,21 +199,32 @@ impl BitVec {
         }
     }
 
-    /// Append the contents of `other`.
+    /// Append the contents of `other` (word-parallel).
     pub fn extend(&mut self, other: &BitVec) {
-        for i in 0..other.len {
-            self.push(other.get(i));
+        if self.len & 63 == 0 {
+            self.words.extend_from_slice(&other.words);
+            self.len += other.len;
+            return;
+        }
+        let mut remaining = other.len;
+        for &w in &other.words {
+            let k = remaining.min(64);
+            self.push_bits_lsb(w, k);
+            remaining -= k;
         }
     }
 
-    /// Sub-range copy [start, start+n).
+    /// Sub-range copy [start, start+n) — word-parallel gather.
     pub fn slice(&self, start: usize, n: usize) -> BitVec {
         assert!(start + n <= self.len);
-        let mut out = BitVec::with_capacity(n);
-        for i in 0..n {
-            out.push(self.get(start + i));
+        let mut words = Vec::with_capacity(n.div_ceil(64));
+        let mut got = 0;
+        while got < n {
+            let k = (n - got).min(64);
+            words.push(self.get_bits_lsb(start + got, k));
+            got += k;
         }
-        out
+        BitVec { words, len: n }
     }
 
     /// Number of set bits.
@@ -174,6 +259,14 @@ impl BitVec {
     pub fn words(&self) -> &[u64] {
         &self.words
     }
+
+    /// Raw mutable word view for word-parallel writers (the interleaver,
+    /// the demodulator). Contract: callers must leave every bit at index
+    /// `>= len()` in the last word zero, or `PartialEq`/`count_ones`
+    /// break.
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
 }
 
 impl FromIterator<bool> for BitVec {
@@ -189,6 +282,54 @@ impl FromIterator<bool> for BitVec {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Per-bit reference implementations (the pre-vectorization code
+    /// paths), kept as oracles for the word-parallel fast paths.
+    mod reference {
+        use super::BitVec;
+
+        pub fn push_u32_msb(bv: &mut BitVec, x: u32) {
+            for k in (0..32).rev() {
+                bv.push((x >> k) & 1 == 1);
+            }
+        }
+
+        pub fn get_u32_msb(bv: &BitVec, pos: usize) -> u32 {
+            let mut x = 0u32;
+            for k in 0..32 {
+                x = (x << 1) | bv.get(pos + k) as u32;
+            }
+            x
+        }
+
+        pub fn push_bits_lsb(bv: &mut BitVec, x: u64, k: usize) {
+            for i in 0..k {
+                bv.push((x >> i) & 1 == 1);
+            }
+        }
+
+        pub fn extend(bv: &mut BitVec, other: &BitVec) {
+            for i in 0..other.len() {
+                bv.push(other.get(i));
+            }
+        }
+
+        pub fn slice(bv: &BitVec, start: usize, n: usize) -> BitVec {
+            assert!(start + n <= bv.len());
+            let mut out = BitVec::with_capacity(n);
+            for i in 0..n {
+                out.push(bv.get(start + i));
+            }
+            out
+        }
+    }
+
+    /// Lengths that exercise the word boundaries and ragged tails.
+    const TAIL_LENGTHS: [usize; 6] = [1, 31, 63, 64, 65, 2048 + 5];
+
+    fn random_bits(rng: &mut crate::rng::Rng, n: usize) -> BitVec {
+        (0..n).map(|_| rng.bernoulli(0.5)).collect()
+    }
 
     #[test]
     fn push_get_set() {
@@ -216,6 +357,52 @@ mod tests {
         for (i, &v) in vals.iter().enumerate() {
             assert_eq!(bv.get_u32_msb(i * 32), v);
         }
+    }
+
+    #[test]
+    fn u32_msb_matches_reference_at_ragged_offsets() {
+        let mut rng = crate::rng::Rng::new(0xA11CE);
+        for &prefix in &TAIL_LENGTHS {
+            let mut fast = random_bits(&mut rng, prefix);
+            let mut slow = fast.clone();
+            let vals = [0u32, 1, 0x8000_0000, 0xDEAD_BEEF, u32::MAX, 0x0F0F_1234];
+            for &v in &vals {
+                fast.push_u32_msb(v);
+                reference::push_u32_msb(&mut slow, v);
+            }
+            assert_eq!(fast, slow, "prefix {prefix}");
+            for (i, &v) in vals.iter().enumerate() {
+                let pos = prefix + i * 32;
+                assert_eq!(fast.get_u32_msb(pos), v, "prefix {prefix} i {i}");
+                assert_eq!(reference::get_u32_msb(&fast, pos), v);
+            }
+        }
+    }
+
+    #[test]
+    fn push_bits_lsb_matches_reference() {
+        let mut rng = crate::rng::Rng::new(0xB0B);
+        for &prefix in &TAIL_LENGTHS {
+            for k in [0usize, 1, 7, 32, 33, 63, 64] {
+                let mut fast = random_bits(&mut rng, prefix);
+                let mut slow = fast.clone();
+                let x = rng.next_u64();
+                fast.push_bits_lsb(x, k);
+                reference::push_bits_lsb(&mut slow, x, k);
+                assert_eq!(fast, slow, "prefix {prefix} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn get_bits_lsb_pads_with_zeros() {
+        let bv = BitVec::from_bools(&[true; 5]);
+        assert_eq!(bv.get_bits_lsb(0, 8), 0b0001_1111);
+        assert_eq!(bv.get_bits_lsb(4, 8), 0b0000_0001);
+        assert_eq!(bv.get_bits_lsb(5, 8), 0);
+        // Reads past the allocated words are all-zero too.
+        assert_eq!(bv.get_bits_lsb(64, 64), 0);
+        assert_eq!(bv.get_bits_lsb(130, 3), 0);
     }
 
     #[test]
@@ -253,5 +440,51 @@ mod tests {
         let mut b = BitVec::from_bools(&[false]);
         b.extend(&s);
         assert_eq!(b, BitVec::from_bools(&[false, true, false, true]));
+    }
+
+    #[test]
+    fn slice_and_extend_match_reference_across_tails() {
+        let mut rng = crate::rng::Rng::new(0x51CE);
+        for &n in &TAIL_LENGTHS {
+            let a = random_bits(&mut rng, n);
+            // Slices at ragged starts/lengths.
+            for &(start_frac, len_frac) in &[(0usize, 1usize), (1, 2), (3, 4)] {
+                let start = (n * start_frac / 4).min(n);
+                let take = (n * len_frac / 4).min(n - start);
+                assert_eq!(
+                    a.slice(start, take),
+                    reference::slice(&a, start, take),
+                    "n {n} start {start} take {take}"
+                );
+            }
+            // Extends onto ragged prefixes.
+            for &prefix in &[0usize, 1, 63, 64, 65] {
+                let mut fast = random_bits(&mut rng, prefix);
+                let mut slow = fast.clone();
+                fast.extend(&a);
+                reference::extend(&mut slow, &a);
+                assert_eq!(fast, slow, "n {n} prefix {prefix}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_words_masks_tail_and_roundtrips() {
+        let bv = BitVec::from_words(vec![u64::MAX, u64::MAX], 65);
+        assert_eq!(bv.len(), 65);
+        assert_eq!(bv.count_ones(), 65);
+        assert_eq!(bv.words(), &[u64::MAX, 1]);
+        let again = BitVec::from_words(bv.words().to_vec(), bv.len());
+        assert_eq!(again, bv);
+    }
+
+    #[test]
+    fn reset_zeros_reuses_and_clears() {
+        let mut bv = BitVec::from_bools(&[true; 130]);
+        bv.reset_zeros(70);
+        assert_eq!(bv, BitVec::zeros(70));
+        bv.clear();
+        assert!(bv.is_empty());
+        assert_eq!(bv, BitVec::new());
     }
 }

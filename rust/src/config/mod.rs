@@ -64,6 +64,10 @@ pub struct ExperimentConfig {
     pub data_dir: String,
     /// Client minibatch per round (must match the train_step artifact).
     pub batch: usize,
+    /// Worker threads for the per-round client fan-out: 0 = one per
+    /// available core, 1 = serial. Any value produces bit-identical
+    /// traces (per-client RNG substreams + ordered aggregation).
+    pub parallel_clients: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -93,6 +97,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             data_dir: "data/mnist".into(),
             batch: 64,
+            parallel_clients: 0,
         }
     }
 }
@@ -211,6 +216,9 @@ impl ExperimentConfig {
             }
             "batch" | "fl.batch" => {
                 self.batch = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "parallel_clients" | "fl.parallel_clients" => {
+                self.parallel_clients = v.as_u64().ok_or_else(|| bad(key, v))? as usize
             }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }

@@ -6,6 +6,25 @@
 //! the configured wireless transport (the experimental variable), the PS
 //! aggregates with |D_m|/|D| weights (eq. 5) and applies SGD (eq. 6).
 //! The downlink broadcast is error-free (paper §II-B justification).
+//!
+//! # Parallel client fan-out and determinism
+//!
+//! The per-client compute + uplink phase fans out across
+//! `std::thread::scope` workers (`ExperimentConfig::parallel_clients`;
+//! 0 = one per core, 1 = serial). This is safe and **bit-deterministic**
+//! by construction:
+//!
+//! * every stochastic draw a client makes comes from its own seeded RNG
+//!   substream (`root_rng.substream("batch"/"channel", client, round)`),
+//!   so no client observes another's scheduling;
+//! * `Transport::send_with` is documented re-entrant, and each worker
+//!   owns a private [`TxScratch`];
+//! * aggregation (the only floating-point reduction) always runs on the
+//!   coordinator thread in selection order, after all workers join.
+//!
+//! Consequently a parallel `run_round` produces a `Trace` bit-identical
+//! to the serial path for the same seed — `tests/parallel_it.rs` holds
+//! this contract.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::ClientState;
@@ -15,7 +34,7 @@ use crate::model::ParamSet;
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::timing::Ledger;
-use crate::transport::Transport;
+use crate::transport::{Transport, TxReport, TxScratch};
 use crate::Result;
 
 /// Aggregated observables of one round.
@@ -31,6 +50,15 @@ pub struct RoundOutcome {
     pub grad_max_abs: f32,
 }
 
+/// What one client contributes to a round before aggregation.
+struct ClientPass {
+    loss: f32,
+    grad_max: f32,
+    /// Received (post-transport) flattened gradient.
+    rx: Vec<f32>,
+    report: TxReport,
+}
+
 /// The FL control plane.
 pub struct FlServer<'e> {
     pub cfg: ExperimentConfig,
@@ -43,6 +71,10 @@ pub struct FlServer<'e> {
     root_rng: Rng,
     /// Total examples across all clients (aggregation denominator |D|).
     total_data: usize,
+    /// One transport workspace per worker slot, persisted across rounds
+    /// so the interleaver tables and bit buffers are built exactly once
+    /// per experiment (scratch contents never influence results).
+    scratch_pool: Vec<TxScratch>,
 }
 
 impl<'e> FlServer<'e> {
@@ -68,6 +100,7 @@ impl<'e> FlServer<'e> {
             ledger: Ledger::new(),
             root_rng,
             total_data,
+            scratch_pool: Vec::new(),
         })
     }
 
@@ -96,6 +129,39 @@ impl<'e> FlServer<'e> {
         }
     }
 
+    /// Worker threads for `jobs` parallel client passes.
+    fn worker_count(&self, jobs: usize) -> usize {
+        let cap = match self.cfg.parallel_clients {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        cap.min(jobs).max(1)
+    }
+
+    /// One client's full round contribution: minibatch gradient (eq. 4)
+    /// plus the wireless uplink. Pure w.r.t. the server state (`&self`)
+    /// and deterministic given `(client, round)` — all randomness comes
+    /// from substreams keyed on those, so this is safe to run on any
+    /// worker thread.
+    fn client_pass(&self, ci: usize, round: usize, scratch: &mut TxScratch) -> Result<ClientPass> {
+        let client = &self.clients[ci];
+        // Local computation (eq. 4): one minibatch gradient.
+        let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
+        let (x, y) = client.gather(
+            &self.data.train,
+            self.cfg.batch,
+            self.engine.manifest.num_classes,
+            &mut brng,
+        );
+        let (loss, grads) = self.engine.train_step(&self.params, &x, &y)?;
+
+        // Uplink over the wireless substrate.
+        let flat = grads.flatten();
+        let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
+        let (rx, report) = self.transport.send_with(&flat, &mut crng, scratch);
+        Ok(ClientPass { loss, grad_max: grads.max_abs(), rx, report })
+    }
+
     /// Execute one full FL round.
     pub fn run_round(&mut self, round: usize) -> Result<RoundOutcome> {
         let selected = self.select(round);
@@ -103,41 +169,69 @@ impl<'e> FlServer<'e> {
             selected.iter().map(|&c| self.clients[c].data_size()).sum();
         let _ = self.total_data; // |D| fixed; weights below use the round's selection
 
+        // Phase 1 — per-client compute + uplink, fanned out over scoped
+        // workers on contiguous chunks of the selection. `results[i]`
+        // always holds client `selected[i]`'s pass regardless of which
+        // worker ran it.
+        let workers = self.worker_count(selected.len());
+        let mut results: Vec<Option<Result<ClientPass>>> = Vec::new();
+        results.resize_with(selected.len(), || None);
+        // Detach the scratch pool from `self` so workers can hold `&self`
+        // alongside their `&mut TxScratch` slice elements.
+        let mut pool = std::mem::take(&mut self.scratch_pool);
+        if pool.len() < workers {
+            pool.resize_with(workers, TxScratch::new);
+        }
+        if workers <= 1 {
+            let scratch = &mut pool[0];
+            for (slot, &ci) in results.iter_mut().zip(&selected) {
+                *slot = Some(self.client_pass(ci, round, scratch));
+            }
+        } else {
+            let this: &FlServer<'e> = &*self;
+            let chunk = selected.len().div_ceil(workers);
+            std::thread::scope(|s| {
+                for ((idxs, out), scratch) in selected
+                    .chunks(chunk)
+                    .zip(results.chunks_mut(chunk))
+                    .zip(pool.iter_mut())
+                {
+                    s.spawn(move || {
+                        for (slot, &ci) in out.iter_mut().zip(idxs) {
+                            *slot = Some(this.client_pass(ci, round, scratch));
+                        }
+                    });
+                }
+            });
+        }
+        self.scratch_pool = pool;
+
+        // Phase 2 — weighted aggregation (eq. 5) on the coordinator
+        // thread, in selection order: the float-summation order is fixed,
+        // so serial and parallel rounds agree bit-for-bit.
         let mut agg = ParamSet::zeros(&self.engine.manifest);
         let mut loss_sum = 0.0f64;
         let mut ber_sum = 0.0f64;
         let mut corrupted = 0.0f64;
         let mut retx = 0usize;
         let mut grad_max = 0.0f32;
-
-        for &ci in &selected {
-            let client = &self.clients[ci];
-            // Local computation (eq. 4): one minibatch gradient.
-            let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
-            let (x, y) = client.gather(
-                &self.data.train,
-                self.cfg.batch,
-                self.engine.manifest.num_classes,
-                &mut brng,
-            );
-            let (loss, grads) = self.engine.train_step(&self.params, &x, &y)?;
-            loss_sum += loss as f64;
-            grad_max = grad_max.max(grads.max_abs());
-
-            // Uplink over the wireless substrate.
-            let flat = grads.flatten();
-            let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
-            let (rx, report) = self.transport.send(&flat, &mut crng);
-            let rx_grads = grads.unflatten_like(&rx)?;
-
-            // Weighted aggregation (eq. 5).
-            let w = client.data_size() as f32 / selected_data as f32;
-            agg.axpy(w, &rx_grads);
-
-            self.ledger.record_client(report.seconds);
-            ber_sum += report.ber();
-            corrupted += report.corrupted_floats as f64 / flat.len() as f64;
-            retx += report.retransmissions;
+        for (slot, &ci) in results.iter_mut().zip(&selected) {
+            let pass = slot.take().expect("worker filled every slot")?;
+            if pass.rx.len() != agg.num_params() {
+                return Err(crate::Error::Shape(format!(
+                    "client {ci} delivered {} floats, model has {}",
+                    pass.rx.len(),
+                    agg.num_params()
+                )));
+            }
+            let w = self.clients[ci].data_size() as f32 / selected_data as f32;
+            agg.axpy_flat(w, &pass.rx);
+            loss_sum += pass.loss as f64;
+            grad_max = grad_max.max(pass.grad_max);
+            self.ledger.record_client(pass.report.seconds);
+            ber_sum += pass.report.ber();
+            corrupted += pass.report.corrupted_floats as f64 / pass.rx.len() as f64;
+            retx += pass.report.retransmissions;
         }
 
         // Global update (eq. 6); downlink assumed error-free.

@@ -93,6 +93,20 @@ impl Manifest {
     pub fn num_params(&self) -> usize {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
+
+    /// The paper's CNN schema (21,840 parameters in 8 tensors) — the same
+    /// contract `python/compile/aot.py` emits. Used by the synthetic
+    /// runtime backend and by tests that run without built artifacts.
+    pub fn paper() -> Manifest {
+        Manifest::parse(
+            "train_batch 64\neval_batch 256\nimage_hw 28\nnum_classes 10\n\
+             param conv1_w 10,1,5,5\nparam conv1_b 10\nparam conv2_w 20,10,5,5\n\
+             param conv2_b 20\nparam fc1_w 320,50\nparam fc1_b 50\n\
+             param fc2_w 50,10\nparam fc2_b 10\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .expect("paper manifest is well-formed")
+    }
 }
 
 #[cfg(test)]

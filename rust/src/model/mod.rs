@@ -123,6 +123,21 @@ impl ParamSet {
         }
     }
 
+    /// Weighted accumulate from a flattened vector in canonical tensor
+    /// order — bit-identical to `unflatten_like` + [`Self::axpy`] without
+    /// materializing the intermediate set.
+    pub fn axpy_flat(&mut self, weight: f32, flat: &[f32]) {
+        debug_assert_eq!(flat.len(), self.num_params());
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.data.len();
+            for (av, bv) in t.data.iter_mut().zip(&flat[off..off + n]) {
+                *av += weight * bv;
+            }
+            off += n;
+        }
+    }
+
     /// Scale all entries.
     pub fn scale(&mut self, s: f32) {
         for t in &mut self.tensors {
@@ -204,6 +219,18 @@ mod tests {
         let q = p.unflatten_like(&flat).unwrap();
         assert_eq!(p, q);
         assert!(p.unflatten_like(&flat[..100]).is_err());
+    }
+
+    #[test]
+    fn axpy_flat_matches_unflatten_axpy() {
+        let man = manifest();
+        let g = ParamSet::init(&man, &mut Rng::new(9));
+        let flat = g.flatten();
+        let mut a = ParamSet::zeros(&man);
+        let mut b = ParamSet::zeros(&man);
+        a.axpy(0.375, &g);
+        b.axpy_flat(0.375, &flat);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -94,6 +94,15 @@ pub fn gray_to_binary(mut g: u32) -> u32 {
 
 /// A gray-coded square-QAM constellation, amplitudes normalized to unit
 /// average symbol energy (E|s|^2 = 1).
+///
+/// Construction precomputes two lookup tables so the hot paths operate
+/// directly on the [`BitVec`] word representation:
+///
+/// * `point_lut[raw]` — the constellation point of the k-bit symbol whose
+///   bits arrive LSB-first as extracted straight from the stream words
+///   (`raw` is the bit-reversal of the MSB-first symbol index);
+/// * `bitrev_lut[sym]` — the k-bit reversal mapping a sliced MSB-first
+///   symbol back to the LSB-first field appended to the output words.
 #[derive(Clone, Debug)]
 pub struct Constellation {
     pub modulation: Modulation,
@@ -103,6 +112,10 @@ pub struct Constellation {
     inv_step: f64,
     half_bits: usize,
     levels: usize,
+    /// Constellation point per LSB-first raw k-bit field.
+    point_lut: Vec<Complex>,
+    /// k-bit reversal: MSB-first symbol -> LSB-first raw field.
+    bitrev_lut: Vec<u16>,
 }
 
 impl Constellation {
@@ -112,16 +125,29 @@ impl Constellation {
         // Es = 2 (L^2 - 1) / 3 for unnormalized odd-integer levels.
         let es = 2.0 * (lf * lf - 1.0) / 3.0;
         let scale = 1.0 / es.sqrt();
-        let amps = (0..levels)
+        let amps: Vec<f64> = (0..levels)
             .map(|l| (2.0 * l as f64 - (lf - 1.0)) * scale)
             .collect();
-        Constellation {
+        let mut con = Constellation {
             modulation,
             amps,
             inv_step: 1.0 / (2.0 * scale),
             half_bits: modulation.bits_per_symbol() / 2,
             levels,
-        }
+            point_lut: Vec::new(),
+            bitrev_lut: Vec::new(),
+        };
+        let k = modulation.bits_per_symbol() as u32;
+        let m = 1usize << k;
+        let bitrev: Vec<u16> = (0..m as u32)
+            .map(|sym| (sym.reverse_bits() >> (32 - k)) as u16)
+            .collect();
+        let points: Vec<Complex> = (0..m as u32)
+            .map(|raw| con.map_symbol(raw.reverse_bits() >> (32 - k)))
+            .collect();
+        con.bitrev_lut = bitrev;
+        con.point_lut = points;
+        con
     }
 
     /// Amplitude of per-axis level `l`.
@@ -167,37 +193,46 @@ impl Constellation {
 
     /// Modulate a bit stream, zero-padding the tail to a whole symbol.
     pub fn modulate(&self, bits: &BitVec) -> Vec<Complex> {
+        let mut out = Vec::new();
+        self.modulate_into(bits, &mut out);
+        out
+    }
+
+    /// Modulate into an existing buffer (cleared first), reusing its
+    /// allocation. Word-parallel: each symbol is one k-bit field extract
+    /// from the backing words plus one constellation-point table lookup
+    /// (`get_bits_lsb` reads the zero pad past the tail for free).
+    pub fn modulate_into(&self, bits: &BitVec, out: &mut Vec<Complex>) {
         let k = self.modulation.bits_per_symbol();
         let nsym = bits.len().div_ceil(k);
-        let mut out = Vec::with_capacity(nsym);
+        out.clear();
+        out.reserve(nsym);
         for s in 0..nsym {
-            let mut sym = 0u32;
-            for j in 0..k {
-                let idx = s * k + j;
-                let b = if idx < bits.len() { bits.get(idx) } else { false };
-                sym = (sym << 1) | b as u32;
-            }
-            out.push(self.map_symbol(sym));
+            let raw = bits.get_bits_lsb(s * k, k) as usize;
+            out.push(self.point_lut[raw]);
         }
-        out
     }
 
     /// Demodulate equalized symbols back to `nbits` bits (dropping the
     /// modulation pad).
     pub fn demodulate(&self, symbols: &[Complex], nbits: usize) -> BitVec {
+        let mut out = BitVec::new();
+        self.demodulate_into(symbols, nbits, &mut out);
+        out
+    }
+
+    /// Demodulate into an existing bit vector (cleared first), reusing its
+    /// allocation. Output words are assembled k bits at a time through the
+    /// reversal table instead of per-bit pushes.
+    pub fn demodulate_into(&self, symbols: &[Complex], nbits: usize, out: &mut BitVec) {
         let k = self.modulation.bits_per_symbol();
         assert!(symbols.len() * k >= nbits, "not enough symbols");
-        let mut out = BitVec::with_capacity(nbits);
-        'outer: for &y in symbols {
+        out.clear();
+        for &y in &symbols[..nbits.div_ceil(k)] {
             let sym = self.slice_symbol(y);
-            for j in (0..k).rev() {
-                if out.len() == nbits {
-                    break 'outer;
-                }
-                out.push((sym >> j) & 1 == 1);
-            }
+            out.push_bits_lsb(self.bitrev_lut[sym as usize] as u64, k);
         }
-        out
+        out.truncate(nbits);
     }
 
     /// All M constellation points indexed by symbol bits.
@@ -211,6 +246,72 @@ impl Constellation {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    /// Per-bit reference modulate/demodulate (the pre-LUT code paths).
+    mod reference {
+        use super::{BitVec, Complex, Constellation};
+
+        pub fn modulate(con: &Constellation, bits: &BitVec) -> Vec<Complex> {
+            let k = con.modulation.bits_per_symbol();
+            let nsym = bits.len().div_ceil(k);
+            let mut out = Vec::with_capacity(nsym);
+            for s in 0..nsym {
+                let mut sym = 0u32;
+                for j in 0..k {
+                    let idx = s * k + j;
+                    let b = if idx < bits.len() { bits.get(idx) } else { false };
+                    sym = (sym << 1) | b as u32;
+                }
+                out.push(con.map_symbol(sym));
+            }
+            out
+        }
+
+        pub fn demodulate(con: &Constellation, symbols: &[Complex], nbits: usize) -> BitVec {
+            let k = con.modulation.bits_per_symbol();
+            assert!(symbols.len() * k >= nbits);
+            let mut out = BitVec::with_capacity(nbits);
+            'outer: for &y in symbols {
+                let sym = con.slice_symbol(y);
+                for j in (0..k).rev() {
+                    if out.len() == nbits {
+                        break 'outer;
+                    }
+                    out.push((sym >> j) & 1 == 1);
+                }
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn word_parallel_matches_per_bit_reference() {
+        // Satellite coverage: every modulation x lengths that exercise
+        // ragged word tails and partial final symbols.
+        let mut rng = Rng::new(0x30D);
+        for m in Modulation::ALL {
+            let con = Constellation::new(m);
+            for &n in &[1usize, 31, 63, 64, 65, 2048 + 5] {
+                let bits: BitVec = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+                let fast = con.modulate(&bits);
+                let slow = reference::modulate(&con, &bits);
+                assert_eq!(fast.len(), slow.len(), "{m:?} n {n}");
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert_eq!((a.re, a.im), (b.re, b.im), "{m:?} n {n}");
+                }
+                // Perturb so slicing does real work, then compare bits.
+                let noisy: Vec<Complex> = fast
+                    .iter()
+                    .map(|p| *p + Complex::new(rng.uniform(-0.05, 0.05), rng.uniform(-0.05, 0.05)))
+                    .collect();
+                assert_eq!(
+                    con.demodulate(&noisy, n),
+                    reference::demodulate(&con, &noisy, n),
+                    "{m:?} n {n}"
+                );
+            }
+        }
+    }
 
     #[test]
     fn gray_roundtrip() {

@@ -1,14 +1,33 @@
-//! PJRT runtime — loads the AOT artifacts (HLO text lowered once by
-//! `python/compile/aot.py`) and executes them on the XLA CPU client.
-//! This is the only place L3 touches XLA; Python never runs here.
+//! Model-execution runtime. Two backends behind one [`Engine`] facade:
 //!
-//! Interchange is HLO *text*: `HloModuleProto::from_text_file` re-parses
-//! and re-assigns instruction ids, avoiding the 64-bit-id protos that
-//! xla_extension 0.5.1 rejects (see DESIGN.md §1 and
-//! /opt/xla-example/README.md).
+//! * **PJRT** ([`Engine::load`]) — loads the AOT artifacts (HLO text
+//!   lowered once by `python/compile/aot.py`) and executes them on the
+//!   XLA CPU client. This is the only place L3 touches XLA; Python never
+//!   runs on the FL path. Interchange is HLO *text*:
+//!   `HloModuleProto::from_text_file` re-parses and re-assigns
+//!   instruction ids, avoiding the 64-bit-id protos that xla_extension
+//!   0.5.1 rejects (see DESIGN.md §1).
+//! * **Synthetic** ([`Engine::synthetic`]) — a pure-Rust deterministic
+//!   stand-in: gradients and logits are seeded hashes of the inputs,
+//!   bounded to the paper's |g| < 1 gradient range. It exists so the
+//!   coordinator, transport, and threading layers can be exercised (and
+//!   their determinism contracts tested) on machines without built
+//!   artifacts or the real `xla` bindings — the offline build links a
+//!   stub `xla` crate (rust/vendor/xla) whose PJRT client errors at
+//!   construction, so [`Engine::load`] fails cleanly and callers fall
+//!   back or skip.
+//!
+//! The coordinator fans clients out over `&Engine`, so the backend
+//! types must be `Sync` — true of the synthetic backend and of the
+//! vendored stub. Real PJRT bindings are not necessarily `Sync`
+//! (xla_extension holds non-thread-safe handles); when swapping them
+//! in, wrap the client/executables at the `Backend` boundary (e.g.
+//! a `Mutex` around `Executable::run`) or the `thread::scope` fan-out
+//! in `FlServer::run_round` will not compile.
 
 use crate::data::Dataset;
 use crate::model::{Manifest, ParamSet};
+use crate::rng::splitmix64;
 use crate::{Error, Result};
 
 /// A compiled artifact plus its entry metadata.
@@ -26,12 +45,93 @@ impl Executable {
     }
 }
 
-/// The L3 runtime: one PJRT CPU client and the compiled model entries.
-pub struct Engine {
+/// PJRT backend: one CPU client and the compiled model entries.
+struct PjrtBackend {
     #[allow(dead_code)]
     client: xla::PjRtClient,
     train: Executable,
     predict: Executable,
+}
+
+/// Deterministic pure-Rust backend (no artifacts needed).
+struct SyntheticBackend {
+    /// Mixed into every hash so distinct engines differ.
+    seed: u64,
+}
+
+impl SyntheticBackend {
+    /// Stateless hash -> uniform in (-1, 1).
+    #[inline]
+    fn unit(mut h: u64) -> f32 {
+        h = splitmix64(&mut h);
+        ((h >> 40) as f32) * (2.0 / (1u64 << 24) as f32) - 1.0
+    }
+
+    /// Digest of a float slice (bit-exact, order-sensitive).
+    fn digest(&self, xs: &[f32]) -> u64 {
+        let mut h = self.seed ^ 0x9E37_79B9_7F4A_7C15;
+        for &v in xs {
+            h ^= v.to_bits() as u64;
+            h = splitmix64(&mut h);
+        }
+        h
+    }
+
+    /// Pseudo-gradient: bounded deterministic function of (params, x, y).
+    /// Shaped like a damped SGD signal — a data-dependent direction plus
+    /// a weak pull toward zero — so multi-round dynamics stay sane.
+    fn train_step(
+        &self,
+        man: &Manifest,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[f32],
+    ) -> (f32, ParamSet) {
+        let mut batch_h = self.digest(x);
+        batch_h ^= self.digest(y).rotate_left(17);
+        let mut grads = ParamSet::zeros(man);
+        let mut idx = 0u64;
+        for (g, p) in grads.tensors.iter_mut().zip(&params.tensors) {
+            for (gv, pv) in g.data.iter_mut().zip(&p.data) {
+                let noise = Self::unit(batch_h ^ idx.wrapping_mul(0xD1B5_4A32_D192_ED03));
+                *gv = (0.45 * noise + 0.4 * pv.clamp(-1.0, 1.0)).clamp(-0.999, 0.999);
+                idx += 1;
+            }
+        }
+        let loss = 2.3 * (0.5 + 0.5 * Self::unit(batch_h)).abs();
+        (loss, grads)
+    }
+
+    /// Pseudo-logits: deterministic in (params, x) — every parameter
+    /// tensor feeds the digest so predictions respond to any update.
+    fn predict(&self, man: &Manifest, params: &ParamSet, x: &[f32]) -> Vec<f32> {
+        let b = man.eval_batch;
+        let nc = man.num_classes;
+        let mut ph = 0u64;
+        for t in &params.tensors {
+            // Order-sensitive fold so identical tensors can't cancel.
+            ph = self.digest(&t.data) ^ ph.rotate_left(9);
+        }
+        let pix = x.len() / b.max(1);
+        let mut out = Vec::with_capacity(b * nc);
+        for row in 0..b {
+            let rh = self.digest(&x[row * pix..(row + 1) * pix]) ^ ph;
+            for c in 0..nc {
+                out.push(Self::unit(rh ^ (c as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)));
+            }
+        }
+        out
+    }
+}
+
+enum Backend {
+    Pjrt(PjrtBackend),
+    Synthetic(SyntheticBackend),
+}
+
+/// The L3 runtime facade over the active backend.
+pub struct Engine {
+    backend: Backend,
     pub manifest: Manifest,
 }
 
@@ -61,7 +161,24 @@ impl Engine {
         };
         let train = compile("train_step")?;
         let predict = compile("predict")?;
-        Ok(Engine { client, train, predict, manifest })
+        Ok(Engine {
+            backend: Backend::Pjrt(PjrtBackend { client, train, predict }),
+            manifest,
+        })
+    }
+
+    /// Deterministic artifact-free engine over the paper's CNN schema.
+    pub fn synthetic() -> Engine {
+        Engine::synthetic_with(Manifest::paper(), 0x5EED)
+    }
+
+    /// Synthetic engine with an explicit schema and seed (tests use small
+    /// schemas to keep transport payloads cheap).
+    pub fn synthetic_with(manifest: Manifest, seed: u64) -> Engine {
+        Engine {
+            backend: Backend::Synthetic(SyntheticBackend { seed }),
+            manifest,
+        }
     }
 
     fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
@@ -79,45 +196,55 @@ impl Engine {
     /// `[train_batch, 1, hw, hw]` flattened, `y` one-hot
     /// `[train_batch, classes]`.
     pub fn train_step(&self, params: &ParamSet, x: &[f32], y: &[f32]) -> Result<(f32, ParamSet)> {
-        let b = self.manifest.train_batch;
-        let hw = self.manifest.image_hw;
-        let nc = self.manifest.num_classes;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
-        inputs.push(literal_f32(y, &[b, nc])?);
-        let out = self.train.run(&inputs)?;
-        if out.len() != 1 + params.tensors.len() {
-            return Err(Error::Runtime(format!(
-                "train_step returned {} outputs, expected {}",
-                out.len(),
-                1 + params.tensors.len()
-            )));
-        }
-        let loss: f32 = out[0].get_first_element()?;
-        let mut grads = ParamSet::zeros(&self.manifest);
-        for (g, lit) in grads.tensors.iter_mut().zip(&out[1..]) {
-            let v = lit.to_vec::<f32>()?;
-            if v.len() != g.numel() {
-                return Err(Error::Shape(format!(
-                    "grad {} numel {} != {}",
-                    g.name,
-                    v.len(),
-                    g.numel()
-                )));
+        match &self.backend {
+            Backend::Synthetic(sb) => Ok(sb.train_step(&self.manifest, params, x, y)),
+            Backend::Pjrt(pb) => {
+                let b = self.manifest.train_batch;
+                let hw = self.manifest.image_hw;
+                let nc = self.manifest.num_classes;
+                let mut inputs = self.param_literals(params)?;
+                inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
+                inputs.push(literal_f32(y, &[b, nc])?);
+                let out = pb.train.run(&inputs)?;
+                if out.len() != 1 + params.tensors.len() {
+                    return Err(Error::Runtime(format!(
+                        "train_step returned {} outputs, expected {}",
+                        out.len(),
+                        1 + params.tensors.len()
+                    )));
+                }
+                let loss: f32 = out[0].get_first_element()?;
+                let mut grads = ParamSet::zeros(&self.manifest);
+                for (g, lit) in grads.tensors.iter_mut().zip(&out[1..]) {
+                    let v = lit.to_vec::<f32>()?;
+                    if v.len() != g.numel() {
+                        return Err(Error::Shape(format!(
+                            "grad {} numel {} != {}",
+                            g.name,
+                            v.len(),
+                            g.numel()
+                        )));
+                    }
+                    g.data = v;
+                }
+                Ok((loss, grads))
             }
-            g.data = v;
         }
-        Ok((loss, grads))
     }
 
     /// Log-probabilities for one eval batch `[eval_batch, 1, hw, hw]`.
     pub fn predict(&self, params: &ParamSet, x: &[f32]) -> Result<Vec<f32>> {
-        let b = self.manifest.eval_batch;
-        let hw = self.manifest.image_hw;
-        let mut inputs = self.param_literals(params)?;
-        inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
-        let out = self.predict.run(&inputs)?;
-        Ok(out[0].to_vec::<f32>()?)
+        match &self.backend {
+            Backend::Synthetic(sb) => Ok(sb.predict(&self.manifest, params, x)),
+            Backend::Pjrt(pb) => {
+                let b = self.manifest.eval_batch;
+                let hw = self.manifest.image_hw;
+                let mut inputs = self.param_literals(params)?;
+                inputs.push(literal_f32(x, &[b, 1, hw, hw])?);
+                let out = pb.predict.run(&inputs)?;
+                Ok(out[0].to_vec::<f32>()?)
+            }
+        }
     }
 
     /// Test-set accuracy: batches of `eval_batch`, zero-padded tail.
@@ -163,5 +290,57 @@ impl Engine {
     }
 }
 
-// Integration tests for the runtime live in rust/tests/ — they need built
-// artifacts, which `make test` guarantees before running cargo test.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn small_manifest() -> Manifest {
+        Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 20,10\nparam b1 20\nparam w2 20,10\nparam b2 10\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn synthetic_train_step_is_deterministic_and_bounded() {
+        let e = Engine::synthetic_with(small_manifest(), 7);
+        let params = e.init_params(&mut Rng::new(1));
+        let x: Vec<f32> = (0..8 * 784).map(|i| (i % 17) as f32 * 0.01).collect();
+        let y: Vec<f32> = (0..8 * 10).map(|i| (i % 10 == 3) as u8 as f32).collect();
+        let (l1, g1) = e.train_step(&params, &x, &y).unwrap();
+        let (l2, g2) = e.train_step(&params, &x, &y).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+        assert!(g1.max_abs() < 1.0, "paper gradient bound |g| < 1");
+        // Different batch -> different gradient.
+        let mut x2 = x.clone();
+        x2[0] += 1.0;
+        let (_, g3) = e.train_step(&params, &x2, &y).unwrap();
+        assert_ne!(g1, g3);
+    }
+
+    #[test]
+    fn synthetic_predict_shape_and_determinism() {
+        let e = Engine::synthetic_with(small_manifest(), 7);
+        let params = e.init_params(&mut Rng::new(2));
+        let x: Vec<f32> = (0..16 * 784).map(|i| (i % 13) as f32 * 0.02).collect();
+        let a = e.predict(&params, &x).unwrap();
+        let b = e.predict(&params, &x).unwrap();
+        assert_eq!(a.len(), 16 * 10);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn paper_schema_matches_model_size() {
+        let e = Engine::synthetic();
+        assert_eq!(e.manifest.num_params(), 21_840);
+        assert_eq!(e.manifest.params.len(), 8);
+    }
+}
+
+// PJRT integration tests live in rust/tests/ — they need built artifacts,
+// which `make test` guarantees before running cargo test.

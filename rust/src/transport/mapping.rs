@@ -16,12 +16,19 @@ use crate::bits::BitVec;
 use crate::modem::Modulation;
 
 /// A window permutation and its inverse.
+///
+/// The 32-bit window divides the 64-bit backing words exactly, so both
+/// directions are applied word-parallel: each output word is assembled
+/// from its matching input word through a fixed 64-entry source table
+/// (the window permutation replicated across both halves).
 #[derive(Clone, Debug)]
 pub struct ImportanceMap {
-    /// `perm[i]` = wire position whose bit is sent in window slot `i`.
-    perm: Vec<usize>,
-    inv: Vec<usize>,
     window: usize,
+    /// Forward window permutation (`perm[i]` = wire position whose bit is
+    /// sent in slot `i`), replicated over both 32-bit halves of a word.
+    perm64: [u8; 64],
+    /// The inverse permutation, same replication.
+    inv64: [u8; 64],
 }
 
 impl ImportanceMap {
@@ -54,32 +61,65 @@ impl ImportanceMap {
         for (slot, &bit) in perm.iter().enumerate() {
             inv[bit] = slot;
         }
-        ImportanceMap { perm, inv, window }
+        let mut perm64 = [0u8; 64];
+        let mut inv64 = [0u8; 64];
+        for half in 0..2 {
+            for slot in 0..window {
+                perm64[half * window + slot] = (half * window + perm[slot]) as u8;
+                inv64[half * window + slot] = (half * window + inv[slot]) as u8;
+            }
+        }
+        ImportanceMap { window, perm64, inv64 }
+    }
+
+    /// The single-window forward permutation (slot -> source wire
+    /// position) — the spec the tests pin the word tables against.
+    pub fn window_perm(&self) -> Vec<usize> {
+        self.perm64[..self.window].iter().map(|&b| b as usize).collect()
     }
 
     /// Apply to a packed float bitstream (length must be a multiple of
     /// the 32-bit window, which `pack_f32s` guarantees).
     pub fn apply(&self, bits: &BitVec) -> BitVec {
-        assert_eq!(bits.len() % self.window, 0);
-        let mut out = BitVec::zeros(bits.len());
-        for w in (0..bits.len()).step_by(self.window) {
-            for slot in 0..self.window {
-                out.set(w + slot, bits.get(w + self.perm[slot]));
-            }
-        }
+        let mut out = BitVec::new();
+        self.apply_into(bits, &mut out);
         out
+    }
+
+    /// Apply into an existing vector (cleared first), reusing its
+    /// allocation.
+    pub fn apply_into(&self, bits: &BitVec, out: &mut BitVec) {
+        self.permute_into(&self.perm64, bits, out);
     }
 
     /// Inverse mapping.
     pub fn invert(&self, bits: &BitVec) -> BitVec {
-        assert_eq!(bits.len() % self.window, 0);
-        let mut out = BitVec::zeros(bits.len());
-        for w in (0..bits.len()).step_by(self.window) {
-            for bit in 0..self.window {
-                out.set(w + bit, bits.get(w + self.inv[bit]));
-            }
-        }
+        let mut out = BitVec::new();
+        self.invert_into(bits, &mut out);
         out
+    }
+
+    /// Inverse mapping into an existing vector, reusing its allocation.
+    pub fn invert_into(&self, bits: &BitVec, out: &mut BitVec) {
+        self.permute_into(&self.inv64, bits, out);
+    }
+
+    /// Word-parallel window permute: the map never crosses a 32-bit
+    /// window, so each output word gathers only from its matching input
+    /// word. A ragged 32-bit tail (odd float count) is safe — the high
+    /// half of the last word is zero on input and maps to the high half
+    /// of the output, which `reset_zeros` keeps zero.
+    fn permute_into(&self, table: &[u8; 64], bits: &BitVec, out: &mut BitVec) {
+        assert_eq!(bits.len() % self.window, 0);
+        out.reset_zeros(bits.len());
+        let dst = out.words_mut();
+        for (d, &s) in dst.iter_mut().zip(bits.words()) {
+            let mut w = 0u64;
+            for (b, &src) in table.iter().enumerate() {
+                w |= ((s >> src) & 1) << b;
+            }
+            *d = w;
+        }
     }
 }
 
@@ -102,9 +142,48 @@ mod tests {
     }
 
     #[test]
+    fn word_permute_matches_per_bit_reference() {
+        // The word-parallel tables must agree with the per-bit window
+        // semantics: out[w + slot] = in[w + perm[slot]] for apply, and
+        // out[w + perm[slot]] = in[w + slot] for invert — across odd and
+        // even float counts (ragged 32-bit word tails).
+        let mut rng = Rng::new(9);
+        for m in [Modulation::Qpsk, Modulation::Qam16, Modulation::Qam256] {
+            let map = ImportanceMap::new(m);
+            let perm = map.window_perm();
+            for n_floats in [1usize, 2, 33, 100] {
+                let xs: Vec<f32> =
+                    (0..n_floats).map(|_| rng.normal_scaled(0.0, 0.2) as f32).collect();
+                let bits = pack_f32s(&xs);
+                let applied = map.apply(&bits);
+                let mut expect = crate::bits::BitVec::zeros(bits.len());
+                for w in (0..bits.len()).step_by(32) {
+                    for (slot, &src) in perm.iter().enumerate() {
+                        if bits.get(w + src) {
+                            expect.set(w + slot, true);
+                        }
+                    }
+                }
+                assert_eq!(applied, expect, "{m:?} apply, {n_floats} floats");
+                let inverted = map.invert(&applied);
+                let mut expect_inv = crate::bits::BitVec::zeros(bits.len());
+                for w in (0..bits.len()).step_by(32) {
+                    for (slot, &src) in perm.iter().enumerate() {
+                        if applied.get(w + slot) {
+                            expect_inv.set(w + src, true);
+                        }
+                    }
+                }
+                assert_eq!(inverted, expect_inv, "{m:?} invert, {n_floats} floats");
+                assert_eq!(inverted, bits, "{m:?} roundtrip, {n_floats} floats");
+            }
+        }
+    }
+
+    #[test]
     fn qpsk_map_is_identity() {
         let map = ImportanceMap::new(Modulation::Qpsk);
-        assert_eq!(map.perm, (0..32).collect::<Vec<_>>());
+        assert_eq!(map.window_perm(), (0..32).collect::<Vec<_>>());
     }
 
     #[test]
@@ -114,8 +193,9 @@ mod tests {
         // {0,2,4,6,...,30} interleaved per symbol: slots s where s%4 in
         // {0,2}. There are 16 strong slots; the 16 most important bits
         // (sign + 8 exponent + 7 top fraction) must occupy them.
+        let perm = map.window_perm();
         let strong: Vec<usize> = (0..32).filter(|s| s % 4 == 0 || s % 4 == 2).collect();
-        let mut bits_on_strong: Vec<usize> = strong.iter().map(|&s| map.perm[s]).collect();
+        let mut bits_on_strong: Vec<usize> = strong.iter().map(|&s| perm[s]).collect();
         bits_on_strong.sort_unstable();
         assert_eq!(bits_on_strong, (0..16).collect::<Vec<_>>());
     }
@@ -125,8 +205,9 @@ mod tests {
         let map = ImportanceMap::new(Modulation::Qam256);
         // k=8: strongest slots are s%8==0 (I half) and s%8==4 (Q half):
         // 8 slots for the 8 most important bits (sign + exp[0..7)).
+        let perm = map.window_perm();
         let strongest: Vec<usize> = (0..32).filter(|s| s % 8 == 0 || s % 8 == 4).collect();
-        let mut bits: Vec<usize> = strongest.iter().map(|&s| map.perm[s]).collect();
+        let mut bits: Vec<usize> = strongest.iter().map(|&s| perm[s]).collect();
         bits.sort_unstable();
         assert_eq!(bits, (0..8).collect::<Vec<_>>());
     }

@@ -12,11 +12,32 @@
 //!
 //! `Perfect` is the error-free ideal (charged the uncoded airtime) used
 //! as the accuracy upper bound; the other three are the arms of Fig. 3.
+//!
+//! # Scratch buffers and re-entrancy
+//!
+//! The erroneous-delivery hot path makes **zero steady-state heap
+//! allocations** beyond the returned gradient vector: every intermediate
+//! (packed bits, interleaved stream, symbols, equalized observations,
+//! received bits) lives in a reusable [`TxScratch`] workspace, and the
+//! block interleaver's permutation tables are cached in it per payload
+//! shape. Call
+//! [`Transport::send_with`] with a caller-owned scratch on hot loops;
+//! [`Transport::send`] keeps the simple signature by borrowing a
+//! thread-local scratch internally.
+//!
+//! Determinism contract: `send`/`send_with` take `&self` plus an explicit
+//! RNG stream and are re-entrant — concurrent sends with distinct
+//! [`Rng`] substreams (one per client/round, see [`crate::rng`]) produce
+//! bit-identical results regardless of scheduling, which is what lets
+//! the coordinator fan clients out across threads.
 
 pub mod compress;
 pub mod mapping;
 
-use crate::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
+use crate::bits::{
+    pack_f32s, pack_f32s_into, unpack_f32s, unpack_f32s_into, BitProtection, BitVec,
+    BlockInterleaver, EXP_MASK_U64, FRAC_MASK_U64, SIGN_MASK_U64,
+};
 use crate::channel::{Channel, ChannelConfig};
 use crate::fec::{self, ArqConfig};
 use crate::math::Complex;
@@ -126,9 +147,33 @@ impl TransportConfig {
     }
 }
 
+/// Reusable per-thread workspace for [`Transport::send_with`]: all
+/// intermediate buffers of the TX/RX chain plus the cached interleaver
+/// permutation tables. After the first send of a given payload shape,
+/// subsequent sends allocate nothing.
+#[derive(Default)]
+pub struct TxScratch {
+    tx_bits: BitVec,
+    mapped: BitVec,
+    air: BitVec,
+    rx_air: BitVec,
+    rx_bits: BitVec,
+    symbols: Vec<Complex>,
+    eq: Vec<Complex>,
+    /// Interleaver cached per (payload bits, spread).
+    interleaver: Option<(usize, usize, BlockInterleaver)>,
+}
+
+impl TxScratch {
+    pub fn new() -> Self {
+        TxScratch::default()
+    }
+}
+
 /// A ready-to-use uplink: constellation + channel instance + scheme
 /// plumbing. One per experiment; `send` is re-entrant given distinct RNG
-/// streams, so clients can fan out across threads.
+/// streams, so clients can fan out across threads (see the module docs
+/// for the scratch-buffer and determinism contract).
 pub struct Transport {
     pub cfg: TransportConfig,
     con: Constellation,
@@ -157,17 +202,38 @@ impl Transport {
     }
 
     /// Deliver `grads` to the PS; returns the received vector + report.
+    ///
+    /// Borrows a thread-local [`TxScratch`] so repeated sends make no
+    /// steady-state allocations; hot loops that want explicit control
+    /// should hold their own scratch and call [`Self::send_with`].
     pub fn send(&self, grads: &[f32], rng: &mut Rng) -> (Vec<f32>, TxReport) {
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<TxScratch> =
+                std::cell::RefCell::new(TxScratch::new());
+        }
+        SCRATCH.with(|s| self.send_with(grads, rng, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::send`] with a caller-owned scratch workspace.
+    pub fn send_with(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        scratch: &mut TxScratch,
+    ) -> (Vec<f32>, TxReport) {
         match self.cfg.scheme {
             Scheme::Perfect => self.send_perfect(grads),
             Scheme::Ecrt => self.send_ecrt(grads, rng),
-            Scheme::Naive => self.send_erroneous(grads, rng, BitProtection::none(), 0, false),
+            Scheme::Naive => {
+                self.send_erroneous(grads, rng, BitProtection::none(), 0, false, scratch)
+            }
             Scheme::Proposed => self.send_erroneous(
                 grads,
                 rng,
                 self.cfg.protection,
                 self.cfg.interleave_spread,
                 self.cfg.importance_mapping,
+                scratch,
             ),
         }
     }
@@ -206,6 +272,7 @@ impl Transport {
         (out, report)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn send_erroneous(
         &self,
         grads: &[f32],
@@ -213,69 +280,80 @@ impl Transport {
         protection: BitProtection,
         interleave_spread: usize,
         importance: bool,
+        s: &mut TxScratch,
     ) -> (Vec<f32>, TxReport) {
-        let tx_bits = pack_f32s(grads);
-        let n = tx_bits.len();
+        pack_f32s_into(grads, &mut s.tx_bits);
+        let n = s.tx_bits.len();
 
-        // TX chain: (importance map | interleave) -> modulate.
-        let mapped_tx;
-        let wire_bits: &BitVec = if importance {
-            mapped_tx = self.imap.as_ref().unwrap().apply(&tx_bits);
-            &mapped_tx
+        // TX chain: (importance map | interleave) -> modulate. Every
+        // stage writes into a scratch buffer; nothing allocates once the
+        // scratch has seen this payload shape.
+        let wire_bits = if importance {
+            self.imap.as_ref().unwrap().apply_into(&s.tx_bits, &mut s.mapped);
+            &s.mapped
         } else {
-            &tx_bits
+            &s.tx_bits
         };
-        let interleaver = (interleave_spread > 0).then(|| {
-            BlockInterleaver::new(n.div_ceil(interleave_spread), interleave_spread)
-        });
-        let air_tx;
-        let air_bits: &BitVec = match &interleaver {
-            Some(il) => {
-                air_tx = il.interleave(wire_bits);
-                &air_tx
-            }
-            None => wire_bits,
+        let air_bits = if interleave_spread > 0 {
+            let il = {
+                let stale = !matches!(
+                    &s.interleaver,
+                    Some((cn, cs, _)) if *cn == n && *cs == interleave_spread
+                );
+                if stale {
+                    s.interleaver = Some((
+                        n,
+                        interleave_spread,
+                        BlockInterleaver::for_len(n, interleave_spread),
+                    ));
+                }
+                &s.interleaver.as_ref().unwrap().2
+            };
+            il.interleave_into(wire_bits, &mut s.air);
+            &s.air
+        } else {
+            wire_bits
         };
 
-        let symbols = self.con.modulate(air_bits);
-        let mut eq: Vec<Complex> = Vec::new();
-        self.channel.transmit_equalized(&symbols, rng, &mut eq);
-        let rx_air = self.con.demodulate(&eq, air_bits.len());
+        self.con.modulate_into(air_bits, &mut s.symbols);
+        self.channel.transmit_equalized(&s.symbols, rng, &mut s.eq);
+        self.con.demodulate_into(&s.eq, air_bits.len(), &mut s.rx_air);
 
         // RX chain: deinterleave -> unmap -> protect.
-        let rx_bits = match &interleaver {
-            Some(il) => il.deinterleave(&rx_air, n),
-            None => {
-                let mut b = rx_air;
-                b.truncate(n);
-                b
-            }
+        let rx_bits: &BitVec = if interleave_spread > 0 {
+            let il = &s.interleaver.as_ref().unwrap().2;
+            il.deinterleave_into(&s.rx_air, n, &mut s.rx_bits);
+            &s.rx_bits
+        } else {
+            s.rx_air.truncate(n);
+            &s.rx_air
         };
-        let rx_bits = if importance {
-            self.imap.as_ref().unwrap().invert(&rx_bits)
+        let rx_bits: &BitVec = if importance {
+            self.imap.as_ref().unwrap().invert_into(rx_bits, &mut s.mapped);
+            &s.mapped
         } else {
             rx_bits
         };
 
-        // Error anatomy before protection.
+        // Error anatomy before protection: XOR + the 32-bit-periodic
+        // class masks + popcount per word (sign/exponent/fraction
+        // positions repeat with period 32, which divides 64).
         let mut report = TxReport {
             payload_bits: n,
-            symbols_sent: symbols.len(),
-            seconds: self.cfg.airtime.burst_time(symbols.len()),
+            symbols_sent: s.symbols.len(),
+            seconds: self.cfg.airtime.burst_time(s.symbols.len()),
             ..Default::default()
         };
-        for i in 0..n {
-            if rx_bits.get(i) != tx_bits.get(i) {
-                report.bit_errors += 1;
-                match crate::bits::bit_class(i) {
-                    crate::bits::BitClass::Sign => report.errors_sign += 1,
-                    crate::bits::BitClass::Exponent => report.errors_exp += 1,
-                    crate::bits::BitClass::Fraction => report.errors_frac += 1,
-                }
-            }
+        for (a, b) in s.tx_bits.words().iter().zip(rx_bits.words()) {
+            let e = a ^ b;
+            report.bit_errors += e.count_ones() as usize;
+            report.errors_sign += (e & SIGN_MASK_U64).count_ones() as usize;
+            report.errors_exp += (e & EXP_MASK_U64).count_ones() as usize;
+            report.errors_frac += (e & FRAC_MASK_U64).count_ones() as usize;
         }
 
-        let mut out = unpack_f32s(&rx_bits);
+        let mut out = Vec::with_capacity(grads.len());
+        unpack_f32s_into(rx_bits, &mut out);
         protection.apply(&mut out);
         report.corrupted_floats = out
             .iter()
@@ -436,6 +514,28 @@ mod tests {
         let (out, rep) = t.send(&g, &mut rng);
         assert_eq!(rep.bit_errors, 0);
         assert_eq!(out, g);
+    }
+
+    #[test]
+    fn send_with_scratch_matches_send_and_survives_shape_changes() {
+        let root = Rng::new(99);
+        let g = grads(&mut root.substream("g", 0, 0), 3000);
+        let g_small = grads(&mut root.substream("g", 1, 0), 700);
+        for scheme in Scheme::ALL {
+            let t = Transport::new(cfg(scheme, 10.0));
+            let mut scratch = TxScratch::new();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            for payload in [&g, &g_small, &g] {
+                let mut r1 = root.substream("chan", payload.len() as u64, 0);
+                let mut r2 = r1.clone();
+                let (o1, s1) = t.send(payload, &mut r1);
+                let (o2, s2) = t.send_with(payload, &mut r2, &mut scratch);
+                assert_eq!(bits(&o1), bits(&o2), "{scheme:?} n={}", payload.len());
+                assert_eq!(s1.bit_errors, s2.bit_errors);
+                assert_eq!(s1.symbols_sent, s2.symbols_sent);
+                assert_eq!(s1.seconds, s2.seconds);
+            }
+        }
     }
 
     #[test]

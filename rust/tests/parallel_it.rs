@@ -1,0 +1,101 @@
+//! Determinism contract of the multi-threaded client fan-out: for the
+//! same seed, `FlServer::run_round` / `run` must produce traces and
+//! global models that are **bit-identical** whether the per-client phase
+//! runs serially or across any number of worker threads. Guaranteed by
+//! per-client RNG substreams plus coordinator-side ordered aggregation
+//! (see the `coordinator::server` module docs).
+//!
+//! Runs against the synthetic runtime backend so it needs no built
+//! artifacts and exercises the real transport + threading layers.
+
+use awc_fl::config::ExperimentConfig;
+use awc_fl::coordinator::FlServer;
+use awc_fl::metrics::Trace;
+use awc_fl::model::Manifest;
+use awc_fl::runtime::Engine;
+use awc_fl::transport::Scheme;
+
+fn small_engine() -> Engine {
+    // A few thousand params keeps per-client transport cheap while still
+    // spanning many fade blocks and interleaver columns.
+    let man = Manifest::parse(
+        "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+         param w1 64,30\nparam b1 64\nparam w2 64,20\nparam b2 10\n\
+         artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+    )
+    .unwrap();
+    Engine::synthetic_with(man, 0xFED)
+}
+
+fn cfg(scheme: Scheme, parallel_clients: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        clients: 9,
+        participants_per_round: 9,
+        train_n: 900,
+        test_n: 100,
+        rounds: 3,
+        eval_every: 0,
+        lr: 0.05,
+        batch: 8,
+        scheme,
+        parallel_clients,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn run(scheme: Scheme, parallel_clients: usize) -> (Trace, Vec<u32>) {
+    let engine = small_engine();
+    let mut server = FlServer::from_config(cfg(scheme, parallel_clients), &engine).unwrap();
+    let trace = server.run(false).unwrap();
+    let params: Vec<u32> = server.params().flatten().iter().map(|x| x.to_bits()).collect();
+    (trace, params)
+}
+
+fn assert_traces_bit_identical(a: &Trace, b: &Trace, label: &str) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} loss");
+        assert_eq!(x.mean_ber.to_bits(), y.mean_ber.to_bits(), "{label} ber");
+        assert_eq!(x.comm_time_s.to_bits(), y.comm_time_s.to_bits(), "{label} time");
+        assert_eq!(
+            x.corrupted_frac.to_bits(),
+            y.corrupted_frac.to_bits(),
+            "{label} corrupted"
+        );
+        assert_eq!(x.retransmissions, y.retransmissions, "{label} retx");
+    }
+}
+
+#[test]
+fn parallel_rounds_match_serial_bit_for_bit() {
+    for scheme in [Scheme::Proposed, Scheme::Naive, Scheme::Ecrt] {
+        let (serial_trace, serial_params) = run(scheme, 1);
+        for workers in [2, 4, 0] {
+            let (par_trace, par_params) = run(scheme, workers);
+            assert_traces_bit_identical(
+                &serial_trace,
+                &par_trace,
+                &format!("{scheme:?} workers={workers}"),
+            );
+            assert_eq!(
+                serial_params, par_params,
+                "{scheme:?} workers={workers}: global model diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn different_seeds_still_differ_in_parallel() {
+    let engine = small_engine();
+    let mut c1 = cfg(Scheme::Proposed, 4);
+    c1.seed = 1;
+    let mut c2 = cfg(Scheme::Proposed, 4);
+    c2.seed = 2;
+    let t1 = FlServer::from_config(c1, &engine).unwrap().run(false).unwrap();
+    let t2 = FlServer::from_config(c2, &engine).unwrap().run(false).unwrap();
+    assert!(
+        t1.rounds.iter().zip(&t2.rounds).any(|(a, b)| a.train_loss != b.train_loss),
+        "different seeds must produce different traces"
+    );
+}

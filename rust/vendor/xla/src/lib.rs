@@ -1,0 +1,118 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The build environment for this repository has no network access and no
+//! prebuilt XLA, so this crate provides just the API surface
+//! `awc_fl::runtime` compiles against. Every entry point that would need
+//! the real runtime returns an error from [`PjRtClient::cpu`] onward, so
+//! `Engine::load` fails cleanly and callers fall back to the synthetic
+//! backend or skip. Swap the `xla = { path = "vendor/xla" }` dependency
+//! for the real bindings to execute compiled HLO artifacts. One caveat:
+//! the coordinator's threaded fan-out requires the backend types to be
+//! `Sync`; the real xla_extension handles are not, so the swap also
+//! needs a `Sync` wrapper at the `awc_fl::runtime::Backend` boundary
+//! (see the runtime module docs) — the types here are trivially `Sync`.
+
+use std::fmt;
+
+/// Unified error type mirroring `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable: built against the offline `xla` stub \
+         (rust/vendor/xla); install the real xla bindings to run compiled \
+         artifacts"
+            .to_string(),
+    )
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Debug, Default)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Loaded executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
