@@ -1,0 +1,93 @@
+//! Fading-scenario study: Monte-Carlo BER of every [`Fading`] regime —
+//! the seed trio (fast / block / AWGN) plus the PR-2 scenarios
+//! (Rician-K, Jakes Doppler, Gilbert–Elliott bursts) — swept over SNR on
+//! the batched `V2Batched` channel engine, with closed-form references
+//! where they exist (Rayleigh + AWGN QAM bounds).
+//!
+//! ```bash
+//! cargo run --release --example fading_study -- \
+//!     [--bits 400000] [--snr-list 0,5,10,15,20,25,30] \
+//!     [--rician-k 4] [--doppler 0.01] [--rng-version v2] \
+//!     [--out results/fading_study.csv]
+//! ```
+
+use awc_fl::channel::{measure_ber_cfg, ChannelConfig, Fading};
+use awc_fl::cli::Args;
+use awc_fl::math::{awgn_qam_ber, db_to_lin, rayleigh_qam_ber};
+use awc_fl::modem::Modulation;
+use awc_fl::rng::{Rng, RngVersion};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let bits = args.opt_parse::<usize>("bits")?.unwrap_or(400_000);
+    let out = args.opt("out").unwrap_or("results/fading_study.csv");
+    let rician_k = args.opt_parse::<f64>("rician-k")?.unwrap_or(4.0);
+    let doppler = args.opt_parse::<f64>("doppler")?.unwrap_or(0.01);
+    let version = match args.opt("rng-version") {
+        None => RngVersion::V2Batched,
+        Some(v) => RngVersion::parse(v)
+            .ok_or_else(|| format!("bad --rng-version `{v}` (v1|v2)"))?,
+    };
+    let snrs: Vec<f64> = args
+        .opt_f64_list("snr-list")?
+        .unwrap_or_else(|| (0..=30).step_by(5).map(|s| s as f64).collect());
+
+    let modulation = Modulation::Qpsk;
+    let scenarios: Vec<(&str, Fading)> = vec![
+        ("awgn", Fading::None),
+        ("rayleigh_fast", Fading::Fast),
+        ("rayleigh_block", Fading::Block),
+        ("rician", Fading::Rician),
+        ("jakes", Fading::Jakes),
+        ("gilbert_elliott", Fading::GilbertElliott),
+    ];
+
+    let mut rng = Rng::new(20260728);
+    let mut csv = String::from("scenario,snr_db,ber_sim,ber_theory\n");
+    println!(
+        "QPSK BER by fading scenario ({} bits/point, sampler {}; rician K={rician_k}, \
+         jakes f_D T_s={doppler}, GE defaults)\n",
+        bits,
+        version.name()
+    );
+    print!("{:<18}", "scenario");
+    for snr in &snrs {
+        print!(" {snr:>9.0} dB");
+    }
+    println!();
+    for (name, fading) in &scenarios {
+        print!("{name:<18}");
+        for &snr in &snrs {
+            let cfg = ChannelConfig {
+                snr_db: snr,
+                fading: *fading,
+                rician_k,
+                doppler_norm: doppler,
+                rng_version: version,
+                ..Default::default()
+            };
+            let ber = measure_ber_cfg(modulation, cfg, bits, &mut rng);
+            // Closed forms where the scenario has one.
+            let theory = match fading {
+                Fading::None => Some(awgn_qam_ber(2, db_to_lin(snr))),
+                Fading::Fast | Fading::Block => Some(rayleigh_qam_ber(2, db_to_lin(snr))),
+                _ => None,
+            };
+            print!(" {ber:>12.4e}");
+            let theory_s = theory.map_or(String::new(), |t| format!("{t:.6e}"));
+            csv.push_str(&format!("{name},{snr},{ber:.6e},{theory_s}\n"));
+        }
+        println!();
+    }
+    println!(
+        "\nanchors: rayleigh ~4e-2 @10dB / ~5e-3 @20dB; rician K={rician_k} sits between \
+         rayleigh and awgn; K->inf converges to awgn (tests pin this)"
+    );
+
+    if let Some(parent) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(out, csv)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -15,12 +15,12 @@
 mod harness;
 
 use awc_fl::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
-use awc_fl::channel::{Channel, ChannelConfig, Fading};
+use awc_fl::channel::{Channel, ChannelConfig, ChannelScratch, Fading};
 use awc_fl::config::ExperimentConfig;
 use awc_fl::fec::LdpcCode;
 use awc_fl::math::Complex;
 use awc_fl::modem::{Constellation, Modulation};
-use awc_fl::rng::Rng;
+use awc_fl::rng::{Rng, RngVersion};
 use awc_fl::transport::{Scheme, Transport, TxScratch};
 use harness::{bench, black_box, report_throughput, Sink};
 
@@ -41,7 +41,7 @@ fn main() {
         "=== L3 hot paths (payload = one model: {MODEL_FLOATS} floats / {MODEL_BITS} bits) ===\n"
     );
 
-    // RNG base cost.
+    // RNG base cost: V1 scalar Box–Muller vs the V2 batched ziggurat.
     let name = "rng: complex gaussian draw x1e6";
     let s = bench(name, 2, 10, || {
         let mut acc = 0.0;
@@ -51,6 +51,20 @@ fn main() {
         black_box(acc);
     });
     let tp = report_throughput("rng", 1e6, &s);
+    sink.push(name, &s, Some(tp));
+
+    let mut zbuf = vec![0.0f64; 1 << 16];
+    let name = "rng: batched ziggurat fill x1e6 (v2)";
+    let s = bench(name, 2, 10, || {
+        let mut acc = 0.0;
+        for _ in 0..(1_000_000 >> 16) + 1 {
+            rng.fill_normal(&mut zbuf);
+            acc += zbuf[0];
+        }
+        black_box(acc);
+    });
+    let draws = (((1_000_000 >> 16) + 1) * (1 << 16)) as f64;
+    let tp = report_throughput("rng v2", draws, &s);
     sink.push(name, &s, Some(tp));
 
     // Modem.
@@ -81,19 +95,50 @@ fn main() {
     let tp = report_throughput("modem 256 (symbols)", syms256.len() as f64 * 2.0, &s);
     sink.push(name, &s, Some(tp));
 
-    // Channel.
-    let ch = Channel::new(ChannelConfig {
+    // Channel: the batched V2 engine owns the headline record (same name
+    // as PR 1, so the CI trajectory diff shows the speedup); the legacy
+    // scalar path keeps a reference record.
+    let ch_v2 = Channel::new(ChannelConfig {
+        fading: Fading::Block,
+        block_len: 324,
+        rng_version: RngVersion::V2Batched,
+        ..Default::default()
+    });
+    let mut chan_scratch = ChannelScratch::new();
+    let mut eq = Vec::new();
+    let name = "channel: block-fade+AWGN+equalize (1 model)";
+    let s = bench(name, 2, 20, || {
+        ch_v2.transmit_block(black_box(&syms), &mut rng, &mut chan_scratch, &mut eq);
+        black_box(&eq);
+    });
+    let tp = report_throughput("channel v2 (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
+
+    let ch_v1 = Channel::new(ChannelConfig {
         fading: Fading::Block,
         block_len: 324,
         ..Default::default()
     });
-    let mut eq = Vec::new();
-    let name = "channel: block-fade+AWGN+equalize (1 model)";
+    let name = "channel: block-fade v1 scalar (1 model)";
     let s = bench(name, 2, 20, || {
-        ch.transmit_equalized(black_box(&syms), &mut rng, &mut eq);
+        ch_v1.transmit_equalized(black_box(&syms), &mut rng, &mut eq);
         black_box(&eq);
     });
-    let tp = report_throughput("channel (symbols)", syms.len() as f64, &s);
+    let tp = report_throughput("channel v1 (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
+
+    let ch_jakes = Channel::new(ChannelConfig {
+        fading: Fading::Jakes,
+        doppler_norm: 0.01,
+        rng_version: RngVersion::V2Batched,
+        ..Default::default()
+    });
+    let name = "channel: jakes doppler v2 (1 model)";
+    let s = bench(name, 2, 20, || {
+        ch_jakes.transmit_block(black_box(&syms), &mut rng, &mut chan_scratch, &mut eq);
+        black_box(&eq);
+    });
+    let tp = report_throughput("channel jakes (symbols)", syms.len() as f64, &s);
     sink.push(name, &s, Some(tp));
 
     // Interleaver.
@@ -146,9 +191,13 @@ fn main() {
     sink.push(name, &s, Some(tp));
 
     // Transport end-to-end per scheme (thread-local scratch via `send`).
+    // The batched V2 channel engine is the default in these records —
+    // the issue's acceptance bar is >= 2x on `transport: * send` vs the
+    // PR-1 scalar baseline; a V1 record is kept for reference below.
     for scheme in [Scheme::Naive, Scheme::Proposed, Scheme::Ecrt] {
         let cfg = ExperimentConfig {
             scheme,
+            rng_version: RngVersion::V2Batched,
             ..ExperimentConfig::default()
         };
         let t = Transport::new(cfg.transport());
@@ -160,11 +209,26 @@ fn main() {
         sink.push(&label, &s, Some(tp));
     }
 
+    {
+        let cfg = ExperimentConfig {
+            scheme: Scheme::Proposed,
+            ..ExperimentConfig::default()
+        };
+        let t = Transport::new(cfg.transport());
+        let name = "transport: proposed send v1 scalar (1 model)";
+        let s = bench(name, 1, 10, || {
+            black_box(t.send(black_box(&grads), &mut rng));
+        });
+        let tp = report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        sink.push(name, &s, Some(tp));
+    }
+
     // Explicit-scratch variant: the zero-steady-state-allocation path the
     // coordinator workers use.
     {
         let cfg = ExperimentConfig {
             scheme: Scheme::Proposed,
+            rng_version: RngVersion::V2Batched,
             ..ExperimentConfig::default()
         };
         let t = Transport::new(cfg.transport());

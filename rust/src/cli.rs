@@ -25,6 +25,7 @@ const VALUE_FLAGS: &[&str] = &[
     "out", "config", "set", "snr", "snr-list", "rounds", "clients", "mode",
     "scheme", "modulation", "seed", "bits", "points", "target", "lr",
     "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
+    "fading", "rician-k", "doppler", "rng-version",
 ];
 
 impl Args {

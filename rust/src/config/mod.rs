@@ -9,6 +9,7 @@ pub mod parser;
 use crate::channel::{ChannelConfig, Fading};
 use crate::fec::{ArqConfig, DecoderKind};
 use crate::modem::Modulation;
+use crate::rng::RngVersion;
 use crate::timing::Multiplexing;
 use crate::transport::Scheme;
 use crate::{Error, Result};
@@ -40,10 +41,25 @@ pub struct ExperimentConfig {
     pub modulation: Modulation,
     /// Receiver SNR in dB (paper default 10).
     pub snr_db: f64,
-    /// Fading model (block = per-codeword quasi-static).
+    /// Fading model (block = per-codeword quasi-static; also rician,
+    /// jakes, gilbert_elliott — see [`crate::channel`]).
     pub fading: Fading,
     /// Fade block length in symbols.
     pub fade_block_symbols: usize,
+    /// Rician K-factor, linear (used when `fading = rician`).
+    pub rician_k: f64,
+    /// Normalized Doppler f_D T_s (used when `fading = jakes`).
+    pub doppler_norm: f64,
+    /// Gilbert–Elliott Good->Bad per-symbol transition probability.
+    pub ge_p_g2b: f64,
+    /// Gilbert–Elliott Bad->Good per-symbol transition probability.
+    pub ge_p_b2g: f64,
+    /// Gilbert–Elliott bad-state power gain in dB (negative = deep fade).
+    pub ge_bad_db: f64,
+    /// Gaussian sampler version: `v1` replays the seed bitstream
+    /// bit-exactly (published figures), `v2_batched` is the fast batched
+    /// ziggurat engine (statistically identical, different stream).
+    pub rng_version: RngVersion,
     /// Interleaver spread for the proposed scheme (0 = off).
     pub interleave_spread: usize,
     /// Value clamp for the proposed scheme (<= 0 disables).
@@ -72,6 +88,9 @@ pub struct ExperimentConfig {
 
 impl Default for ExperimentConfig {
     fn default() -> Self {
+        // Scenario knobs have a single source of truth: the channel's
+        // own defaults (`ChannelConfig::default`).
+        let ch = ChannelConfig::default();
         ExperimentConfig {
             seed: 20230519,
             clients: 100,
@@ -87,6 +106,12 @@ impl Default for ExperimentConfig {
             snr_db: 10.0,
             fading: Fading::Block,
             fade_block_symbols: 324,
+            rician_k: ch.rician_k,
+            doppler_norm: ch.doppler_norm,
+            ge_p_g2b: ch.ge_p_g2b,
+            ge_p_b2g: ch.ge_p_b2g,
+            ge_bad_db: ch.ge_bad_db,
+            rng_version: ch.rng_version,
             interleave_spread: 37,
             value_clamp: 1.0,
             force_exp_msb: true,
@@ -166,15 +191,34 @@ impl ExperimentConfig {
                 self.snr_db = v.as_f64().ok_or_else(|| bad(key, v))?
             }
             "fading" | "channel.fading" => {
-                self.fading = match v.as_str() {
-                    Some("fast") => Fading::Fast,
-                    Some("block") => Fading::Block,
-                    Some("none") | Some("awgn") => Fading::None,
-                    _ => return Err(bad(key, v)),
-                }
+                self.fading = v
+                    .as_str()
+                    .and_then(Fading::parse)
+                    .ok_or_else(|| bad(key, v))?
             }
             "fade_block_symbols" | "channel.fade_block_symbols" => {
                 self.fade_block_symbols = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "rician_k" | "channel.rician_k" => {
+                self.rician_k = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "doppler_norm" | "channel.doppler_norm" => {
+                self.doppler_norm = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "ge_p_g2b" | "channel.ge_p_g2b" => {
+                self.ge_p_g2b = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "ge_p_b2g" | "channel.ge_p_b2g" => {
+                self.ge_p_b2g = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "ge_bad_db" | "channel.ge_bad_db" => {
+                self.ge_bad_db = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "rng_version" | "rng.version" | "channel.rng_version" => {
+                self.rng_version = v
+                    .as_str()
+                    .and_then(RngVersion::parse)
+                    .ok_or_else(|| bad(key, v))?
             }
             "interleave_spread" | "transport.interleave_spread" => {
                 self.interleave_spread = v.as_u64().ok_or_else(|| bad(key, v))? as usize
@@ -246,6 +290,20 @@ impl ExperimentConfig {
                 "importance_mapping requires interleave_spread = 0".into(),
             ));
         }
+        if self.rician_k < 0.0 {
+            return Err(Error::Config(format!("rician_k {} must be >= 0", self.rician_k)));
+        }
+        if !(0.0..=0.5).contains(&self.doppler_norm) {
+            return Err(Error::Config(format!(
+                "doppler_norm {} outside [0, 0.5] (normalized to symbol rate)",
+                self.doppler_norm
+            )));
+        }
+        for (name, p) in [("ge_p_g2b", self.ge_p_g2b), ("ge_p_b2g", self.ge_p_b2g)] {
+            if !(0.0..=1.0).contains(&p) || (name == "ge_p_b2g" && p == 0.0) {
+                return Err(Error::Config(format!("{name} {p} must be a probability")));
+            }
+        }
         Ok(())
     }
 
@@ -255,6 +313,12 @@ impl ExperimentConfig {
             snr_db: self.snr_db,
             fading: self.fading,
             block_len: self.fade_block_symbols,
+            rician_k: self.rician_k,
+            doppler_norm: self.doppler_norm,
+            ge_p_g2b: self.ge_p_g2b,
+            ge_p_b2g: self.ge_p_b2g,
+            ge_bad_db: self.ge_bad_db,
+            rng_version: self.rng_version,
             ..Default::default()
         }
     }
@@ -334,6 +398,48 @@ mod tests {
         assert!(ExperimentConfig::load(None, &o).is_err());
         let o = vec![("participants_per_round".to_string(), "500".to_string())];
         assert!(ExperimentConfig::load(None, &o).is_err());
+    }
+
+    #[test]
+    fn scenario_and_rng_version_keys() {
+        let o = vec![
+            ("fading".to_string(), "rician".to_string()),
+            ("rician_k".to_string(), "8.5".to_string()),
+            ("doppler_norm".to_string(), "0.02".to_string()),
+            ("ge_p_g2b".to_string(), "0.05".to_string()),
+            ("ge_p_b2g".to_string(), "0.5".to_string()),
+            ("ge_bad_db".to_string(), "-6".to_string()),
+            ("rng_version".to_string(), "v2_batched".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.fading, Fading::Rician);
+        assert_eq!(c.rng_version, RngVersion::V2Batched);
+        let ch = c.channel();
+        assert_eq!(ch.rician_k, 8.5);
+        assert_eq!(ch.doppler_norm, 0.02);
+        assert_eq!(ch.ge_p_g2b, 0.05);
+        assert_eq!(ch.ge_p_b2g, 0.5);
+        assert_eq!(ch.ge_bad_db, -6.0);
+        assert_eq!(ch.rng_version, RngVersion::V2Batched);
+        // Section-qualified spellings and scenario aliases parse too.
+        let o = vec![
+            ("channel.fading".to_string(), "ge".to_string()),
+            ("channel.rng_version".to_string(), "ziggurat".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.fading, Fading::GilbertElliott);
+        assert_eq!(c.rng_version, RngVersion::V2Batched);
+        // Bad values are rejected loudly.
+        for (k, v) in [
+            ("doppler_norm", "0.9"),
+            ("ge_p_b2g", "0"),
+            ("rician_k", "-1"),
+            ("rng_version", "v3"),
+            ("fading", "carrier-pigeon"),
+        ] {
+            let o = vec![(k.to_string(), v.to_string())];
+            assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!   validate the abstraction.
 
 use crate::bits::BitVec;
-use crate::channel::{Channel, FadedSymbol};
+use crate::channel::{Channel, ChannelScratch, FadedSymbol};
 use crate::fec::ldpc::LdpcCode;
 use crate::math::Complex;
 use crate::modem::Constellation;
@@ -134,6 +134,13 @@ pub fn transmit_reliable(
     };
     let mut delivered = BitVec::with_capacity(nblocks * k);
     let mut llrs: Vec<f32> = Vec::with_capacity(code.n);
+    // Reused across attempts: the bounded-distance receiver only needs
+    // equalized observations, so it rides the (version-dispatched)
+    // batched channel engine with zero steady-state allocation. The
+    // min-sum receiver needs the per-symbol gains for its LLR weights
+    // and keeps the `FadedSymbol` path.
+    let mut eq: Vec<Complex> = Vec::new();
+    let mut chan_scratch = ChannelScratch::new();
 
     for b in 0..nblocks {
         // Zero-padded info block.
@@ -153,10 +160,9 @@ pub fn transmit_reliable(
             stats.transmissions += 1;
             stats.coded_bits_sent += code.n;
             stats.symbols_sent += syms.len();
-            let faded = ch.transmit(&syms, rng);
             match cfg.decoder {
                 DecoderKind::BoundedDistance(t) => {
-                    let eq: Vec<Complex> = faded.iter().map(|f| f.equalized()).collect();
+                    ch.transmit_into(&syms, rng, &mut chan_scratch, &mut eq);
                     let rx = con.demodulate(&eq, code.n);
                     last_hard = rx.clone();
                     if let Some(fixed) = code.decode_bounded_distance(&cw, &rx, t) {
@@ -165,6 +171,7 @@ pub fn transmit_reliable(
                     }
                 }
                 DecoderKind::MinSum { max_iter } => {
+                    let faded = ch.transmit(&syms, rng);
                     llrs.clear();
                     let sigma2 = ch.cfg.noise_power();
                     for f in &faded {

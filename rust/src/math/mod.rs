@@ -103,6 +103,54 @@ pub fn q_func(x: f64) -> f64 {
     0.5 * erfc(x / std::f64::consts::SQRT_2)
 }
 
+/// Bessel function of the first kind, order zero — the Clarke/Jakes
+/// Doppler autocorrelation `E[h(t) h*(t+tau)] = J0(2 pi f_D tau)`.
+/// Rational approximations (Abramowitz & Stegun 9.4.1 / 9.4.3, the
+/// classic single-precision-grade polynomial pair); |err| < ~1e-7,
+/// ample for validating the sum-of-sinusoids fading generator.
+pub fn bessel_j0(x: f64) -> f64 {
+    let ax = x.abs();
+    if ax < 8.0 {
+        let y = x * x;
+        let p1 = 57_568_490_574.0
+            + y * (-13_362_590_354.0
+                + y * (651_619_640.7
+                    + y * (-11_214_424.18 + y * (77_392.330_17 + y * (-184.905_245_6)))));
+        let p2 = 57_568_490_411.0
+            + y * (1_029_532_985.0
+                + y * (9_494_680.718 + y * (59_272.648_53 + y * (267.853_271_2 + y))));
+        p1 / p2
+    } else {
+        let z = 8.0 / ax;
+        let y = z * z;
+        let xx = ax - 0.785_398_164;
+        let p1 = 1.0
+            + y * (-0.109_862_862_7e-2
+                + y * (0.273_451_040_7e-4
+                    + y * (-0.207_337_063_9e-5 + y * 0.209_388_721_1e-6)));
+        let p2 = -0.156_249_999_5e-1
+            + y * (0.143_048_876_5e-3
+                + y * (-0.691_114_765_1e-5
+                    + y * (0.762_109_516_1e-6 + y * (-0.934_935_152e-7))));
+        (0.636_619_772 / ax).sqrt() * (xx.cos() * p1 - z * xx.sin() * p2)
+    }
+}
+
+/// Theoretical average BER of gray-coded square M-QAM over pure *AWGN*
+/// (no fading) at symbol SNR `snr_lin` (nearest-neighbour approximation,
+/// unit average symbol energy; exact for QPSK: `Q(sqrt(gamma))`).
+///
+/// This is the K -> infinity limit of the Rician channel — used by the
+/// scenario acceptance tests to pin the Rician implementation.
+pub fn awgn_qam_ber(bits_per_symbol: u32, snr_lin: f64) -> f64 {
+    let m = 1u32 << bits_per_symbol;
+    let sqrt_m = (m as f64).sqrt();
+    let k = bits_per_symbol as f64;
+    // Per-axis minimum-distance argument: d^2/(2 N0) = 3 gamma / (M - 1).
+    let a = 3.0 / (m as f64 - 1.0);
+    2.0 * (1.0 - 1.0 / sqrt_m) * q_func((a * snr_lin).sqrt()) / (k / 2.0)
+}
+
 /// dB -> linear power ratio.
 #[inline]
 pub fn db_to_lin(db: f64) -> f64 {
@@ -178,6 +226,35 @@ mod tests {
         for db in [-10.0, 0.0, 10.0, 23.5] {
             assert!((lin_to_db(db_to_lin(db)) - db).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn bessel_j0_reference_values() {
+        // Reference values from standard tables (A&S Table 9.1).
+        for (x, want) in [
+            (0.0, 1.0),
+            (1.0, 0.765_197_686_6),
+            (2.404_825_557_7, 0.0), // first zero
+            (5.0, -0.177_596_771_3),
+            (10.0, -0.245_935_764_5),
+        ] {
+            assert!((bessel_j0(x) - want).abs() < 1e-6, "J0({x}) = {}", bessel_j0(x));
+        }
+        assert_eq!(bessel_j0(-3.5), bessel_j0(3.5)); // even function
+    }
+
+    #[test]
+    fn awgn_qpsk_is_q_of_sqrt_gamma() {
+        for db in [0.0, 6.0, 10.0] {
+            let g = db_to_lin(db);
+            assert!((awgn_qam_ber(2, g) - q_func(g.sqrt())).abs() < 1e-12);
+        }
+        // QPSK at 10 dB AWGN ~ 7.8e-4 (quoted in the channel tests).
+        assert!((awgn_qam_ber(2, db_to_lin(10.0)) - 7.83e-4).abs() < 2e-5);
+        // Higher order is worse at the same SNR, and AWGN beats Rayleigh.
+        let g = db_to_lin(10.0);
+        assert!(awgn_qam_ber(2, g) < awgn_qam_ber(4, g));
+        assert!(awgn_qam_ber(2, g) < rayleigh_qam_ber(2, g));
     }
 
     #[test]

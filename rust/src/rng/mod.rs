@@ -2,14 +2,40 @@
 //!
 //! No `rand` crate in the offline vendor set, so this module provides the
 //! generators the simulation needs: SplitMix64 (seeding / key derivation),
-//! xoshiro256++ (bulk stream), Box–Muller normals, circularly-symmetric
+//! xoshiro256++ (bulk stream), Gaussian sampling, circularly-symmetric
 //! complex Gaussians (for `h ~ CN(0,1)` and AWGN), and utility sampling.
 //!
-//! Determinism contract: every stochastic component of the system draws
-//! from a [`Rng`] derived via [`Rng::substream`] from an experiment-level
-//! seed with a stable purpose key, so every figure regenerates bit-exactly.
+//! # Determinism contract
+//!
+//! Every stochastic component of the system draws from a [`Rng`] derived
+//! via [`Rng::substream`] from an experiment-level seed with a stable
+//! purpose key, so every figure regenerates bit-exactly. Substreams
+//! always start **spare-free**: a cached Box–Muller spare in the parent
+//! never leaks into (or perturbs) a derived stream, and deriving a
+//! substream never consumes parent state.
+//!
+//! # Gaussian sampler versions ([`RngVersion`])
+//!
+//! The Gaussian sampling algorithm is versioned so the hot path can
+//! evolve without silently shifting published figures:
+//!
+//! * [`RngVersion::V1`] — scalar Box–Muller with a cached second variate
+//!   ([`Rng::normal`]). This is the seed bitstream; it is pinned bit-exact
+//!   by golden tests (`tests/rng_golden_it.rs`) and must never change.
+//! * [`RngVersion::V2Batched`] — a 256-layer ziggurat (Marsaglia–Tsang
+//!   construction) behind block-fill APIs ([`Rng::fill_normal`],
+//!   [`Rng::fill_f64`]). One `next_u64` per draw in the ~98.8% common
+//!   case, no logarithm / trig, and **no per-sample spare**: the stream
+//!   produced by `fill_normal` is independent of how the caller chunks
+//!   its buffers. This is the default in the perf benches and the
+//!   batched channel engine ([`crate::channel::Channel::transmit_block`]).
+//!
+//! Both versions draw their raw bits from the same xoshiro256++ stream;
+//! only the bits→normal mapping differs, so substream derivation and all
+//! integer/uniform draws are version-independent.
 
 use crate::math::Complex;
+use std::sync::OnceLock;
 
 /// SplitMix64 step — used for seeding and key mixing (Steele et al.).
 #[inline]
@@ -21,12 +47,81 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Version key for the Gaussian sampling algorithm (see module docs).
+///
+/// `V1` is the backward-compatible seed bitstream; `V2Batched` is the
+/// batched ziggurat fast path. Selected per experiment via
+/// `ChannelConfig::rng_version` / the `rng_version` config key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RngVersion {
+    /// Scalar Box–Muller with cached spare — bit-exact with the seed
+    /// repo's streams (golden-pinned).
+    #[default]
+    V1,
+    /// Batched 256-layer ziggurat — the fast path; a different (but
+    /// equally deterministic) stream for the same seed.
+    V2Batched,
+}
+
+impl RngVersion {
+    pub const ALL: [RngVersion; 2] = [RngVersion::V1, RngVersion::V2Batched];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RngVersion::V1 => "v1",
+            RngVersion::V2Batched => "v2_batched",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RngVersion> {
+        match s.to_ascii_lowercase().as_str() {
+            "v1" | "1" | "box_muller" | "boxmuller" => Some(RngVersion::V1),
+            "v2" | "2" | "v2_batched" | "batched" | "ziggurat" => Some(RngVersion::V2Batched),
+            _ => None,
+        }
+    }
+}
+
+/// Right edge of the ziggurat base layer (256 layers, Marsaglia–Tsang).
+const ZIG_R: f64 = 3.654_152_885_361_008_8;
+/// Common area of each ziggurat layer.
+const ZIG_V: f64 = 4.928_673_233_99e-3;
+
+/// Precomputed ziggurat layer edges `x[i]` and pdf values
+/// `f[i] = exp(-x[i]^2/2)`; built once per process. `x[0]` is the
+/// pseudo-edge `V / f(R)` that makes the base strip (rectangle + tail)
+/// have area `V` like every other layer.
+struct ZigTables {
+    x: [f64; 257],
+    f: [f64; 257],
+}
+
+fn zig_tables() -> &'static ZigTables {
+    static TABLES: OnceLock<ZigTables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let pdf = |x: f64| (-0.5 * x * x).exp();
+        let mut x = [0.0f64; 257];
+        x[0] = ZIG_V / pdf(ZIG_R);
+        x[1] = ZIG_R;
+        for i in 2..256 {
+            x[i] = (-2.0 * (ZIG_V / x[i - 1] + pdf(x[i - 1])).ln()).sqrt();
+        }
+        x[256] = 0.0;
+        let mut f = [0.0f64; 257];
+        for i in 0..257 {
+            f[i] = pdf(x[i]);
+        }
+        ZigTables { x, f }
+    })
+}
+
 /// xoshiro256++ PRNG (Blackman & Vigna) — fast, 256-bit state, suitable
 /// for the Monte-Carlo channel volumes this simulator pushes (~1e9 draws).
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
-    /// Cached second Box–Muller variate.
+    /// Cached second Box–Muller variate (V1 sampler only; the ziggurat
+    /// path never touches it).
     gauss_spare: Option<f64>,
 }
 
@@ -47,6 +142,10 @@ impl Rng {
     ///
     /// Used as e.g. `rng.substream("channel", client_id, round)` so that
     /// client/round randomness is stable under reordering and threading.
+    ///
+    /// Invariants (regression-tested): derivation reads only the state
+    /// words (never consumes draws), and the child starts spare-free even
+    /// when the parent holds a cached Box–Muller spare.
     pub fn substream(&self, purpose: &str, a: u64, b: u64) -> Rng {
         let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
         for &byte in purpose.as_bytes() {
@@ -58,7 +157,12 @@ impl Rng {
         mix = splitmix64(&mut sm) ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut sm2 = mix;
         let fin = splitmix64(&mut sm2) ^ b.wrapping_mul(0xD1B5_4A32_D192_ED03);
-        Rng::new(fin)
+        // Rng::new constructs with `gauss_spare: None`, which is what
+        // guarantees the spare-free start; do not replace this with a
+        // clone-and-reseed of `self`.
+        let child = Rng::new(fin);
+        debug_assert!(child.gauss_spare.is_none(), "substreams must start spare-free");
+        child
     }
 
     #[inline]
@@ -106,7 +210,15 @@ impl Rng {
         self.f64() < p
     }
 
-    /// Standard normal via Box–Muller (cached pair).
+    /// Fill `out` with uniforms in [0, 1). Chunking-invariant: the values
+    /// equal a sequence of scalar [`Rng::f64`] calls.
+    pub fn fill_f64(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.f64();
+        }
+    }
+
+    /// Standard normal via Box–Muller (cached pair) — the `V1` stream.
     pub fn normal(&mut self) -> f64 {
         if let Some(z) = self.gauss_spare.take() {
             return z;
@@ -125,6 +237,70 @@ impl Rng {
         r * c
     }
 
+    /// Standard normal via the 256-layer ziggurat — the `V2Batched`
+    /// stream. One `next_u64` per draw in the common case (low 8 bits =
+    /// layer, bit 8 = sign, bits 11.. = 53-bit magnitude), an extra
+    /// uniform on the ~1.2% edge rejection, and an explicit exponential
+    /// tail sampler beyond `x > 3.654`. Carries no cached spare, so
+    /// cloning or substreaming around it is hazard-free.
+    #[inline]
+    pub fn normal_batched(&mut self) -> f64 {
+        self.normal_zig(zig_tables())
+    }
+
+    #[inline]
+    fn normal_zig(&mut self, t: &ZigTables) -> f64 {
+        loop {
+            let bits = self.next_u64();
+            let i = (bits & 0xFF) as usize;
+            let mant = (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            let u = if bits & 0x100 != 0 { mant } else { -mant };
+            let x = u * t.x[i];
+            if x.abs() < t.x[i + 1] {
+                return x;
+            }
+            if i == 0 {
+                return self.normal_tail(u < 0.0);
+            }
+            if t.f[i + 1] + (t.f[i] - t.f[i + 1]) * self.f64() < (-0.5 * x * x).exp() {
+                return x;
+            }
+        }
+    }
+
+    /// Marsaglia tail sampler for |z| > ZIG_R (base-layer overflow).
+    fn normal_tail(&mut self, neg: bool) -> f64 {
+        loop {
+            let u1 = self.f64().max(f64::MIN_POSITIVE);
+            let u2 = self.f64().max(f64::MIN_POSITIVE);
+            let x = u1.ln() / ZIG_R; // <= 0
+            let y = u2.ln(); // <= 0
+            if -2.0 * y >= x * x {
+                return if neg { x - ZIG_R } else { ZIG_R - x };
+            }
+        }
+    }
+
+    /// Block-fill `out` with standard normals from the `V2Batched`
+    /// (ziggurat) stream. The produced sequence is independent of the
+    /// caller's buffer chunking — `fill_normal(&mut buf[..k])` twice
+    /// equals one `fill_normal(&mut buf[..2k])`.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        let t = zig_tables(); // hoist the once-lock load out of the loop
+        for z in out.iter_mut() {
+            *z = self.normal_zig(t);
+        }
+    }
+
+    /// Version-dispatched scalar standard normal.
+    #[inline]
+    pub fn normal_v(&mut self, version: RngVersion) -> f64 {
+        match version {
+            RngVersion::V1 => self.normal(),
+            RngVersion::V2Batched => self.normal_batched(),
+        }
+    }
+
     /// N(mu, sigma^2).
     #[inline]
     pub fn normal_scaled(&mut self, mu: f64, sigma: f64) -> f64 {
@@ -137,6 +313,18 @@ impl Rng {
     pub fn cn(&mut self, sigma2: f64) -> Complex {
         let s = (sigma2 * 0.5).sqrt();
         Complex::new(s * self.normal(), s * self.normal())
+    }
+
+    /// [`Rng::cn`] with a selectable sampler version.
+    #[inline]
+    pub fn cn_v(&mut self, version: RngVersion, sigma2: f64) -> Complex {
+        let s = (sigma2 * 0.5).sqrt();
+        match version {
+            RngVersion::V1 => Complex::new(s * self.normal(), s * self.normal()),
+            RngVersion::V2Batched => {
+                Complex::new(s * self.normal_batched(), s * self.normal_batched())
+            }
+        }
     }
 
     /// Fisher–Yates shuffle.
@@ -200,6 +388,42 @@ mod tests {
         assert_ne!(v1, v3);
     }
 
+    /// Regression test for the `Rng::clone`/`substream` spare hazard:
+    /// a parent holding a cached Box–Muller spare must derive exactly the
+    /// same substream as an identical parent without one, and the child
+    /// itself must start spare-free.
+    #[test]
+    fn substream_starts_spare_free_and_ignores_parent_spare() {
+        let mut parent = Rng::new(9);
+        let _ = parent.normal(); // parent now caches the second variate
+        assert!(parent.gauss_spare.is_some(), "test precondition");
+
+        let mut clean = parent.clone();
+        clean.gauss_spare = None; // same counter state, no spare
+
+        let mut a = parent.substream("x", 1, 2);
+        let mut b = clean.substream("x", 1, 2);
+        assert!(a.gauss_spare.is_none(), "substream must start spare-free");
+        let va: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(va, vb, "parent spare leaked into the derived stream");
+        // First normals of the children agree too (spare-free start).
+        let mut a2 = parent.substream("x", 1, 2);
+        let mut b2 = clean.substream("x", 1, 2);
+        assert_eq!(a2.normal().to_bits(), b2.normal().to_bits());
+    }
+
+    #[test]
+    fn substream_derivation_consumes_no_parent_state() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let _ = a.substream("anything", 5, 6);
+        let _ = a.substream("more", 7, 8);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
     #[test]
     fn uniform_mean_and_range() {
         let mut r = Rng::new(3);
@@ -231,10 +455,105 @@ mod tests {
     }
 
     #[test]
+    fn ziggurat_moments() {
+        let mut r = Rng::new(4);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal_batched();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01);
+        assert!((m2 / nf - 1.0).abs() < 0.02);
+        assert!((m4 / nf - 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn ziggurat_tables_are_monotone_and_anchored() {
+        let t = zig_tables();
+        assert!((t.x[0] - 3.910_757_959_537_09).abs() < 1e-12);
+        assert!((t.x[1] - ZIG_R).abs() < 1e-15);
+        assert!((t.x[2] - 3.449_278_298_560_964).abs() < 1e-12);
+        assert_eq!(t.x[256], 0.0);
+        assert_eq!(t.f[256], 1.0);
+        for i in 0..256 {
+            assert!(t.x[i] > t.x[i + 1], "x not monotone at {i}");
+            assert!(t.f[i] < t.f[i + 1], "f not monotone at {i}");
+        }
+    }
+
+    #[test]
+    fn fill_normal_is_chunking_invariant() {
+        let mut a = Rng::new(31);
+        let mut b = Rng::new(31);
+        let mut whole = [0.0f64; 64];
+        a.fill_normal(&mut whole);
+        let mut parts = [0.0f64; 64];
+        b.fill_normal(&mut parts[..7]);
+        b.fill_normal(&mut parts[7..20]);
+        b.fill_normal(&mut parts[20..]);
+        for (x, y) in whole.iter().zip(&parts) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fill_f64_matches_scalar() {
+        let mut a = Rng::new(32);
+        let mut b = Rng::new(32);
+        let mut buf = [0.0f64; 33];
+        a.fill_f64(&mut buf);
+        for x in &buf {
+            assert_eq!(x.to_bits(), b.f64().to_bits());
+        }
+    }
+
+    #[test]
+    fn versions_produce_distinct_streams() {
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let v1: Vec<u64> = (0..32).map(|_| a.normal().to_bits()).collect();
+        let v2: Vec<u64> = (0..32).map(|_| b.normal_batched().to_bits()).collect();
+        assert_ne!(v1, v2);
+        // normal_v dispatches to the right algorithm.
+        let mut c = Rng::new(5);
+        let mut d = Rng::new(5);
+        assert_eq!(c.normal_v(RngVersion::V1).to_bits(), v1[0]);
+        assert_eq!(d.normal_v(RngVersion::V2Batched).to_bits(), v2[0]);
+    }
+
+    #[test]
+    fn ziggurat_reaches_the_tail() {
+        let mut r = Rng::new(6);
+        let mut max = 0.0f64;
+        for _ in 0..200_000 {
+            max = max.max(r.normal_batched().abs());
+        }
+        // P(|z| > ZIG_R) ~ 2.6e-4, so 200k draws exercise the explicit
+        // tail sampler ~52 times; the max should comfortably exceed R.
+        assert!(max > ZIG_R, "tail never sampled: max={max}");
+        assert!(max < 6.5, "implausible tail value {max}");
+    }
+
+    #[test]
     fn complex_gaussian_power() {
         let mut r = Rng::new(5);
         let n = 100_000;
         let p: f64 = (0..n).map(|_| r.cn(1.0).norm_sq()).sum::<f64>() / n as f64;
+        assert!((p - 1.0).abs() < 0.02, "E|h|^2 = {p}");
+    }
+
+    #[test]
+    fn complex_gaussian_power_batched() {
+        let mut r = Rng::new(5);
+        let n = 100_000;
+        let p: f64 = (0..n)
+            .map(|_| r.cn_v(RngVersion::V2Batched, 1.0).norm_sq())
+            .sum::<f64>()
+            / n as f64;
         assert!((p - 1.0).abs() < 0.02, "E|h|^2 = {p}");
     }
 
@@ -267,5 +586,14 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 20);
         assert!(ks.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn version_parse_roundtrip() {
+        for v in RngVersion::ALL {
+            assert_eq!(RngVersion::parse(v.name()), Some(v));
+        }
+        assert_eq!(RngVersion::parse("ziggurat"), Some(RngVersion::V2Batched));
+        assert_eq!(RngVersion::parse("nope"), None);
     }
 }

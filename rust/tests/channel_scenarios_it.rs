@@ -1,0 +1,270 @@
+//! Acceptance tests for the PR-2 fading scenarios: Rician-K limits
+//! against closed forms, Gilbert–Elliott burst statistics against the
+//! two-state Markov stationary/geometric laws, and Jakes Doppler
+//! autocorrelation against J0(2 pi f_D tau) — through both the scalar
+//! (`V1`) and batched (`V2Batched`) engines where it matters.
+
+use awc_fl::channel::{measure_ber_cfg, Channel, ChannelConfig, Fading};
+use awc_fl::math::{awgn_qam_ber, bessel_j0, db_to_lin, rayleigh_qam_ber};
+use awc_fl::modem::Modulation;
+use awc_fl::rng::{Rng, RngVersion};
+
+fn cfg(fading: Fading, snr_db: f64, version: RngVersion) -> ChannelConfig {
+    ChannelConfig { fading, snr_db, rng_version: version, ..Default::default() }
+}
+
+#[test]
+fn rician_k_to_infinity_converges_to_awgn_closed_form() {
+    // K -> inf removes the scatter component: h -> 1 deterministically,
+    // so the BER must hit the AWGN nearest-neighbour form (exact for
+    // QPSK: Q(sqrt(gamma))). Checked on both engine paths.
+    let snr_db = 7.0;
+    let theory = awgn_qam_ber(2, db_to_lin(snr_db));
+    for (seed, version) in [(1u64, RngVersion::V1), (2, RngVersion::V2Batched)] {
+        let mut rng = Rng::new(seed);
+        let mut c = cfg(Fading::Rician, snr_db, version);
+        c.rician_k = 1e6;
+        let sim = measure_ber_cfg(Modulation::Qpsk, c, 400_000, &mut rng);
+        let rel = (sim - theory).abs() / theory;
+        assert!(rel < 0.08, "{version:?}: sim = {sim}, awgn theory = {theory}");
+        // And it matches the dedicated AWGN scenario on the same engine.
+        let awgn = measure_ber_cfg(
+            Modulation::Qpsk,
+            cfg(Fading::None, snr_db, version),
+            400_000,
+            &mut rng,
+        );
+        assert!(
+            (sim - awgn).abs() / theory < 0.12,
+            "{version:?}: rician K=1e6 {sim} vs awgn {awgn}"
+        );
+    }
+}
+
+#[test]
+fn rician_k_zero_is_rayleigh() {
+    let snr_db = 10.0;
+    let theory = rayleigh_qam_ber(2, db_to_lin(snr_db));
+    let mut rng = Rng::new(3);
+    let mut c = cfg(Fading::Rician, snr_db, RngVersion::V2Batched);
+    c.rician_k = 0.0;
+    let sim = measure_ber_cfg(Modulation::Qpsk, c, 400_000, &mut rng);
+    let rel = (sim - theory).abs() / theory;
+    assert!(rel < 0.08, "sim = {sim}, rayleigh theory = {theory}");
+}
+
+#[test]
+fn rician_finite_k_sits_between_rayleigh_and_awgn() {
+    let snr_db = 10.0;
+    let mut rng = Rng::new(4);
+    let mut c = cfg(Fading::Rician, snr_db, RngVersion::V2Batched);
+    c.rician_k = 8.0;
+    let mid = measure_ber_cfg(Modulation::Qpsk, c, 300_000, &mut rng);
+    let awgn = awgn_qam_ber(2, db_to_lin(snr_db));
+    let rayleigh = rayleigh_qam_ber(2, db_to_lin(snr_db));
+    assert!(
+        awgn < mid && mid < rayleigh,
+        "K=8 BER {mid} should sit in ({awgn}, {rayleigh})"
+    );
+}
+
+#[test]
+fn gilbert_elliott_burst_lengths_match_stationary_law() {
+    // Extract the state sequence from the (two-valued) gain amplitudes
+    // and check the Markov chain's stationary fraction, the geometric
+    // mean burst length 1/p_b2g, and P(burst = 1) = p_b2g.
+    let c = cfg(Fading::GilbertElliott, 10.0, RngVersion::V2Batched);
+    let (pg, pb) = (c.ge_p_g2b, c.ge_p_b2g);
+    let pi_bad = pg / (pg + pb);
+    let ch = Channel::new(c);
+    let mut rng = Rng::new(5);
+    let n = 200_000;
+    let mut gains = Vec::new();
+    ch.fading_gains_into(n, &mut rng, RngVersion::V2Batched, &mut gains);
+    let amps: Vec<f64> = gains.iter().map(|g| g.re).collect();
+    let lo = amps.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = amps.iter().cloned().fold(0.0f64, f64::max);
+    assert!(hi > lo, "both states must be visited");
+    let thresh = 0.5 * (lo + hi);
+    let bad: Vec<bool> = amps.iter().map(|&a| a < thresh).collect();
+
+    let frac = bad.iter().filter(|&&b| b).count() as f64 / n as f64;
+    assert!((frac - pi_bad).abs() < 0.012, "bad fraction {frac} vs pi_B {pi_bad}");
+
+    let mut bursts: Vec<usize> = Vec::new();
+    let mut run = 0usize;
+    for &b in &bad {
+        if b {
+            run += 1;
+        } else if run > 0 {
+            bursts.push(run);
+            run = 0;
+        }
+    }
+    if run > 0 {
+        bursts.push(run);
+    }
+    assert!(bursts.len() > 1000, "need bursts for statistics, got {}", bursts.len());
+    let mean = bursts.iter().sum::<usize>() as f64 / bursts.len() as f64;
+    assert!((mean - 1.0 / pb).abs() < 0.5, "mean burst {mean} vs {}", 1.0 / pb);
+    let p1 = bursts.iter().filter(|&&b| b == 1).count() as f64 / bursts.len() as f64;
+    assert!((p1 - pb).abs() < 0.04, "P(burst=1) {p1} vs geometric {pb}");
+    // Geometric memorylessness one step deeper: P(len=2)/P(len>=2) = pb.
+    let ge2 = bursts.iter().filter(|&&b| b >= 2).count() as f64;
+    let eq2 = bursts.iter().filter(|&&b| b == 2).count() as f64;
+    assert!((eq2 / ge2 - pb).abs() < 0.06, "hazard at 2: {}", eq2 / ge2);
+}
+
+#[test]
+fn gilbert_elliott_bursts_hurt_ber_relative_to_awgn() {
+    let mut rng = Rng::new(6);
+    let ge = measure_ber_cfg(
+        Modulation::Qpsk,
+        cfg(Fading::GilbertElliott, 10.0, RngVersion::V2Batched),
+        400_000,
+        &mut rng,
+    );
+    let awgn = measure_ber_cfg(
+        Modulation::Qpsk,
+        cfg(Fading::None, 10.0, RngVersion::V2Batched),
+        400_000,
+        &mut rng,
+    );
+    // The deep-fade state dominates the error budget: with the default
+    // -10 dB bad state, BER is an order of magnitude above clean AWGN.
+    assert!(ge > 5.0 * awgn, "GE {ge} vs AWGN {awgn}");
+}
+
+#[test]
+fn jakes_autocorrelation_matches_bessel_j0() {
+    // Ensemble autocorrelation of the sum-of-sinusoids generator must
+    // track Clarke's spectrum: E[h(t) h*(t+tau)] = J0(2 pi f_D tau).
+    let fd = 0.02;
+    let mut c = cfg(Fading::Jakes, 10.0, RngVersion::V2Batched);
+    c.doppler_norm = fd;
+    let ch = Channel::new(c);
+    let rng = Rng::new(7);
+    let (reals, len) = (64usize, 2000usize);
+    let lags = [1usize, 5, 10, 20, 40];
+    let mut acc = [0.0f64; 5];
+    let mut power = 0.0f64;
+    let mut gains = Vec::new();
+    for r in 0..reals {
+        let mut sub = rng.substream("jakes", r as u64, 0);
+        ch.fading_gains_into(len, &mut sub, RngVersion::V2Batched, &mut gains);
+        power += gains.iter().map(|h| h.norm_sq()).sum::<f64>() / len as f64;
+        for (k, &lag) in lags.iter().enumerate() {
+            let m = len - lag;
+            let s: f64 = (0..m)
+                .map(|t| {
+                    let (a, b) = (gains[t], gains[t + lag]);
+                    a.re * b.re + a.im * b.im // Re(a * conj(b))
+                })
+                .sum();
+            acc[k] += s / m as f64;
+        }
+    }
+    power /= reals as f64;
+    assert!((power - 1.0).abs() < 0.05, "E|h|^2 = {power}");
+    for (k, &lag) in lags.iter().enumerate() {
+        let emp = acc[k] / reals as f64 / power;
+        let theo = bessel_j0(2.0 * std::f64::consts::PI * fd * lag as f64);
+        assert!(
+            (emp - theo).abs() < 0.06,
+            "lag {lag}: empirical {emp} vs J0 {theo}"
+        );
+    }
+}
+
+#[test]
+fn jakes_slower_doppler_is_more_coherent() {
+    let mut rng = Rng::new(8);
+    let corr_at = |fd: f64, rng: &mut Rng| -> f64 {
+        let mut c = cfg(Fading::Jakes, 10.0, RngVersion::V2Batched);
+        c.doppler_norm = fd;
+        let ch = Channel::new(c);
+        let mut gains = Vec::new();
+        let (reals, len, lag) = (32usize, 500usize, 10usize);
+        let mut acc = 0.0;
+        for r in 0..reals {
+            let mut sub = rng.substream("coh", r as u64, (fd * 1e6) as u64);
+            ch.fading_gains_into(len, &mut sub, RngVersion::V2Batched, &mut gains);
+            let m = len - lag;
+            acc += (0..m)
+                .map(|t| gains[t].re * gains[t + lag].re + gains[t].im * gains[t + lag].im)
+                .sum::<f64>()
+                / m as f64;
+        }
+        acc / reals as f64
+    };
+    let slow = corr_at(0.002, &mut rng);
+    let fast = corr_at(0.05, &mut rng);
+    assert!(
+        slow > 0.9 && fast < 0.5,
+        "lag-10 correlation: slow {slow}, fast {fast}"
+    );
+}
+
+#[test]
+fn scenarios_flow_through_the_full_transport() {
+    // End-to-end smoke across the new scenarios x engines: the Proposed
+    // scheme must keep outputs bounded and report sane error anatomy.
+    use awc_fl::transport::{Scheme, Transport, TransportConfig};
+    let root = Rng::new(9);
+    let g: Vec<f32> = {
+        let mut r = root.substream("g", 0, 0);
+        (0..4000).map(|_| r.normal_scaled(0.0, 0.05) as f32).collect()
+    };
+    for fading in [Fading::Rician, Fading::Jakes, Fading::GilbertElliott] {
+        for version in RngVersion::ALL {
+            let c = cfg(fading, 10.0, version);
+            let t = Transport::new(TransportConfig::new(
+                Scheme::Proposed,
+                Modulation::Qpsk,
+                c,
+            ));
+            let mut rng = root.substream("chan", fading as u64, version as u64);
+            let (out, rep) = t.send(&g, &mut rng);
+            assert_eq!(out.len(), g.len(), "{fading:?}/{version:?}");
+            assert!(
+                out.iter().all(|x| x.is_finite() && x.abs() <= 1.0),
+                "{fading:?}/{version:?} unbounded output"
+            );
+            assert!(rep.bit_errors > 0, "{fading:?}/{version:?} errorless at 10 dB?");
+            assert_eq!(
+                rep.bit_errors,
+                rep.errors_sign + rep.errors_exp + rep.errors_frac
+            );
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_engines_given_stream() {
+    // Same substream, same config => bit-identical equalized output, for
+    // every scenario and both versions (re-entrancy contract).
+    use awc_fl::channel::ChannelScratch;
+    use awc_fl::math::Complex;
+    let root = Rng::new(10);
+    let syms: Vec<Complex> = {
+        let mut r = root.substream("syms", 0, 0);
+        (0..3000).map(|_| Complex::new(r.normal(), r.normal())).collect()
+    };
+    for fading in Fading::ALL {
+        for version in RngVersion::ALL {
+            let ch = Channel::new(cfg(fading, 10.0, version));
+            let mut s1 = ChannelScratch::new();
+            let mut s2 = ChannelScratch::new();
+            let (mut o1, mut o2) = (Vec::new(), Vec::new());
+            let mut r1 = root.substream("tx", fading as u64, version as u64);
+            let mut r2 = root.substream("tx", fading as u64, version as u64);
+            ch.transmit_into(&syms, &mut r1, &mut s1, &mut o1);
+            ch.transmit_into(&syms, &mut r2, &mut s2, &mut o2);
+            assert_eq!(o1.len(), o2.len());
+            for (a, b) in o1.iter().zip(&o2) {
+                assert_eq!(a.re.to_bits(), b.re.to_bits(), "{fading:?}/{version:?}");
+                assert_eq!(a.im.to_bits(), b.im.to_bits(), "{fading:?}/{version:?}");
+            }
+        }
+    }
+}

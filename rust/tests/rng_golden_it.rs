@@ -1,0 +1,177 @@
+//! Golden determinism tests: hash-pins of the `V1` seed bitstreams, so
+//! future sampler work cannot silently shift published figures.
+//!
+//! Two pinning strategies, chosen by what is portable:
+//!
+//! * **Integer-exact streams** (`next_u64`, the 53-bit uniforms, and
+//!   substream derivation) are pure integer / exact-float arithmetic, so
+//!   their first 4096 draws are pinned against FNV-1a hash constants
+//!   computed with an independent reference implementation. These must
+//!   match on every platform, forever.
+//! * **Transcendental streams** (Box–Muller normals, complex Gaussians)
+//!   go through libm (`ln`, `sin_cos`), whose last-ulp rounding is not
+//!   guaranteed identical across platforms — a cross-platform bit
+//!   constant would be brittle. Instead the first 4096 draws are
+//!   compared bit-for-bit against a frozen in-test reimplementation of
+//!   the exact V1 algorithm: any change to the production mapping
+//!   (reordering draws, swapping sin/cos, dropping the spare) breaks
+//!   the pin, while a platform's libm stays self-consistent.
+
+use awc_fl::math::Complex;
+use awc_fl::rng::Rng;
+
+const SEED: u64 = 0x5EED_2304_0335_9001;
+const N: usize = 4096;
+
+/// FNV-1a over little-endian u64 words. The pinned constants below were
+/// produced by an independent reimplementation of splitmix64 /
+/// xoshiro256++ / the substream cascade (integer-exact, so portable).
+fn fnv1a(vals: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in vals {
+        for byte in v.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[test]
+fn golden_u64_stream() {
+    let mut rng = Rng::new(SEED);
+    let vals: Vec<u64> = (0..N).map(|_| rng.next_u64()).collect();
+    // First draws pinned raw for a readable failure mode.
+    assert_eq!(
+        &vals[..4],
+        &[
+            0xec4b_ccbf_9bb2_e63b,
+            0x0252_fc6b_3393_940e,
+            0xfd5c_889b_3b81_dc07,
+            0xd5b0_f487_24b4_0e8a,
+        ]
+    );
+    assert_eq!(fnv1a(vals), 0xada0_567d_5b89_909e, "xoshiro256++ stream shifted");
+}
+
+#[test]
+fn golden_uniform_stream() {
+    let mut rng = Rng::new(SEED);
+    let vals: Vec<u64> = (0..N).map(|_| rng.f64().to_bits()).collect();
+    // (x >> 11) * 2^-53 is exact IEEE arithmetic — portable bit pins.
+    assert_eq!(vals[0], 0.923_031_613_139_481_8f64.to_bits());
+    assert_eq!(fnv1a(vals), 0xa58a_b205_24af_882f, "uniform stream shifted");
+}
+
+#[test]
+fn golden_substream_derivation() {
+    let root = Rng::new(7);
+    let hash_of = |purpose: &str, a: u64, b: u64| {
+        let mut s = root.substream(purpose, a, b);
+        fnv1a((0..N).map(|_| s.next_u64()))
+    };
+    // Pinned per-substream hashes: the derivation function (FNV purpose
+    // mix + splitmix cascade) is part of the determinism contract —
+    // changing it re-seeds every client/round stream in every figure.
+    let pins = [
+        (("channel", 3, 9), 0x00d7_6297_b91e_c4d2u64),
+        (("channel", 3, 10), 0x8f2c_44bd_f51c_d032),
+        (("channel", 4, 9), 0x7600_6d86_aefd_eda0),
+        (("data", 3, 9), 0x5b2c_a407_c96b_7bef),
+    ];
+    let mut seen = Vec::new();
+    for ((p, a, b), want) in pins {
+        let got = hash_of(p, a, b);
+        assert_eq!(got, want, "substream ({p}, {a}, {b}) shifted");
+        seen.push(got);
+    }
+    // Independence property: all pinned substreams are pairwise distinct
+    // (the hashes differ), and deriving them consumed no root state.
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), pins.len());
+    let mut fresh = Rng::new(7);
+    let mut root = root;
+    assert_eq!(root.next_u64(), fresh.next_u64());
+}
+
+/// Frozen reference copy of the V1 Box–Muller algorithm (keep in sync
+/// with nothing — this *is* the contract).
+struct RefV1 {
+    rng: Rng,
+    spare: Option<f64>,
+}
+
+impl RefV1 {
+    fn new(seed: u64) -> Self {
+        RefV1 { rng: Rng::new(seed), spare: None }
+    }
+
+    fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let u1 = loop {
+            let u = self.rng.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    fn cn(&mut self, sigma2: f64) -> Complex {
+        let s = (sigma2 * 0.5).sqrt();
+        Complex::new(s * self.normal(), s * self.normal())
+    }
+}
+
+#[test]
+fn golden_v1_gaussian_stream() {
+    let mut rng = Rng::new(SEED);
+    let mut reference = RefV1::new(SEED);
+    for i in 0..N {
+        assert_eq!(
+            rng.normal().to_bits(),
+            reference.normal().to_bits(),
+            "V1 gaussian draw {i} diverged from the frozen algorithm"
+        );
+    }
+}
+
+#[test]
+fn golden_v1_complex_stream() {
+    let mut rng = Rng::new(SEED ^ 0xC0);
+    let mut reference = RefV1::new(SEED ^ 0xC0);
+    for i in 0..N {
+        let a = rng.cn(1.0);
+        let b = reference.cn(1.0);
+        assert_eq!(a.re.to_bits(), b.re.to_bits(), "cn draw {i} (re)");
+        assert_eq!(a.im.to_bits(), b.im.to_bits(), "cn draw {i} (im)");
+    }
+}
+
+#[test]
+fn golden_interleaved_uniform_and_gaussian() {
+    // The spare-caching interaction with interleaved uniform draws is
+    // part of the V1 stream: pin it against the frozen reference.
+    let mut rng = Rng::new(SEED ^ 0xA5);
+    let mut reference = RefV1::new(SEED ^ 0xA5);
+    let mut got = Vec::with_capacity(3 * N / 2);
+    let mut want = Vec::with_capacity(3 * N / 2);
+    for i in 0..N / 2 {
+        got.push(rng.normal().to_bits());
+        want.push(reference.normal().to_bits());
+        if i % 3 == 0 {
+            got.push(rng.f64().to_bits());
+            want.push(reference.rng.f64().to_bits());
+        }
+        got.push(rng.normal().to_bits());
+        want.push(reference.normal().to_bits());
+    }
+    assert_eq!(fnv1a(got.iter().copied()), fnv1a(want.iter().copied()));
+}

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_hotpath.json runs and fail on perf regressions.
+
+Usage: bench_diff.py BASELINE.json FRESH.json [--threshold 0.15]
+
+Records are matched by name. For each record present in both files the
+comparison metric is `throughput` (higher = better) when both runs have
+one, else `1 / mean_s`. A record is a regression when the fresh metric
+is more than `threshold` below the baseline. Records that exist in only
+one file (renamed / added benches) are reported but never fail the gate,
+and a missing baseline file is a clean pass so the very first run of a
+branch doesn't fail CI.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        records = json.load(f)
+    return {r["name"]: r for r in records}
+
+
+def metric(record):
+    """Display metric for a record that exists on only one side."""
+    tp = record.get("throughput")
+    if tp is not None:
+        return float(tp)
+    return 1.0 / float(record["mean_s"])
+
+
+def metric_pair(a, b):
+    """Comparable metrics for a record present in both runs: throughput
+    when BOTH have one, else 1/mean_s for both (never mixed units)."""
+    if a.get("throughput") is not None and b.get("throughput") is not None:
+        return float(a["throughput"]), float(b["throughput"])
+    return 1.0 / float(a["mean_s"]), 1.0 / float(b["mean_s"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max tolerated fractional drop per record (default 0.15)",
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_diff: no baseline at {args.baseline} — skipping gate")
+        return 0
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+
+    regressions = []
+    width = max((len(n) for n in fresh), default=20)
+    print(f"{'record':<{width}} {'baseline':>12} {'fresh':>12} {'delta':>8}")
+    for name in sorted(set(base) | set(fresh)):
+        if name not in base:
+            print(f"{name:<{width}} {'-':>12} {metric(fresh[name]):>12.3e}   (new)")
+            continue
+        if name not in fresh:
+            print(f"{name:<{width}} {metric(base[name]):>12.3e} {'-':>12}   (gone)")
+            continue
+        old, new = metric_pair(base[name], fresh[name])
+        delta = (new - old) / old
+        flag = ""
+        if delta < -args.threshold:
+            regressions.append((name, delta))
+            flag = "  REGRESSION"
+        print(f"{name:<{width}} {old:>12.3e} {new:>12.3e} {delta:>+7.1%}{flag}")
+
+    if regressions:
+        print(
+            f"\nbench_diff: {len(regressions)} record(s) regressed more than "
+            f"{args.threshold:.0%}:"
+        )
+        for name, delta in regressions:
+            print(f"  {name}: {delta:+.1%}")
+        return 1
+    print("\nbench_diff: no regressions beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
