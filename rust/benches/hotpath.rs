@@ -241,6 +241,47 @@ fn main() {
         sink.push(name, &s, Some(tp));
     }
 
+    // Coordinator: one full streaming-sharded FL round at 1024 clients
+    // over the synthetic backend (small model so the per-client transport
+    // stays cheap and the round-engine overheads — fan-out, delivery
+    // ring, shard combine — are visible). Auto sharding + one-per-core
+    // workers, the large-federation configuration.
+    {
+        use awc_fl::coordinator::FlServer;
+        use awc_fl::model::Manifest;
+        let man = Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 64,30\nparam b1 64\nparam w2 64,20\nparam b2 10\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap();
+        let engine = awc_fl::runtime::Engine::synthetic_with(man, 0xC0DE);
+        let clients = 1024usize;
+        let cfg = ExperimentConfig {
+            clients,
+            participants_per_round: clients,
+            train_n: 4096,
+            test_n: 128,
+            rounds: 1,
+            eval_every: 0,
+            batch: 8,
+            scheme: Scheme::Proposed,
+            rng_version: RngVersion::V2Batched,
+            agg_shards: 0, // auto: selection-size-derived shard count
+            ..ExperimentConfig::default()
+        };
+        let mut server = FlServer::from_config(cfg, &engine).unwrap();
+        let mut round = 0usize;
+        let name = "coordinator: round 1024-client";
+        let s = bench(name, 1, 5, || {
+            let out = server.run_round(round).unwrap();
+            black_box(out.mean_ber);
+            round += 1;
+        });
+        let tp = report_throughput("coordinator (client passes)", clients as f64, &s);
+        sink.push(name, &s, Some(tp));
+    }
+
     // PJRT round-trips (needs artifacts).
     match awc_fl::runtime::Engine::load("artifacts") {
         Ok(engine) => {

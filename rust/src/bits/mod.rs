@@ -478,8 +478,8 @@ mod tests {
     #[test]
     fn for_len_matches_transport_convention() {
         // Regression for the transposed-constructor bug: `for_len(n, s)`
-        // must build the same interleaver `Transport::send_erroneous`
-        // builds, rows = ceil(n/s) and cols = s.
+        // must build the same interleaver the transport's erroneous-
+        // delivery path builds, rows = ceil(n/s) and cols = s.
         for (n, s) in [(21_840 * 32, 37), (1000, 8), (37, 37), (5, 64)] {
             let a = BlockInterleaver::for_len(n, s);
             let b = BlockInterleaver::new(n.div_ceil(s).max(1), s);

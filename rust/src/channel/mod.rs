@@ -241,54 +241,75 @@ impl Channel {
         Channel { amp: cfg.large_scale().sqrt(), sigma2: cfg.noise_power(), cfg }
     }
 
-    /// Push symbols through the channel, producing received samples plus
-    /// the per-symbol gains known at the PS. Draw order for Fast/Block/
-    /// None is the seed repo's (bit-exact under `V1`); the scenario
-    /// fadings draw all gains first, then one noise sample per symbol.
-    pub fn transmit(&self, symbols: &[Complex], rng: &mut Rng) -> Vec<FadedSymbol> {
-        // `cn_v(V1, ..)` is the exact `cn` code path, so the seed
-        // bitstream is untouched under the default version while
-        // `V2Batched` configs get the ziggurat stream on every arm.
-        let v = self.cfg.rng_version;
-        let mut out = Vec::with_capacity(symbols.len());
+    /// The one scalar channel core: fades + perturbs every symbol in the
+    /// seed repo's draw order and hands `(received sample r, gain c)` to
+    /// `sink`. Every scalar entry point ([`Channel::transmit`],
+    /// [`Channel::transmit_equalized`], [`Channel::transmit_into`]'s V1
+    /// scenario arm, [`Channel::transmit_csi_into`]'s V1 leg) is a sink
+    /// over this loop, so the bit-exact `V1` stream has a single source
+    /// of truth. Draw order: Fast/Block/None interleave gain and noise
+    /// draws per symbol (the seed bitstream, via `cn_v(V1, ..)` — the
+    /// exact `cn` code path); the scenario fadings draw all gains first,
+    /// then one noise sample per symbol. `gains` is only touched by the
+    /// scenario arm (pass a scratch buffer on hot paths).
+    fn scalar_faded_into<F: FnMut(Complex, Complex)>(
+        &self,
+        symbols: &[Complex],
+        rng: &mut Rng,
+        version: RngVersion,
+        gains: &mut Vec<Complex>,
+        mut sink: F,
+    ) {
         match self.cfg.fading {
             Fading::Fast => {
                 for &s in symbols {
-                    let h = rng.cn_v(v, 1.0);
+                    let h = rng.cn_v(version, 1.0);
                     let c = h.scale(self.amp);
-                    let n = rng.cn_v(v, self.sigma2);
-                    out.push(FadedSymbol { r: c * s + n, c });
+                    let n = rng.cn_v(version, self.sigma2);
+                    sink(c * s + n, c);
                 }
             }
             Fading::Block => {
                 let bl = self.cfg.block_len.max(1);
-                let mut h = rng.cn_v(v, 1.0);
+                let mut h = rng.cn_v(version, 1.0);
                 for (i, &s) in symbols.iter().enumerate() {
                     if i % bl == 0 && i != 0 {
-                        h = rng.cn_v(v, 1.0);
+                        h = rng.cn_v(version, 1.0);
                     }
                     let c = h.scale(self.amp);
-                    let n = rng.cn_v(v, self.sigma2);
-                    out.push(FadedSymbol { r: c * s + n, c });
+                    let n = rng.cn_v(version, self.sigma2);
+                    sink(c * s + n, c);
                 }
             }
             Fading::None => {
                 let c = Complex::new(self.amp, 0.0);
                 for &s in symbols {
-                    let n = rng.cn_v(v, self.sigma2);
-                    out.push(FadedSymbol { r: c * s + n, c });
+                    let n = rng.cn_v(version, self.sigma2);
+                    sink(c * s + n, c);
                 }
             }
             Fading::Rician | Fading::Jakes | Fading::GilbertElliott => {
-                let mut gains = Vec::new();
-                self.fading_gains_into(symbols.len(), rng, v, &mut gains);
-                for (&s, &h) in symbols.iter().zip(&gains) {
+                self.fading_gains_into(symbols.len(), rng, version, gains);
+                for (&s, &h) in symbols.iter().zip(gains.iter()) {
                     let c = h.scale(self.amp);
-                    let n = rng.cn_v(v, self.sigma2);
-                    out.push(FadedSymbol { r: c * s + n, c });
+                    let n = rng.cn_v(version, self.sigma2);
+                    sink(c * s + n, c);
                 }
             }
         }
+    }
+
+    /// Push symbols through the channel, producing received samples plus
+    /// the per-symbol gains known at the PS. Draw order for Fast/Block/
+    /// None is the seed repo's (bit-exact under `V1`); the scenario
+    /// fadings draw all gains first, then one noise sample per symbol.
+    pub fn transmit(&self, symbols: &[Complex], rng: &mut Rng) -> Vec<FadedSymbol> {
+        let v = self.cfg.rng_version;
+        let mut out = Vec::with_capacity(symbols.len());
+        let mut gains = Vec::new();
+        self.scalar_faded_into(symbols, rng, v, &mut gains, |r, c| {
+            out.push(FadedSymbol { r, c })
+        });
         out
     }
 
@@ -299,60 +320,10 @@ impl Channel {
     pub fn transmit_equalized(&self, symbols: &[Complex], rng: &mut Rng, out: &mut Vec<Complex>) {
         out.clear();
         out.reserve(symbols.len());
-        match self.cfg.fading {
-            Fading::Fast => {
-                for &s in symbols {
-                    let h = rng.cn(1.0);
-                    let c = h.scale(self.amp);
-                    let n = rng.cn(self.sigma2);
-                    out.push((c * s + n).div(c));
-                }
-            }
-            Fading::Block => {
-                let bl = self.cfg.block_len.max(1);
-                let mut h = rng.cn(1.0);
-                for (i, &s) in symbols.iter().enumerate() {
-                    if i % bl == 0 && i != 0 {
-                        h = rng.cn(1.0);
-                    }
-                    let c = h.scale(self.amp);
-                    let n = rng.cn(self.sigma2);
-                    out.push((c * s + n).div(c));
-                }
-            }
-            Fading::None => {
-                let c = Complex::new(self.amp, 0.0);
-                for &s in symbols {
-                    let n = rng.cn(self.sigma2);
-                    out.push((c * s + n).div(c));
-                }
-            }
-            Fading::Rician | Fading::Jakes | Fading::GilbertElliott => {
-                let mut gains = Vec::new();
-                self.scenario_scalar_into(symbols, rng, RngVersion::V1, &mut gains, out);
-            }
-        }
-    }
-
-    /// Scalar scenario leg shared by [`Channel::transmit_equalized`]
-    /// (local gains buffer, API compatibility) and
-    /// [`Channel::transmit_into`] (scratch-owned gains buffer, so the
-    /// hot path stays allocation-free under `V1` too). Draw order:
-    /// all gains, then one noise sample per symbol.
-    fn scenario_scalar_into(
-        &self,
-        symbols: &[Complex],
-        rng: &mut Rng,
-        version: RngVersion,
-        gains: &mut Vec<Complex>,
-        out: &mut Vec<Complex>,
-    ) {
-        self.fading_gains_into(symbols.len(), rng, version, gains);
-        for (&s, &h) in symbols.iter().zip(gains.iter()) {
-            let c = h.scale(self.amp);
-            let n = rng.cn_v(version, self.sigma2);
-            out.push((c * s + n).div(c));
-        }
+        let mut gains = Vec::new();
+        self.scalar_faded_into(symbols, rng, RngVersion::V1, &mut gains, |r, c| {
+            out.push(r.div(c))
+        });
     }
 
     /// Version dispatch: the seed-compatible scalar path under
@@ -375,13 +346,11 @@ impl Channel {
             (RngVersion::V1, _) => {
                 out.clear();
                 out.reserve(symbols.len());
-                self.scenario_scalar_into(
-                    symbols,
-                    rng,
-                    RngVersion::V1,
-                    &mut scratch.gains,
-                    out,
-                );
+                // Scratch-owned gains buffer: allocation-free under V1
+                // scenario fadings too.
+                self.scalar_faded_into(symbols, rng, RngVersion::V1, &mut scratch.gains, |r, c| {
+                    out.push(r.div(c))
+                });
             }
         }
     }
@@ -490,6 +459,61 @@ impl Channel {
                 }
             }
         }
+    }
+
+    /// Fused transmit + equalize that also reports the receiver-known
+    /// channel-state information `|c|^2` per symbol — everything a
+    /// soft-decision receiver (the ECRT min-sum LLR path) needs, with
+    /// zero steady-state allocation.
+    ///
+    /// Version dispatch mirrors [`Channel::transmit_into`]:
+    ///
+    /// * [`RngVersion::V1`] replays [`Channel::transmit`]'s draw order
+    ///   bit-exactly (same stream, same equalized observations as
+    ///   `FadedSymbol::equalized`), so legacy min-sum results are
+    ///   unchanged;
+    /// * [`RngVersion::V2Batched`] rides the batched engine: scenario
+    ///   gains first, then one block-filled ziggurat noise pass, with the
+    ///   algebraic equalization of [`Channel::transmit_block`].
+    pub fn transmit_csi_into(
+        &self,
+        symbols: &[Complex],
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut Vec<Complex>,
+        csi: &mut Vec<f64>,
+    ) {
+        let n = symbols.len();
+        out.clear();
+        out.reserve(n);
+        csi.clear();
+        csi.reserve(n);
+        if self.cfg.rng_version == RngVersion::V2Batched {
+            // Batched leg: gains for every scenario (Fast/Block/None
+            // included), then one noise fill, then the algebraic
+            // equalization `(c s + n)/c = s + n conj(c)/|c|^2`.
+            self.fading_gains_into(n, rng, RngVersion::V2Batched, &mut scratch.gains);
+            scratch.z.resize(2 * n, 0.0);
+            rng.fill_normal(&mut scratch.z);
+            let ns = (self.sigma2 * 0.5).sqrt();
+            for (i, &s) in symbols.iter().enumerate() {
+                let h = scratch.gains[i];
+                let d = self.amp * h.norm_sq();
+                let (nr, ni) = (ns * scratch.z[2 * i], ns * scratch.z[2 * i + 1]);
+                out.push(Complex::new(
+                    s.re + (nr * h.re + ni * h.im) / d,
+                    s.im + (ni * h.re - nr * h.im) / d,
+                ));
+                csi.push(self.amp * d); // amp^2 |h|^2 = |c|^2
+            }
+            return;
+        }
+        // Legacy scalar leg: the shared core replays `transmit`'s V1
+        // draws exactly; this sink just adds the |c|^2 report.
+        self.scalar_faded_into(symbols, rng, RngVersion::V1, &mut scratch.gains, |r, c| {
+            out.push(r.div(c));
+            csi.push(c.norm_sq());
+        });
     }
 
     /// Generate `n` unit-power fading gains `h` for the configured
@@ -814,6 +838,66 @@ mod tests {
         let fs = ch.transmit(&[s], &mut rng);
         let y = fs[0].equalized();
         assert!((y - s).abs() < 1e-3, "{y:?}");
+    }
+
+    #[test]
+    fn csi_path_v1_matches_legacy_faded_symbols() {
+        // transmit_csi_into under V1 must replay transmit()'s stream and
+        // reproduce its equalized observations and |c|^2 bit-for-bit, for
+        // every fading scenario.
+        let mut srng = Rng::new(21);
+        let syms: Vec<Complex> =
+            (0..1500).map(|_| Complex::new(srng.normal(), srng.normal())).collect();
+        for fading in Fading::ALL {
+            let cfg = ChannelConfig { fading, block_len: 48, ..ChannelConfig::with_snr(10.0) };
+            assert_eq!(cfg.rng_version, RngVersion::V1);
+            let ch = Channel::new(cfg);
+            let mut r1 = Rng::new(31);
+            let mut r2 = Rng::new(31);
+            let legacy = ch.transmit(&syms, &mut r1);
+            let mut eq = Vec::new();
+            let mut csi = Vec::new();
+            let mut scratch = ChannelScratch::new();
+            ch.transmit_csi_into(&syms, &mut r2, &mut scratch, &mut eq, &mut csi);
+            assert_eq!(eq.len(), legacy.len(), "{fading:?}");
+            for (i, f) in legacy.iter().enumerate() {
+                let y = f.equalized();
+                assert_eq!(y.re.to_bits(), eq[i].re.to_bits(), "{fading:?} sym {i}");
+                assert_eq!(y.im.to_bits(), eq[i].im.to_bits(), "{fading:?} sym {i}");
+                assert_eq!(f.c.norm_sq().to_bits(), csi[i].to_bits(), "{fading:?} csi {i}");
+            }
+            // Both consumed the stream identically.
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{fading:?}");
+        }
+    }
+
+    #[test]
+    fn csi_path_v2_has_sane_statistics() {
+        // The batched CSI leg is a different stream; check unit average
+        // gain power and that the equalized noise level matches sigma^2
+        // in the AWGN case (where |c|^2 is constant).
+        let mut rng = Rng::new(22);
+        let cfg = ChannelConfig {
+            fading: Fading::None,
+            rng_version: RngVersion::V2Batched,
+            ..ChannelConfig::with_snr(10.0)
+        };
+        let ch = Channel::new(cfg);
+        let syms = vec![Complex::new(1.0, 0.0); 200_000];
+        let mut eq = Vec::new();
+        let mut csi = Vec::new();
+        let mut scratch = ChannelScratch::new();
+        ch.transmit_csi_into(&syms, &mut rng, &mut scratch, &mut eq, &mut csi);
+        let c2 = cfg.large_scale();
+        assert!(csi.iter().all(|&x| (x - c2).abs() < 1e-12));
+        // Equalized noise variance = sigma^2 / |c|^2 (both axes).
+        let var: f64 = eq
+            .iter()
+            .map(|y| (y.re - 1.0) * (y.re - 1.0) + y.im * y.im)
+            .sum::<f64>()
+            / eq.len() as f64;
+        let expect = cfg.noise_power() / c2;
+        assert!((var / expect - 1.0).abs() < 0.02, "{var} vs {expect}");
     }
 
     #[test]

@@ -25,7 +25,8 @@ const VALUE_FLAGS: &[&str] = &[
     "out", "config", "set", "snr", "snr-list", "rounds", "clients", "mode",
     "scheme", "modulation", "seed", "bits", "points", "target", "lr",
     "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
-    "fading", "rician-k", "doppler", "rng-version",
+    "fading", "rician-k", "doppler", "rng-version", "agg-shards",
+    "pipeline-depth", "parallel-clients",
 ];
 
 impl Args {
@@ -119,6 +120,14 @@ mod tests {
         assert_eq!(a.opt_parse::<usize>("rounds").unwrap(), Some(100));
         assert!(a.has("quiet"));
         assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn scaling_flags_take_values() {
+        let a = parse("run --agg-shards 16 --pipeline-depth 2 --parallel-clients 8");
+        assert_eq!(a.opt_parse::<usize>("agg-shards").unwrap(), Some(16));
+        assert_eq!(a.opt_parse::<usize>("pipeline-depth").unwrap(), Some(2));
+        assert_eq!(a.opt_parse::<usize>("parallel-clients").unwrap(), Some(8));
     }
 
     #[test]

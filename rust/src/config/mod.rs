@@ -84,6 +84,20 @@ pub struct ExperimentConfig {
     /// available core, 1 = serial. Any value produces bit-identical
     /// traces (per-client RNG substreams + ordered aggregation).
     pub parallel_clients: usize,
+    /// Shards for the streaming aggregation engine
+    /// (`coordinator::aggregate`): the selection splits into this many
+    /// contiguous index ranges, each folded in selection order, combined
+    /// in shard order. 1 (default) = the seed's single selection-order
+    /// reduction, bit-exact with published traces; 0 = auto (one shard
+    /// per `AUTO_CLIENTS_PER_SHARD` selected clients, derived from the
+    /// selection size only — never the host). For any fixed value,
+    /// traces are bit-identical across `parallel_clients`.
+    pub agg_shards: usize,
+    /// Rounds in flight for pipelined evaluation: 0/1 (default) =
+    /// synchronous, d >= 2 = up to d-1 background evaluations (over
+    /// parameter snapshots) overlap the following rounds' client
+    /// fan-out. Results are bit-identical for any depth.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -123,6 +137,8 @@ impl Default for ExperimentConfig {
             data_dir: "data/mnist".into(),
             batch: 64,
             parallel_clients: 0,
+            agg_shards: 1,
+            pipeline_depth: 1,
         }
     }
 }
@@ -263,6 +279,12 @@ impl ExperimentConfig {
             }
             "parallel_clients" | "fl.parallel_clients" => {
                 self.parallel_clients = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "agg_shards" | "fl.agg_shards" => {
+                self.agg_shards = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "pipeline_depth" | "fl.pipeline_depth" => {
+                self.pipeline_depth = v.as_u64().ok_or_else(|| bad(key, v))? as usize
             }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
@@ -440,6 +462,33 @@ mod tests {
             let o = vec![(k.to_string(), v.to_string())];
             assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
         }
+    }
+
+    #[test]
+    fn scaling_knobs_parse_and_default_to_legacy() {
+        // Defaults must be the seed-compatible single-shard, synchronous
+        // round loop (bit-exact published traces).
+        let c = ExperimentConfig::default();
+        assert_eq!(c.agg_shards, 1);
+        assert_eq!(c.pipeline_depth, 1);
+        let o = vec![
+            ("agg_shards".to_string(), "16".to_string()),
+            ("pipeline_depth".to_string(), "2".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.agg_shards, 16);
+        assert_eq!(c.pipeline_depth, 2);
+        // Section-qualified spellings and 0 = auto / sync.
+        let o = vec![
+            ("fl.agg_shards".to_string(), "0".to_string()),
+            ("fl.pipeline_depth".to_string(), "0".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.agg_shards, 0);
+        assert_eq!(c.pipeline_depth, 0);
+        // Non-numeric values are rejected.
+        let o = vec![("agg_shards".to_string(), "many".to_string())];
+        assert!(ExperimentConfig::load(None, &o).is_err());
     }
 
     #[test]

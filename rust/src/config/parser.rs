@@ -155,6 +155,23 @@ mod tests {
     }
 
     #[test]
+    fn scaling_section_keys_flatten() {
+        // The coordinator's scaling knobs ride the generic section
+        // flattening: `[fl] agg_shards / pipeline_depth` arrive as
+        // dotted keys for `ExperimentConfig::apply`.
+        let doc = "[fl]\nagg_shards = 16\npipeline_depth = 2\nparallel_clients = 0\n";
+        let kv = parse(doc).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("fl.agg_shards".into(), Value::Int(16)),
+                ("fl.pipeline_depth".into(), Value::Int(2)),
+                ("fl.parallel_clients".into(), Value::Int(0)),
+            ]
+        );
+    }
+
+    #[test]
     fn comments_and_blank_lines() {
         let doc = "# full line comment\n\nx = \"a # not comment\" # trailing\n";
         let kv = parse(doc).unwrap();

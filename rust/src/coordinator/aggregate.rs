@@ -1,0 +1,397 @@
+//! Streaming sharded aggregation engine — the FedSGD reduction (paper
+//! §II-A, eq. 5) restructured for large federations.
+//!
+//! The seed coordinator buffered every client's post-transport gradient
+//! (O(clients × model) memory) and reduced serially after all passes
+//! joined. This module replaces that with a fixed-shape streaming
+//! reduction:
+//!
+//! * the round's selection is split into contiguous selection-index
+//!   ranges by a [`ShardPlan`];
+//! * each [`ShardAccumulator`] folds its clients' weighted gradients into
+//!   a shard-local [`ParamSet`] (plus [`ShardStats`]) **in selection
+//!   order** as passes complete, so per-round gradient memory is
+//!   O(shards × model) instead of O(clients × model);
+//! * [`ShardedAggregator::finish`] combines the shards **in shard
+//!   order** into the final weighted sum and round totals.
+//!
+//! # Determinism
+//!
+//! The reduction shape is a function of `(selection size, agg_shards)`
+//! only — never of worker count, scheduling, or machine parallelism — so
+//! for a fixed `agg_shards` the aggregate is bit-identical under any
+//! `parallel_clients`. With one shard the fold degenerates to the seed's
+//! single selection-order reduction and reproduces it bit-for-bit
+//! (pinned by the unit tests below and `tests/parallel_it.rs`).
+
+use crate::metrics::ShardStats;
+use crate::model::{Manifest, ParamSet};
+use crate::transport::TxReport;
+use crate::{Error, Result};
+
+/// Clients per shard when `agg_shards = 0` (auto). A fixed constant —
+/// deliberately never derived from worker count or host parallelism — so
+/// auto-sharded traces stay reproducible across machines.
+pub const AUTO_CLIENTS_PER_SHARD: usize = 64;
+
+/// Resolve the configured `agg_shards` knob against a round's selection
+/// size: `0` = auto (one shard per [`AUTO_CLIENTS_PER_SHARD`] selected
+/// clients), otherwise the requested count. Returns the count a
+/// [`ShardPlan`] will actually build (clamped to the selection, trailing
+/// empty shards shrunk away), so there is one source of truth for the
+/// reduction shape.
+pub fn resolve_shards(agg_shards: usize, selected: usize) -> usize {
+    let req = match agg_shards {
+        0 => selected.div_ceil(AUTO_CLIENTS_PER_SHARD),
+        s => s,
+    };
+    ShardPlan::new(selected, req).shard_count()
+}
+
+/// Fixed-shape shard plan: `selected` indices split into contiguous
+/// ranges of `clients_per_shard` (the last shard may be short; requested
+/// counts that would leave empty trailing shards are shrunk).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    n: usize,
+    chunk: usize,
+    shards: usize,
+}
+
+impl ShardPlan {
+    pub fn new(selected: usize, shards: usize) -> ShardPlan {
+        let shards = shards.clamp(1, selected.max(1));
+        let chunk = selected.div_ceil(shards).max(1);
+        // Re-derive the count actually touched so no trailing empty
+        // accumulators exist (e.g. 10 clients over 7 requested shards
+        // -> chunk 2 -> 5 shards).
+        ShardPlan { n: selected, chunk, shards: selected.div_ceil(chunk).max(1) }
+    }
+
+    /// Selection size the plan covers.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of (non-empty) shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards
+    }
+
+    /// Width of every shard but possibly the last.
+    pub fn clients_per_shard(&self) -> usize {
+        self.chunk
+    }
+
+    /// Shard owning selection index `i`.
+    pub fn shard_of(&self, i: usize) -> usize {
+        i / self.chunk
+    }
+}
+
+/// One client's round contribution, fed as its pass completes.
+#[derive(Clone, Copy, Debug)]
+pub struct Contribution<'a> {
+    /// Received (post-transport) flattened gradient.
+    pub rx: &'a [f32],
+    /// Aggregation weight |D_m| / |D_sel| (eq. 5).
+    pub weight: f32,
+    /// Client-reported training loss.
+    pub loss: f32,
+    /// Largest pre-transport |g|.
+    pub grad_max_abs: f32,
+    /// Fraction of pre-transport |g| below the paper's bound.
+    pub grad_small_frac: f64,
+    /// Transport cost / damage report.
+    pub report: &'a TxReport,
+}
+
+/// Shard-local streaming accumulator: a weighted `axpy` target plus the
+/// shard's running stats.
+pub struct ShardAccumulator {
+    acc: ParamSet,
+    stats: ShardStats,
+}
+
+impl ShardAccumulator {
+    pub fn new(shard: usize, man: &Manifest) -> ShardAccumulator {
+        ShardAccumulator { acc: ParamSet::zeros(man), stats: ShardStats::new(shard) }
+    }
+
+    /// Fold one contribution in (callers feed in selection order).
+    fn feed(&mut self, c: &Contribution<'_>) {
+        self.acc.axpy_flat(c.weight, c.rx);
+        let s = &mut self.stats;
+        s.clients += 1;
+        s.weight_sum += c.weight as f64;
+        s.loss_sum += c.loss as f64;
+        s.ber_sum += c.report.ber();
+        s.corrupted_sum += c.report.corrupted_floats as f64 / c.rx.len().max(1) as f64;
+        s.retransmissions += c.report.retransmissions;
+        s.grad_max_abs = s.grad_max_abs.max(c.grad_max_abs);
+        s.grad_small_sum += c.grad_small_frac;
+    }
+
+    pub fn stats(&self) -> &ShardStats {
+        &self.stats
+    }
+}
+
+/// Round totals combined in shard order (equal to the seed's
+/// selection-order totals when the plan has a single shard).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTotals {
+    pub clients: usize,
+    pub loss_sum: f64,
+    pub ber_sum: f64,
+    pub corrupted_sum: f64,
+    pub retransmissions: usize,
+    pub grad_max_abs: f32,
+    pub grad_small_sum: f64,
+}
+
+/// The round-level engine: a [`ShardPlan`] plus one live
+/// [`ShardAccumulator`] per shard. Peak resident accumulators ==
+/// `shard_count()` for the whole round.
+pub struct ShardedAggregator {
+    plan: ShardPlan,
+    accs: Vec<ShardAccumulator>,
+    next: usize,
+    num_params: usize,
+}
+
+impl ShardedAggregator {
+    pub fn new(man: &Manifest, selected: usize, shards: usize) -> ShardedAggregator {
+        let plan = ShardPlan::new(selected, shards);
+        let accs =
+            (0..plan.shard_count()).map(|s| ShardAccumulator::new(s, man)).collect();
+        ShardedAggregator { plan, accs, next: 0, num_params: man.num_params() }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.accs.len()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.num_params
+    }
+
+    /// Feed selection index `sel_idx`'s contribution. Must be called in
+    /// selection order — the in-order fold is exactly what pins
+    /// bit-identical reductions across worker counts, so violations are
+    /// hard errors, not silent reorderings.
+    pub fn feed(&mut self, sel_idx: usize, c: &Contribution<'_>) -> Result<()> {
+        if sel_idx != self.next {
+            return Err(Error::Shape(format!(
+                "sharded aggregation fed out of order: got selection index \
+                 {sel_idx}, expected {}",
+                self.next
+            )));
+        }
+        if c.rx.len() != self.num_params {
+            return Err(Error::Shape(format!(
+                "selection index {sel_idx} delivered {} floats, model has {}",
+                c.rx.len(),
+                self.num_params
+            )));
+        }
+        self.next += 1;
+        self.accs[self.plan.shard_of(sel_idx)].feed(c);
+        Ok(())
+    }
+
+    /// Combine shards in shard order: shard 0's accumulator is the base
+    /// (so a 1-shard plan is bit-exactly the seed's serial reduction) and
+    /// the rest merge in with [`ParamSet::add_assign`]. Returns the
+    /// weighted-gradient sum, the round totals, and per-shard stats.
+    pub fn finish(self) -> (ParamSet, RoundTotals, Vec<ShardStats>) {
+        let mut accs = self.accs;
+        let stats: Vec<ShardStats> = accs.iter().map(|a| a.stats).collect();
+        let mut totals = RoundTotals::default();
+        for s in &stats {
+            totals.clients += s.clients;
+            totals.loss_sum += s.loss_sum;
+            totals.ber_sum += s.ber_sum;
+            totals.corrupted_sum += s.corrupted_sum;
+            totals.retransmissions += s.retransmissions;
+            totals.grad_max_abs = totals.grad_max_abs.max(s.grad_max_abs);
+            totals.grad_small_sum += s.grad_small_sum;
+        }
+        let mut sum = accs.remove(0).acc;
+        for a in &accs {
+            sum.add_assign(&a.acc);
+        }
+        (sum, totals, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 16,4\nparam b1 16\nparam w2 8,2\nparam b2 4\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap()
+    }
+
+    fn payloads(n_clients: usize, num_params: usize) -> Vec<(f32, Vec<f32>)> {
+        let root = Rng::new(77);
+        (0..n_clients)
+            .map(|c| {
+                let mut rng = root.substream("pay", c as u64, 0);
+                let w = rng.uniform(0.01, 0.3) as f32;
+                let v: Vec<f32> =
+                    (0..num_params).map(|_| rng.normal_scaled(0.0, 0.2) as f32).collect();
+                (w, v)
+            })
+            .collect()
+    }
+
+    fn feed_all(agg: &mut ShardedAggregator, pays: &[(f32, Vec<f32>)]) {
+        let report = TxReport { retransmissions: 1, ..Default::default() };
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            agg.feed(
+                i,
+                &Contribution {
+                    rx,
+                    weight: *w,
+                    loss: 0.5 + i as f32 * 0.125,
+                    grad_max_abs: 0.25 + i as f32 * 0.0625,
+                    grad_small_frac: 1.0,
+                    report: &report,
+                },
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn plan_shapes() {
+        let p = ShardPlan::new(10, 4);
+        assert_eq!((p.shard_count(), p.clients_per_shard()), (4, 3));
+        assert_eq!(p.shard_of(0), 0);
+        assert_eq!(p.shard_of(9), 3);
+        // Requested shards that would leave empty trailing shards shrink.
+        let p = ShardPlan::new(10, 7);
+        assert_eq!((p.shard_count(), p.clients_per_shard()), (5, 2));
+        // Degenerate cases.
+        assert_eq!(ShardPlan::new(1, 16).shard_count(), 1);
+        assert_eq!(ShardPlan::new(0, 3).shard_count(), 1);
+        assert_eq!(ShardPlan::new(5, 1).shard_count(), 1);
+        assert_eq!(ShardPlan::new(5, 5).clients_per_shard(), 1);
+    }
+
+    #[test]
+    fn resolve_shards_auto_is_size_derived() {
+        assert_eq!(resolve_shards(1, 100), 1);
+        assert_eq!(resolve_shards(8, 100), 8);
+        assert_eq!(resolve_shards(8, 3), 3); // clamped to selection
+        assert_eq!(resolve_shards(0, 64), 1);
+        assert_eq!(resolve_shards(0, 65), 2);
+        assert_eq!(resolve_shards(0, 10_000), 157);
+        assert_eq!(resolve_shards(0, 1), 1);
+        assert_eq!(resolve_shards(3, 0), 1);
+        // The resolved value is the count the plan actually builds (no
+        // dueling clamps): 7 requested over 10 clients -> 5 shards.
+        assert_eq!(resolve_shards(7, 10), 5);
+        assert_eq!(ShardPlan::new(10, resolve_shards(7, 10)).shard_count(), 5);
+    }
+
+    #[test]
+    fn single_shard_is_bit_exact_seed_reduction() {
+        // agg_shards = 1 must reproduce the seed's collect-then-reduce
+        // float order exactly: zeros + weighted axpy in selection order.
+        let man = manifest();
+        let pays = payloads(9, man.num_params());
+        let mut agg = ShardedAggregator::new(&man, pays.len(), 1);
+        feed_all(&mut agg, &pays);
+        let (sum, totals, stats) = agg.finish();
+
+        let mut reference = ParamSet::zeros(&man);
+        let mut loss_sum = 0.0f64;
+        for (w, rx) in &pays {
+            reference.axpy_flat(*w, rx);
+        }
+        for (i, _) in pays.iter().enumerate() {
+            loss_sum += (0.5 + i as f32 * 0.125) as f64;
+        }
+        let bits = |p: &ParamSet| {
+            p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&sum), bits(&reference));
+        assert_eq!(totals.loss_sum.to_bits(), loss_sum.to_bits());
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].clients, 9);
+        assert_eq!(totals.retransmissions, 9);
+    }
+
+    #[test]
+    fn sharded_matches_manual_chunked_reference() {
+        // k shards == per-chunk partial sums combined in shard order,
+        // bit-for-bit — including a non-divisible selection.
+        let man = manifest();
+        let pays = payloads(11, man.num_params());
+        for shards in [2usize, 3, 4, 11] {
+            let mut agg = ShardedAggregator::new(&man, pays.len(), shards);
+            let plan = *agg.plan();
+            feed_all(&mut agg, &pays);
+            let (sum, _, stats) = agg.finish();
+
+            let chunk = plan.clients_per_shard();
+            let mut partials: Vec<ParamSet> = Vec::new();
+            for group in pays.chunks(chunk) {
+                let mut p = ParamSet::zeros(&man);
+                for (w, rx) in group {
+                    p.axpy_flat(*w, rx);
+                }
+                partials.push(p);
+            }
+            assert_eq!(partials.len(), stats.len(), "shards={shards}");
+            let mut reference = partials.remove(0);
+            for p in &partials {
+                reference.add_assign(p);
+            }
+            let bits = |p: &ParamSet| {
+                p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&sum), bits(&reference), "shards={shards}");
+            let fed: usize = stats.iter().map(|s| s.clients).sum();
+            assert_eq!(fed, pays.len());
+        }
+    }
+
+    #[test]
+    fn out_of_order_and_bad_shape_are_rejected() {
+        let man = manifest();
+        let pays = payloads(4, man.num_params());
+        let report = TxReport::default();
+        let mut agg = ShardedAggregator::new(&man, 4, 2);
+        let c = Contribution {
+            rx: &pays[0].1,
+            weight: 0.25,
+            loss: 0.0,
+            grad_max_abs: 0.0,
+            grad_small_frac: 1.0,
+            report: &report,
+        };
+        // Out of order: index 1 before 0.
+        assert!(agg.feed(1, &c).is_err());
+        agg.feed(0, &c).unwrap();
+        // Wrong payload shape.
+        let short = Contribution { rx: &pays[0].1[..3], ..c };
+        assert!(agg.feed(1, &short).is_err());
+    }
+}

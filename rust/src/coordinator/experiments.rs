@@ -162,7 +162,10 @@ pub fn ecrt_overhead(snrs: &[f64], payload_floats: usize, seed: u64) -> Vec<(f64
 }
 
 /// E7 — empirical gradient-bound check on the live system: runs a few
-/// rounds with the Perfect transport and reports the max |g| seen.
+/// rounds with the Perfect transport and reports `(max |g| seen, minimum
+/// per-round mean fraction of gradient entries with |g| < 1)` — the
+/// second value is the actual fraction of small gradients (paper §III),
+/// not a 0/1 indicator.
 pub fn gradient_bound(
     base: &ExperimentConfig,
     engine: &Engine,
@@ -178,8 +181,7 @@ pub fn gradient_bound(
     for round in 0..rounds {
         let out = server.run_round(round)?;
         max_abs = max_abs.max(out.grad_max_abs);
-        // corrupted_frac unused here; report the bound margin instead.
-        frac_small_min = frac_small_min.min(if out.grad_max_abs < 1.0 { 1.0 } else { 0.0 });
+        frac_small_min = frac_small_min.min(out.grad_small_frac);
     }
     Ok((max_abs, frac_small_min))
 }
@@ -220,6 +222,33 @@ mod tests {
         assert!(t.contains("s0"));
         assert!(t.contains("s1, s4, s5"));
         assert!(t.contains("s0, s1, s2, s4, s6, s8, s9, s10"));
+    }
+
+    #[test]
+    fn gradient_bound_reports_true_fraction() {
+        // Synthetic backend: every gradient entry is clamped inside
+        // (-1, 1), so the per-round small-gradient fraction must be
+        // exactly 1.0 (and the max strictly below the bound) — while the
+        // return type is a real fraction in [0, 1], not a 0/1 indicator.
+        let man = crate::model::Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 32,8\nparam b1 8\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap();
+        let engine = Engine::synthetic_with(man, 0xE7);
+        let cfg = ExperimentConfig {
+            clients: 4,
+            participants_per_round: 4,
+            train_n: 400,
+            test_n: 50,
+            batch: 8,
+            eval_every: 0,
+            ..ExperimentConfig::default()
+        };
+        let (max_abs, frac_small) = gradient_bound(&cfg, &engine, 3).unwrap();
+        assert!(max_abs < 1.0, "synthetic |g| bound violated: {max_abs}");
+        assert_eq!(frac_small, 1.0);
     }
 
     #[test]

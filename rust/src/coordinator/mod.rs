@@ -3,13 +3,17 @@
 //! [`server::FlServer`] owns the global model and drives rounds:
 //! broadcast (error-free downlink, per the paper), local FedSGD steps via
 //! the PJRT [`crate::runtime::Engine`], uplink through a
-//! [`crate::transport::Transport`] scheme, weighted aggregation (eq. 5),
-//! and the SGD update (eq. 6). [`experiments`] contains the drivers that
-//! regenerate the paper's figures.
+//! [`crate::transport::Transport`] scheme, streaming sharded aggregation
+//! (eq. 5, [`aggregate`]), and the SGD update (eq. 6). Evaluation can be
+//! pipelined behind the next round's fan-out
+//! (`ExperimentConfig::pipeline_depth`). [`experiments`] contains the
+//! drivers that regenerate the paper's figures.
 
+pub mod aggregate;
 pub mod client;
 pub mod experiments;
 pub mod server;
 
+pub use aggregate::{ShardAccumulator, ShardPlan, ShardedAggregator};
 pub use client::ClientState;
 pub use server::{FlServer, RoundOutcome};

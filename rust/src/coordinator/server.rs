@@ -4,38 +4,72 @@
 //! Per round: select participants, each computes a one-step minibatch
 //! gradient through the AOT-compiled L2 model (eq. 4), uploads it over
 //! the configured wireless transport (the experimental variable), the PS
-//! aggregates with |D_m|/|D| weights (eq. 5) and applies SGD (eq. 6).
-//! The downlink broadcast is error-free (paper §II-B justification).
+//! aggregates with |D_m|/|D_sel| weights (eq. 5 — equal to the paper's
+//! |D_m|/|D| at full participation, the paper's setting) and applies SGD
+//! (eq. 6). The downlink broadcast is error-free (paper §II-B
+//! justification).
 //!
-//! # Parallel client fan-out and determinism
+//! # Streaming sharded aggregation, parallelism, and determinism
 //!
 //! The per-client compute + uplink phase fans out across
 //! `std::thread::scope` workers (`ExperimentConfig::parallel_clients`;
-//! 0 = one per core, 1 = serial). This is safe and **bit-deterministic**
-//! by construction:
+//! 0 = one per core, 1 = serial). Completed passes stream through a
+//! bounded in-order [`DeliveryRing`] into the
+//! [`crate::coordinator::aggregate::ShardedAggregator`], so per-round
+//! gradient memory is O(agg_shards × model) for the accumulators plus
+//! O(workers × model) for in-flight passes — never O(clients × model).
+//!
+//! The result is **bit-deterministic** by construction:
 //!
 //! * every stochastic draw a client makes comes from its own seeded RNG
 //!   substream (`root_rng.substream("batch"/"channel", client, round)`),
 //!   so no client observes another's scheduling;
-//! * `Transport::send_with` is documented re-entrant, and each worker
+//! * `Transport::send_into` is documented re-entrant, and each worker
 //!   owns a private [`TxScratch`];
-//! * aggregation (the only floating-point reduction) always runs on the
-//!   coordinator thread in selection order, after all workers join.
+//! * the floating-point reduction has a **fixed shape**: shards are
+//!   contiguous selection-index ranges determined only by
+//!   `(selection size, agg_shards)`, each shard folds its clients in
+//!   selection order (the ring's consumer runs on the coordinator thread
+//!   and takes passes strictly in selection order), and shards combine
+//!   in shard order.
 //!
-//! Consequently a parallel `run_round` produces a `Trace` bit-identical
-//! to the serial path for the same seed — `tests/parallel_it.rs` holds
-//! this contract.
+//! What is pinned, precisely (`tests/parallel_it.rs` holds all three):
+//!
+//! * for a **fixed `agg_shards`**, traces and global models are
+//!   bit-identical for any worker count (`parallel_clients` ∈ {serial,
+//!   any N, one-per-core}) and any `pipeline_depth`;
+//! * **`agg_shards = 1`** reproduces the seed repo's serial
+//!   collect-then-reduce path bit-for-bit (single selection-order fold);
+//! * **different `agg_shards` values are different reduction shapes**:
+//!   they are each deterministic but not bit-equal to one another (float
+//!   addition is not associative). `agg_shards = 0` resolves to a
+//!   selection-size-derived count that never depends on the host.
+//!
+//! # Pipelined evaluation
+//!
+//! With `ExperimentConfig::pipeline_depth >= 2`, [`FlServer::run`]
+//! evaluates round `r` on a background worker over a snapshot of the
+//! global model while round `r+1`'s client fan-out proceeds; trace rows
+//! are still emitted in round order, and results are bit-identical to
+//! the synchronous path because evaluation never mutates server state.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::{resolve_shards, Contribution, ShardedAggregator};
 use crate::coordinator::ClientState;
-use crate::data::{partition_non_iid, TrainTest};
-use crate::metrics::{RoundRecord, Trace};
+use crate::data::{partition_non_iid, Dataset, TrainTest};
+use crate::metrics::{RoundRecord, ShardStats, Trace};
 use crate::model::ParamSet;
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::timing::Ledger;
 use crate::transport::{Transport, TxReport, TxScratch};
 use crate::Result;
+
+/// The paper's §III gradient-bound diagnostic threshold (|g| < 1).
+const GRAD_BOUND: f32 = 1.0;
 
 /// Aggregated observables of one round.
 #[derive(Clone, Copy, Debug, Default)]
@@ -48,15 +82,157 @@ pub struct RoundOutcome {
     pub retransmissions: usize,
     pub corrupted_frac: f64,
     pub grad_max_abs: f32,
+    /// Mean (across clients) fraction of pre-transport gradient entries
+    /// with |g| below the paper's §III bound of 1.
+    pub grad_small_frac: f64,
+    /// Shards the streaming aggregation used this round.
+    pub agg_shards: usize,
+    /// Measured peak client passes in flight at once (claimed but not
+    /// yet recycled). Bounded by the delivery window of 2 × workers —
+    /// O(workers) gradient-buffer memory, never O(clients).
+    pub peak_inflight: usize,
 }
 
-/// What one client contributes to a round before aggregation.
-struct ClientPass {
+/// Reusable buffers for one in-flight client pass: the flattened TX
+/// gradient, the received floats, and the pass observables. A bounded
+/// pool of these (the delivery window) replaces the seed's per-client
+/// `Vec` allocations.
+#[derive(Default)]
+struct PassSlot {
+    flat: Vec<f32>,
+    rx: Vec<f32>,
     loss: f32,
     grad_max: f32,
-    /// Received (post-transport) flattened gradient.
-    rx: Vec<f32>,
+    grad_small_frac: f64,
     report: TxReport,
+}
+
+/// Bounded in-order delivery ring between the client-pass workers and
+/// the coordinator-side feeder.
+///
+/// Workers *claim* the next unclaimed selection index (dynamic load
+/// balancing — a slow client never stalls its worker's later strided
+/// work) together with a recycled [`PassSlot`]; the consumer takes
+/// passes **strictly in selection order** and recycles the buffers. The
+/// window bounds in-flight passes, so memory stays O(window × model)
+/// while the feeding order — and therefore the reduction — is
+/// independent of worker count and scheduling.
+struct DeliveryRing {
+    window: usize,
+    jobs: usize,
+    state: Mutex<RingState>,
+    /// Signalled when a pass lands in the ring (consumer waits here).
+    produced: Condvar,
+    /// Signalled when window space / a free buffer appears, or on halt
+    /// (claiming workers wait here).
+    freed: Condvar,
+}
+
+struct RingState {
+    /// Next selection index not yet claimed by any worker.
+    next: usize,
+    /// Next selection index the consumer will take.
+    base: usize,
+    /// High-water mark of in-flight passes (claimed, not yet recycled).
+    peak: usize,
+    /// Abort flag (set when the consumer hits an error).
+    stop: bool,
+    /// Ring positions `i % window` holding produced, unconsumed passes.
+    slots: Vec<Option<(PassSlot, Result<()>)>>,
+    /// Recycled pass buffers awaiting a producer.
+    free: Vec<PassSlot>,
+}
+
+impl DeliveryRing {
+    fn new(jobs: usize, buffers: Vec<PassSlot>) -> DeliveryRing {
+        let window = buffers.len();
+        DeliveryRing {
+            window,
+            jobs,
+            state: Mutex::new(RingState {
+                next: 0,
+                base: 0,
+                peak: 0,
+                stop: false,
+                slots: (0..window).map(|_| None).collect(),
+                free: buffers,
+            }),
+            produced: Condvar::new(),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Claim the next selection index plus a recycled buffer, or `None`
+    /// when the round is exhausted / aborted. Blocks while the in-order
+    /// window is full. Liveness: every in-flight buffer maps to a
+    /// distinct index in `[base, base + window)`, so whenever `free` is
+    /// empty the consumer's next index is already in flight and will be
+    /// produced, which recycles a buffer.
+    fn claim(&self) -> Option<(usize, PassSlot)> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.stop || st.next >= self.jobs {
+                return None;
+            }
+            if st.next < st.base + self.window {
+                if let Some(buf) = st.free.pop() {
+                    let i = st.next;
+                    st.next += 1;
+                    st.peak = st.peak.max(st.next - st.base);
+                    return Some((i, buf));
+                }
+            }
+            st = self.freed.wait(st).unwrap();
+        }
+    }
+
+    /// Land a computed pass for selection index `i`.
+    fn produce(&self, i: usize, buf: PassSlot, r: Result<()>) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(st.slots[i % self.window].is_none());
+        st.slots[i % self.window] = Some((buf, r));
+        self.produced.notify_all();
+    }
+
+    /// Take selection index `i` (the consumer's next index), blocking
+    /// until a worker lands it.
+    fn consume(&self, i: usize) -> (PassSlot, Result<()>) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(p) = st.slots[i % self.window].take() {
+                return p;
+            }
+            st = self.produced.wait(st).unwrap();
+        }
+    }
+
+    /// Return a consumed buffer, advancing the window one step.
+    fn recycle(&self, buf: PassSlot) {
+        let mut st = self.state.lock().unwrap();
+        st.base += 1;
+        st.free.push(buf);
+        self.freed.notify_all();
+    }
+
+    /// Abort the round: unblocks all claiming workers.
+    fn halt(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.stop = true;
+        self.freed.notify_all();
+    }
+
+    /// Drain every buffer back out and report the measured in-flight
+    /// high-water mark (call after the workers joined).
+    fn into_parts(self) -> (Vec<PassSlot>, usize) {
+        let st = self.state.into_inner().unwrap();
+        let mut out = st.free;
+        for s in st.slots {
+            if let Some((buf, _)) = s {
+                out.push(buf);
+            }
+        }
+        (out, st.peak)
+    }
 }
 
 /// The FL control plane.
@@ -64,17 +240,22 @@ pub struct FlServer<'e> {
     pub cfg: ExperimentConfig,
     engine: &'e Engine,
     transport: Transport,
-    data: TrainTest,
+    train: Dataset,
+    /// Shared with the pipelined-evaluation workers.
+    test: Arc<Dataset>,
     clients: Vec<ClientState>,
     params: ParamSet,
     ledger: Ledger,
     root_rng: Rng,
-    /// Total examples across all clients (aggregation denominator |D|).
-    total_data: usize,
     /// One transport workspace per worker slot, persisted across rounds
     /// so the interleaver tables and bit buffers are built exactly once
     /// per experiment (scratch contents never influence results).
     scratch_pool: Vec<TxScratch>,
+    /// Recycled pass buffers (the delivery window), persisted across
+    /// rounds so steady-state rounds make no per-pass allocations.
+    slot_pool: Vec<PassSlot>,
+    /// Per-shard aggregation stats of the most recent round.
+    shard_stats: Vec<ShardStats>,
 }
 
 impl<'e> FlServer<'e> {
@@ -86,7 +267,6 @@ impl<'e> FlServer<'e> {
         let shards =
             partition_non_iid(&data.train, cfg.clients, cfg.shards_per_client, &mut part_rng);
         let clients: Vec<ClientState> = shards.into_iter().map(ClientState::new).collect();
-        let total_data = clients.iter().map(ClientState::data_size).sum();
         let mut init_rng = root_rng.substream("init", 0, 0);
         let params = engine.init_params(&mut init_rng);
         let transport = Transport::new(cfg.transport());
@@ -94,13 +274,15 @@ impl<'e> FlServer<'e> {
             cfg,
             engine,
             transport,
-            data,
+            train: data.train,
+            test: Arc::new(data.test),
             clients,
             params,
             ledger: Ledger::new(),
             root_rng,
-            total_data,
             scratch_pool: Vec::new(),
+            slot_pool: Vec::new(),
+            shard_stats: Vec::new(),
         })
     }
 
@@ -116,6 +298,12 @@ impl<'e> FlServer<'e> {
 
     pub fn ledger(&self) -> &Ledger {
         &self.ledger
+    }
+
+    /// Per-shard aggregation stats of the most recent round (empty
+    /// before the first round).
+    pub fn shard_stats(&self) -> &[ShardStats] {
+        &self.shard_stats
     }
 
     /// Participants for `round` (all clients when the config says so —
@@ -139,153 +327,314 @@ impl<'e> FlServer<'e> {
     }
 
     /// One client's full round contribution: minibatch gradient (eq. 4)
-    /// plus the wireless uplink. Pure w.r.t. the server state (`&self`)
-    /// and deterministic given `(client, round)` — all randomness comes
-    /// from substreams keyed on those, so this is safe to run on any
-    /// worker thread.
-    fn client_pass(&self, ci: usize, round: usize, scratch: &mut TxScratch) -> Result<ClientPass> {
+    /// plus the wireless uplink, computed into the pass slot's reusable
+    /// buffers. Pure w.r.t. the server state (`&self`) and deterministic
+    /// given `(client, round)` — all randomness comes from substreams
+    /// keyed on those, so this is safe to run on any worker thread.
+    fn client_pass(
+        &self,
+        ci: usize,
+        round: usize,
+        scratch: &mut TxScratch,
+        slot: &mut PassSlot,
+    ) -> Result<()> {
         let client = &self.clients[ci];
         // Local computation (eq. 4): one minibatch gradient.
         let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
         let (x, y) = client.gather(
-            &self.data.train,
+            &self.train,
             self.cfg.batch,
             self.engine.manifest.num_classes,
             &mut brng,
         );
         let (loss, grads) = self.engine.train_step(&self.params, &x, &y)?;
 
-        // Uplink over the wireless substrate.
-        let flat = grads.flatten();
+        // Uplink over the wireless substrate, into the slot's buffers.
+        // One fused sweep over the flattened gradient collects both
+        // diagnostics (max |g|, small-gradient fraction) instead of
+        // re-walking the model-sized tensors per statistic.
+        grads.flatten_into(&mut slot.flat);
+        let mut grad_max = 0f32;
+        let mut small = 0usize;
+        for &g in &slot.flat {
+            let a = g.abs();
+            grad_max = grad_max.max(a);
+            if a < GRAD_BOUND {
+                small += 1;
+            }
+        }
+        slot.grad_max = grad_max;
+        slot.grad_small_frac = if slot.flat.is_empty() {
+            1.0
+        } else {
+            small as f64 / slot.flat.len() as f64
+        };
         let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
-        let (rx, report) = self.transport.send_with(&flat, &mut crng, scratch);
-        Ok(ClientPass { loss, grad_max: grads.max_abs(), rx, report })
+        slot.report = self.transport.send_into(&slot.flat, &mut crng, scratch, &mut slot.rx);
+        slot.loss = loss;
+        Ok(())
+    }
+
+    /// Fold a completed pass into its shard (consumer side — always
+    /// called in selection order, which fixes the reduction shape).
+    fn feed_pass(
+        &self,
+        agg: &mut ShardedAggregator,
+        ledger: &mut Ledger,
+        sel_idx: usize,
+        ci: usize,
+        selected_data: usize,
+        slot: &PassSlot,
+    ) -> Result<()> {
+        let weight = self.clients[ci].data_size() as f32 / selected_data as f32;
+        agg.feed(
+            sel_idx,
+            &Contribution {
+                rx: &slot.rx,
+                weight,
+                loss: slot.loss,
+                grad_max_abs: slot.grad_max,
+                grad_small_frac: slot.grad_small_frac,
+                report: &slot.report,
+            },
+        )?;
+        ledger.record_client(slot.report.seconds);
+        Ok(())
     }
 
     /// Execute one full FL round.
     pub fn run_round(&mut self, round: usize) -> Result<RoundOutcome> {
         let selected = self.select(round);
+        let n = selected.len();
+        // Aggregation weights are normalized over the round's selection:
+        // |D_m| / |D_sel|, i.e. the paper's |D_m|/|D| whenever every
+        // client participates (the paper's setting).
         let selected_data: usize =
             selected.iter().map(|&c| self.clients[c].data_size()).sum();
-        let _ = self.total_data; // |D| fixed; weights below use the round's selection
+        let workers = self.worker_count(n);
+        let shards = resolve_shards(self.cfg.agg_shards, n);
+        let mut agg = ShardedAggregator::new(&self.engine.manifest, n, shards);
 
-        // Phase 1 — per-client compute + uplink, fanned out over scoped
-        // workers on contiguous chunks of the selection. `results[i]`
-        // always holds client `selected[i]`'s pass regardless of which
-        // worker ran it.
-        let workers = self.worker_count(selected.len());
-        let mut results: Vec<Option<Result<ClientPass>>> = Vec::new();
-        results.resize_with(selected.len(), || None);
-        // Detach the scratch pool from `self` so workers can hold `&self`
-        // alongside their `&mut TxScratch` slice elements.
+        // Detach the reusable pools and the ledger from `self` so workers
+        // can hold `&self` while the consumer side mutates them.
+        let mut ledger = std::mem::take(&mut self.ledger);
         let mut pool = std::mem::take(&mut self.scratch_pool);
         if pool.len() < workers {
             pool.resize_with(workers, TxScratch::new);
         }
-        if workers <= 1 {
+        let mut slots = std::mem::take(&mut self.slot_pool);
+        // Two in-flight passes per worker: enough slack that workers
+        // rarely stall on the in-order feeder, still O(workers) memory.
+        let window = if workers <= 1 { 1 } else { (2 * workers).min(n).max(1) };
+        slots.truncate(window);
+        while slots.len() < window {
+            slots.push(PassSlot::default());
+        }
+
+        let mut peak_inflight = 0usize;
+        let run_res: Result<()> = if workers <= 1 {
+            // Serial: compute and feed in place — one resident pass.
             let scratch = &mut pool[0];
-            for (slot, &ci) in results.iter_mut().zip(&selected) {
-                *slot = Some(self.client_pass(ci, round, scratch));
+            let slot = &mut slots[0];
+            let mut res = Ok(());
+            for (i, &ci) in selected.iter().enumerate() {
+                peak_inflight = 1;
+                res = self.client_pass(ci, round, scratch, slot).and_then(|()| {
+                    self.feed_pass(&mut agg, &mut ledger, i, ci, selected_data, slot)
+                });
+                if res.is_err() {
+                    break;
+                }
             }
+            res
         } else {
+            let ring = DeliveryRing::new(n, std::mem::take(&mut slots));
             let this: &FlServer<'e> = &*self;
-            let chunk = selected.len().div_ceil(workers);
-            std::thread::scope(|s| {
-                for ((idxs, out), scratch) in selected
-                    .chunks(chunk)
-                    .zip(results.chunks_mut(chunk))
-                    .zip(pool.iter_mut())
-                {
+            let selected_ref: &[usize] = &selected;
+            let res = std::thread::scope(|s| {
+                for scratch in pool.iter_mut().take(workers) {
+                    let ring = &ring;
                     s.spawn(move || {
-                        for (slot, &ci) in out.iter_mut().zip(idxs) {
-                            *slot = Some(this.client_pass(ci, round, scratch));
+                        while let Some((i, mut buf)) = ring.claim() {
+                            // A panicking backend must not wedge the ring
+                            // (the consumer would wait forever): convert
+                            // it into a pass error and keep draining.
+                            let r = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    this.client_pass(selected_ref[i], round, scratch, &mut buf)
+                                }),
+                            )
+                            .unwrap_or_else(|_| {
+                                Err(crate::Error::Runtime(
+                                    "client pass panicked".into(),
+                                ))
+                            });
+                            ring.produce(i, buf, r);
                         }
                     });
                 }
+                // Consumer: strictly in selection order, so the reduction
+                // shape never depends on worker scheduling.
+                let mut res = Ok(());
+                for i in 0..n {
+                    let (buf, r) = ring.consume(i);
+                    let fed = r.and_then(|()| {
+                        this.feed_pass(
+                            &mut agg,
+                            &mut ledger,
+                            i,
+                            selected_ref[i],
+                            selected_data,
+                            &buf,
+                        )
+                    });
+                    ring.recycle(buf);
+                    if let Err(e) = fed {
+                        res = Err(e);
+                        ring.halt();
+                        break;
+                    }
+                }
+                res
             });
-        }
+            let (buffers, peak) = ring.into_parts();
+            slots = buffers;
+            peak_inflight = peak;
+            res
+        };
+
         self.scratch_pool = pool;
+        self.slot_pool = slots;
+        self.ledger = ledger;
+        run_res?;
 
-        // Phase 2 — weighted aggregation (eq. 5) on the coordinator
-        // thread, in selection order: the float-summation order is fixed,
-        // so serial and parallel rounds agree bit-for-bit.
-        let mut agg = ParamSet::zeros(&self.engine.manifest);
-        let mut loss_sum = 0.0f64;
-        let mut ber_sum = 0.0f64;
-        let mut corrupted = 0.0f64;
-        let mut retx = 0usize;
-        let mut grad_max = 0.0f32;
-        for (slot, &ci) in results.iter_mut().zip(&selected) {
-            let pass = slot.take().expect("worker filled every slot")?;
-            if pass.rx.len() != agg.num_params() {
-                return Err(crate::Error::Shape(format!(
-                    "client {ci} delivered {} floats, model has {}",
-                    pass.rx.len(),
-                    agg.num_params()
-                )));
-            }
-            let w = self.clients[ci].data_size() as f32 / selected_data as f32;
-            agg.axpy_flat(w, &pass.rx);
-            loss_sum += pass.loss as f64;
-            grad_max = grad_max.max(pass.grad_max);
-            self.ledger.record_client(pass.report.seconds);
-            ber_sum += pass.report.ber();
-            corrupted += pass.report.corrupted_floats as f64 / pass.rx.len() as f64;
-            retx += pass.report.retransmissions;
-        }
-
-        // Global update (eq. 6); downlink assumed error-free.
-        self.params.sgd_step(&agg, self.cfg.lr);
+        // Combine shards in shard order (fixed shape) and apply the
+        // global update (eq. 6); downlink assumed error-free.
+        let (sum, totals, shard_stats) = agg.finish();
+        self.shard_stats = shard_stats;
+        self.params.sgd_step(&sum, self.cfg.lr);
         let comm = self.ledger.finish_round(self.cfg.mux);
-        let n = selected.len() as f64;
+        let nf = n as f64;
         Ok(RoundOutcome {
             round,
             comm_time_s: comm,
             cumulative_comm_s: self.ledger.total_s,
-            mean_loss: loss_sum / n,
-            mean_ber: ber_sum / n,
-            retransmissions: retx,
-            corrupted_frac: corrupted / n,
-            grad_max_abs: grad_max,
+            mean_loss: totals.loss_sum / nf,
+            mean_ber: totals.ber_sum / nf,
+            retransmissions: totals.retransmissions,
+            corrupted_frac: totals.corrupted_sum / nf,
+            grad_max_abs: totals.grad_max_abs,
+            grad_small_frac: totals.grad_small_sum / nf,
+            agg_shards: self.shard_stats.len(),
+            peak_inflight,
         })
     }
 
     /// Evaluate global-model test accuracy.
     pub fn evaluate(&self) -> Result<f64> {
-        self.engine.evaluate(&self.params, &self.data.test)
+        self.engine.evaluate(&self.params, &self.test)
     }
 
     /// Run the configured number of rounds, evaluating every
     /// `eval_every`; returns the full trace (one CSV row per round).
+    ///
+    /// With `pipeline_depth >= 2`, a finished round's evaluation (and its
+    /// progress/trace emission) runs on a background worker over a
+    /// snapshot of the parameters while the next rounds' client fan-out
+    /// proceeds; up to `depth - 1` evaluations stay in flight. Trace rows
+    /// are emitted in round order and results are bit-identical to the
+    /// synchronous path (`pipeline_depth <= 1`).
     pub fn run(&mut self, progress: bool) -> Result<Trace> {
-        let mut trace = Trace::new(self.cfg.scheme.name());
-        for round in 0..self.cfg.rounds {
-            let out = self.run_round(round)?;
-            let eval_now = self.cfg.eval_every > 0
-                && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0);
-            let acc = if eval_now { Some(self.evaluate()?) } else { None };
-            if progress {
-                let acc_s = acc.map_or(String::new(), |a| format!(" acc={a:.4}"));
-                eprintln!(
-                    "[{}] round {:>4} loss={:.4} ber={:.4} t={:.3}s{}",
-                    self.cfg.scheme.name(),
-                    round,
-                    out.mean_loss,
-                    out.mean_ber,
-                    out.cumulative_comm_s,
-                    acc_s
-                );
+        let depth = self.cfg.pipeline_depth.max(1);
+        let rounds = self.cfg.rounds;
+        let eval_every = self.cfg.eval_every;
+        let scheme = self.cfg.scheme.name();
+        let engine = self.engine;
+        let mut trace = Trace::new(scheme);
+        let eval_now =
+            |round: usize| eval_every > 0 && (round % eval_every == eval_every - 1 || round == 0);
+        if depth <= 1 {
+            // Synchronous path: evaluate in place — no model snapshot, no
+            // thread spawn (the seed behavior, bit-for-bit).
+            for round in 0..rounds {
+                let out = self.run_round(round)?;
+                let acc = if eval_now(round) { Some(self.evaluate()?) } else { None };
+                emit_round(out, acc, &mut trace, scheme, progress);
             }
-            trace.push(RoundRecord {
-                round,
-                comm_time_s: out.cumulative_comm_s,
-                test_accuracy: acc,
-                train_loss: out.mean_loss,
-                mean_ber: out.mean_ber,
-                retransmissions: out.retransmissions,
-                corrupted_frac: out.corrupted_frac,
-            });
+            return Ok(trace);
         }
+        std::thread::scope(|s| -> Result<()> {
+            let mut pending: VecDeque<(
+                RoundOutcome,
+                Option<std::thread::ScopedJoinHandle<'_, Result<f64>>>,
+            )> = VecDeque::new();
+            for round in 0..rounds {
+                let out = self.run_round(round)?;
+                let eval = if eval_now(round) {
+                    // Snapshot the model so the next round's SGD update
+                    // cannot race the background evaluation.
+                    let snapshot = self.params.clone();
+                    let test = Arc::clone(&self.test);
+                    Some(s.spawn(move || engine.evaluate(&snapshot, &test)))
+                } else {
+                    None
+                };
+                pending.push_back((out, eval));
+                while pending.len() >= depth {
+                    let (out, eval) = pending.pop_front().expect("pending non-empty");
+                    flush_round(out, eval, &mut trace, scheme, progress)?;
+                }
+            }
+            while let Some((out, eval)) = pending.pop_front() {
+                flush_round(out, eval, &mut trace, scheme, progress)?;
+            }
+            Ok(())
+        })?;
         Ok(trace)
     }
+}
+
+/// Retire one pipelined round: join its (optional) background
+/// evaluation, then emit. Rounds always retire in order, so the trace
+/// layout is identical to the synchronous path.
+fn flush_round(
+    out: RoundOutcome,
+    eval: Option<std::thread::ScopedJoinHandle<'_, Result<f64>>>,
+    trace: &mut Trace,
+    scheme: &str,
+    progress: bool,
+) -> Result<()> {
+    let acc = match eval {
+        Some(h) => Some(h.join().expect("evaluation worker panicked")?),
+        None => None,
+    };
+    emit_round(out, acc, trace, scheme, progress);
+    Ok(())
+}
+
+/// Emit one finished round: progress line + trace row (shared by the
+/// synchronous and pipelined paths so their output is identical).
+fn emit_round(
+    out: RoundOutcome,
+    acc: Option<f64>,
+    trace: &mut Trace,
+    scheme: &str,
+    progress: bool,
+) {
+    if progress {
+        let acc_s = acc.map_or(String::new(), |a| format!(" acc={a:.4}"));
+        eprintln!(
+            "[{}] round {:>4} loss={:.4} ber={:.4} t={:.3}s{}",
+            scheme, out.round, out.mean_loss, out.mean_ber, out.cumulative_comm_s, acc_s
+        );
+    }
+    trace.push(RoundRecord {
+        round: out.round,
+        comm_time_s: out.cumulative_comm_s,
+        test_accuracy: acc,
+        train_loss: out.mean_loss,
+        mean_ber: out.mean_ber,
+        retransmissions: out.retransmissions,
+        corrupted_frac: out.corrupted_frac,
+    });
 }

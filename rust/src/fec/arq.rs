@@ -96,9 +96,20 @@ pub fn symbol_llrs(
     sigma2: f64,
     out: &mut Vec<f32>,
 ) {
+    symbol_llrs_eq(con, points, fs.equalized(), fs.c.norm_sq() / sigma2, out);
+}
+
+/// [`symbol_llrs`] from an already-equalized observation `y` and its
+/// precomputed weight `w = |c|^2 / sigma2` — the form fed by the batched
+/// [`Channel::transmit_csi_into`] path (no `FadedSymbol` materialized).
+pub fn symbol_llrs_eq(
+    con: &Constellation,
+    points: &[Complex],
+    y: Complex,
+    w: f64,
+    out: &mut Vec<f32>,
+) {
     let k = con.modulation.bits_per_symbol();
-    let y = fs.equalized();
-    let w = fs.c.norm_sq() / sigma2;
     for j in 0..k {
         let (mut d0, mut d1) = (f64::INFINITY, f64::INFINITY);
         for (s, &p) in points.iter().enumerate() {
@@ -134,12 +145,13 @@ pub fn transmit_reliable(
     };
     let mut delivered = BitVec::with_capacity(nblocks * k);
     let mut llrs: Vec<f32> = Vec::with_capacity(code.n);
-    // Reused across attempts: the bounded-distance receiver only needs
-    // equalized observations, so it rides the (version-dispatched)
-    // batched channel engine with zero steady-state allocation. The
-    // min-sum receiver needs the per-symbol gains for its LLR weights
-    // and keeps the `FadedSymbol` path.
+    // Reused across attempts: both receivers ride the version-dispatched
+    // block channel engine with zero steady-state allocation. The
+    // bounded-distance receiver needs only equalized observations
+    // (`transmit_into`); the min-sum receiver additionally takes the
+    // per-symbol |c|^2 for its LLR weights (`transmit_csi_into`).
     let mut eq: Vec<Complex> = Vec::new();
+    let mut csi: Vec<f64> = Vec::new();
     let mut chan_scratch = ChannelScratch::new();
 
     for b in 0..nblocks {
@@ -171,11 +183,11 @@ pub fn transmit_reliable(
                     }
                 }
                 DecoderKind::MinSum { max_iter } => {
-                    let faded = ch.transmit(&syms, rng);
+                    ch.transmit_csi_into(&syms, rng, &mut chan_scratch, &mut eq, &mut csi);
                     llrs.clear();
                     let sigma2 = ch.cfg.noise_power();
-                    for f in &faded {
-                        symbol_llrs(con, &points, f, sigma2, &mut llrs);
+                    for (&y, &c2) in eq.iter().zip(&csi) {
+                        symbol_llrs_eq(con, &points, y, c2 / sigma2, &mut llrs);
                     }
                     llrs.truncate(code.n); // drop modulation pad positions
                     while llrs.len() < code.n {
@@ -247,6 +259,25 @@ mod tests {
         let mut rng = Rng::new(2);
         let p = payload(&mut rng, 1000);
         let ch = block_channel(14.0);
+        let cfg = ArqConfig { max_attempts: 64, decoder: DecoderKind::MinSum { max_iter: 40 } };
+        let (got, stats) = transmit_reliable(&p, &qpsk(), &ch, &mut rng, &cfg);
+        assert_eq!(got, p);
+        assert_eq!(stats.exhausted, 0);
+    }
+
+    #[test]
+    fn min_sum_rides_batched_engine() {
+        // The batched-CSI leg under V2Batched: exact delivery with the
+        // same protocol behavior as the scalar stream.
+        let mut rng = Rng::new(8);
+        let p = payload(&mut rng, 1000);
+        let ch = Channel::new(ChannelConfig {
+            snr_db: 14.0,
+            fading: Fading::Block,
+            block_len: 324,
+            rng_version: crate::rng::RngVersion::V2Batched,
+            ..Default::default()
+        });
         let cfg = ArqConfig { max_attempts: 64, decoder: DecoderKind::MinSum { max_iter: 40 } };
         let (got, stats) = transmit_reliable(&p, &qpsk(), &ch, &mut rng, &cfg);
         assert_eq!(got, p);

@@ -49,6 +49,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("participants", "participants_per_round"),
         ("artifacts", "artifacts_dir"),
         ("data-dir", "data_dir"),
+        ("agg-shards", "agg_shards"),
+        ("pipeline-depth", "pipeline_depth"),
+        ("parallel-clients", "parallel_clients"),
     ] {
         if let Some(v) = args.opt(flag) {
             overrides.push((key.to_string(), v.to_string()));
@@ -148,9 +151,10 @@ fn dispatch(args: &Args) -> Result<()> {
             let cfg = load_cfg(args)?;
             let rounds = args.opt_parse::<usize>("rounds")?.unwrap_or(10);
             let engine = Engine::load(&cfg.artifacts_dir)?;
-            let (max_abs, bounded) = experiments::gradient_bound(&cfg, &engine, rounds)?;
+            let (max_abs, frac_small) = experiments::gradient_bound(&cfg, &engine, rounds)?;
             println!("max |g| over {rounds} rounds: {max_abs:.4}");
-            println!("all gradients within (-1, 1): {}", bounded == 1.0);
+            println!("min per-round fraction of |g| < 1: {frac_small:.6}");
+            println!("all gradients within (-1, 1): {}", max_abs < 1.0);
         }
         Some("info") => {
             let cfg = load_cfg(args)?;

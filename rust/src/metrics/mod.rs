@@ -100,6 +100,48 @@ pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
     Ok(())
 }
 
+/// Per-shard aggregation statistics for one round of the streaming
+/// sharded reduction (see `coordinator::aggregate`). All sums are folded
+/// in within-shard selection order, so for a fixed shard count they are
+/// bit-reproducible regardless of worker scheduling.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Shard index in the round's fixed shard plan.
+    pub shard: usize,
+    /// Clients this shard aggregated.
+    pub clients: usize,
+    /// Sum of aggregation weights fed (|D_m| / |D_sel|).
+    pub weight_sum: f64,
+    /// Sum of client-reported training losses.
+    pub loss_sum: f64,
+    /// Sum of client payload BERs.
+    pub ber_sum: f64,
+    /// Sum of per-client corrupted-float fractions.
+    pub corrupted_sum: f64,
+    /// Total ECRT retransmissions across this shard's clients.
+    pub retransmissions: usize,
+    /// Largest pre-transport |g| reported by this shard's clients.
+    pub grad_max_abs: f32,
+    /// Sum of per-client fractions of |g| below the paper's bound.
+    pub grad_small_sum: f64,
+}
+
+impl ShardStats {
+    pub fn new(shard: usize) -> ShardStats {
+        ShardStats { shard, ..Default::default() }
+    }
+
+    /// Mean training loss across this shard's clients.
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.clients.max(1) as f64
+    }
+
+    /// Mean payload BER across this shard's clients.
+    pub fn mean_ber(&self) -> f64 {
+        self.ber_sum / self.clients.max(1) as f64
+    }
+}
+
 /// Simple streaming mean/min/max/count accumulator.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Stats {
@@ -213,6 +255,18 @@ mod tests {
         assert!(body.starts_with(CSV_HEADER));
         assert_eq!(body.lines().count(), 11);
         std::fs::remove_dir_all("/tmp/awc_fl_test_metrics").ok();
+    }
+
+    #[test]
+    fn shard_stats_means() {
+        let mut s = ShardStats::new(3);
+        assert_eq!(s.shard, 3);
+        assert_eq!(s.mean_loss(), 0.0);
+        s.clients = 4;
+        s.loss_sum = 8.0;
+        s.ber_sum = 0.2;
+        assert!((s.mean_loss() - 2.0).abs() < 1e-12);
+        assert!((s.mean_ber() - 0.05).abs() < 1e-12);
     }
 
     #[test]

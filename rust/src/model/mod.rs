@@ -84,6 +84,17 @@ impl ParamSet {
         out
     }
 
+    /// [`Self::flatten`] into a caller-owned buffer: no allocation once
+    /// the buffer has grown to this schema's size (the coordinator's
+    /// streaming pass slots reuse one per window position).
+    pub fn flatten_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.num_params());
+        for t in &self.tensors {
+            out.extend_from_slice(&t.data);
+        }
+    }
+
     /// Inverse of [`Self::flatten`] against this set's schema.
     pub fn unflatten_like(&self, flat: &[f32]) -> Result<ParamSet> {
         if flat.len() != self.num_params() {
@@ -135,6 +146,19 @@ impl ParamSet {
                 *av += weight * bv;
             }
             off += n;
+        }
+    }
+
+    /// Elementwise shard merge: `self += other`, unweighted — the shard
+    /// accumulators of `coordinator::aggregate` already fold the
+    /// aggregation weights in, so combining shards is a plain sum.
+    pub fn add_assign(&mut self, other: &ParamSet) {
+        debug_assert_eq!(self.tensors.len(), other.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            debug_assert_eq!(a.data.len(), b.data.len());
+            for (av, bv) in a.data.iter_mut().zip(&b.data) {
+                *av += *bv;
+            }
         }
     }
 
@@ -230,6 +254,31 @@ mod tests {
         let mut b = ParamSet::zeros(&man);
         a.axpy(0.375, &g);
         b.axpy_flat(0.375, &flat);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn flatten_into_matches_flatten_and_reuses_buffer() {
+        let man = manifest();
+        let p = ParamSet::init(&man, &mut Rng::new(5));
+        let mut buf = Vec::new();
+        p.flatten_into(&mut buf);
+        assert_eq!(buf, p.flatten());
+        // Reuse with the same schema: contents refreshed, same length.
+        let q = ParamSet::init(&man, &mut Rng::new(6));
+        q.flatten_into(&mut buf);
+        assert_eq!(buf, q.flatten());
+    }
+
+    #[test]
+    fn add_assign_matches_axpy_one() {
+        let man = manifest();
+        let x = ParamSet::init(&man, &mut Rng::new(7));
+        let y = ParamSet::init(&man, &mut Rng::new(8));
+        let mut a = x.clone();
+        a.add_assign(&y);
+        let mut b = x.clone();
+        b.axpy(1.0, &y);
         assert_eq!(a, b);
     }
 

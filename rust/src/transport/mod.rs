@@ -21,11 +21,13 @@
 //! received bits) lives in a reusable [`TxScratch`] workspace, and the
 //! block interleaver's permutation tables are cached in it per payload
 //! shape. Call
-//! [`Transport::send_with`] with a caller-owned scratch on hot loops;
-//! [`Transport::send`] keeps the simple signature by borrowing a
-//! thread-local scratch internally.
+//! [`Transport::send_with`] with a caller-owned scratch on hot loops, or
+//! [`Transport::send_into`] to additionally reuse the received-float
+//! buffer (the coordinator's streaming-aggregation path: nothing at all
+//! allocates per pass at steady state); [`Transport::send`] keeps the
+//! simple signature by borrowing a thread-local scratch internally.
 //!
-//! Determinism contract: `send`/`send_with` take `&self` plus an explicit
+//! Determinism contract: `send`/`send_with`/`send_into` take `&self` plus an explicit
 //! RNG stream and are re-entrant — concurrent sends with distinct
 //! [`Rng`] substreams (one per client/round, see [`crate::rng`]) produce
 //! bit-identical results regardless of scheduling, which is what lets
@@ -38,7 +40,7 @@ pub mod compress;
 pub mod mapping;
 
 use crate::bits::{
-    pack_f32s, pack_f32s_into, unpack_f32s, unpack_f32s_into, BitProtection, BitVec,
+    pack_f32s, pack_f32s_into, unpack_f32s_into, BitProtection, BitVec,
     BlockInterleaver, EXP_MASK_U64, FRAC_MASK_U64, SIGN_MASK_U64,
 };
 use crate::channel::{Channel, ChannelConfig, ChannelScratch};
@@ -226,36 +228,57 @@ impl Transport {
         rng: &mut Rng,
         scratch: &mut TxScratch,
     ) -> (Vec<f32>, TxReport) {
+        let mut out = Vec::with_capacity(grads.len());
+        let report = self.send_into(grads, rng, scratch, &mut out);
+        (out, report)
+    }
+
+    /// [`Self::send_with`] writing the received floats into a caller-owned
+    /// buffer (cleared first) instead of returning a fresh `Vec`. This is
+    /// the fully allocation-free delivery the coordinator's streaming
+    /// aggregation uses: with a reused `out` the erroneous-delivery path
+    /// makes zero steady-state heap allocations per pass. (ECRT still
+    /// allocates inside the ARQ framing; it is not the streaming-scale
+    /// scheme.)
+    pub fn send_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        scratch: &mut TxScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
         match self.cfg.scheme {
-            Scheme::Perfect => self.send_perfect(grads),
-            Scheme::Ecrt => self.send_ecrt(grads, rng),
+            Scheme::Perfect => self.send_perfect_into(grads, out),
+            Scheme::Ecrt => self.send_ecrt_into(grads, rng, out),
             Scheme::Naive => {
-                self.send_erroneous(grads, rng, BitProtection::none(), 0, false, scratch)
+                self.send_erroneous_into(grads, rng, BitProtection::none(), 0, false, scratch, out)
             }
-            Scheme::Proposed => self.send_erroneous(
+            Scheme::Proposed => self.send_erroneous_into(
                 grads,
                 rng,
                 self.cfg.protection,
                 self.cfg.interleave_spread,
                 self.cfg.importance_mapping,
                 scratch,
+                out,
             ),
         }
     }
 
-    fn send_perfect(&self, grads: &[f32]) -> (Vec<f32>, TxReport) {
+    fn send_perfect_into(&self, grads: &[f32], out: &mut Vec<f32>) -> TxReport {
+        out.clear();
+        out.extend_from_slice(grads);
         let payload_bits = grads.len() * 32;
         let symbols = payload_bits.div_ceil(self.con.modulation.bits_per_symbol());
-        let report = TxReport {
+        TxReport {
             seconds: self.cfg.airtime.burst_time(symbols),
             payload_bits,
             symbols_sent: symbols,
             ..Default::default()
-        };
-        (grads.to_vec(), report)
+        }
     }
 
-    fn send_ecrt(&self, grads: &[f32], rng: &mut Rng) -> (Vec<f32>, TxReport) {
+    fn send_ecrt_into(&self, grads: &[f32], rng: &mut Rng, out: &mut Vec<f32>) -> TxReport {
         let bits = pack_f32s(grads);
         let framed = fec::crc::append_crc(&bits);
         let (delivered, stats) =
@@ -265,20 +288,19 @@ impl Transport {
         // passes; a residual failure falls back to the corrupted payload
         // (and is visible in the report).
         let rx_bits = if crc_ok { payload } else { delivered.slice(0, bits.len()) };
-        let out = unpack_f32s(&rx_bits);
-        let report = TxReport {
+        unpack_f32s_into(&rx_bits, out);
+        TxReport {
             seconds: self.cfg.airtime.ecrt_time(&stats),
             payload_bits: bits.len(),
             symbols_sent: stats.symbols_sent,
             bit_errors: rx_bits.hamming(&bits),
             retransmissions: stats.retransmissions(),
             ..Default::default()
-        };
-        (out, report)
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn send_erroneous(
+    fn send_erroneous_into(
         &self,
         grads: &[f32],
         rng: &mut Rng,
@@ -286,7 +308,8 @@ impl Transport {
         interleave_spread: usize,
         importance: bool,
         s: &mut TxScratch,
-    ) -> (Vec<f32>, TxReport) {
+        out: &mut Vec<f32>,
+    ) -> TxReport {
         pack_f32s_into(grads, &mut s.tx_bits);
         let n = s.tx_bits.len();
 
@@ -359,15 +382,14 @@ impl Transport {
             report.errors_frac += (e & FRAC_MASK_U64).count_ones() as usize;
         }
 
-        let mut out = Vec::with_capacity(grads.len());
-        unpack_f32s_into(rx_bits, &mut out);
-        protection.apply(&mut out);
+        unpack_f32s_into(rx_bits, out);
+        protection.apply(out);
         report.corrupted_floats = out
             .iter()
             .zip(grads)
             .filter(|(a, b)| a.to_bits() != b.to_bits())
             .count();
-        (out, report)
+        report
     }
 }
 
@@ -562,6 +584,33 @@ mod tests {
                 assert_eq!(s1.bit_errors, s2.bit_errors);
                 assert_eq!(s1.symbols_sent, s2.symbols_sent);
                 assert_eq!(s1.seconds, s2.seconds);
+            }
+        }
+    }
+
+    #[test]
+    fn send_into_matches_send_with_and_reuses_buffer() {
+        let root = Rng::new(123);
+        let g = grads(&mut root.substream("g", 0, 0), 2500);
+        let g_small = grads(&mut root.substream("g", 1, 0), 600);
+        for scheme in Scheme::ALL {
+            let t = Transport::new(cfg(scheme, 10.0));
+            let mut scratch1 = TxScratch::new();
+            let mut scratch2 = TxScratch::new();
+            let mut buf = Vec::new();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            // Shape changes across sends must be handled by the reused
+            // output buffer exactly like a fresh Vec.
+            for payload in [&g, &g_small, &g] {
+                let mut r1 = root.substream("chan", payload.len() as u64, 1);
+                let mut r2 = r1.clone();
+                let (o1, s1) = t.send_with(payload, &mut r1, &mut scratch1);
+                let s2 = t.send_into(payload, &mut r2, &mut scratch2, &mut buf);
+                assert_eq!(bits(&o1), bits(&buf), "{scheme:?} n={}", payload.len());
+                assert_eq!(s1.bit_errors, s2.bit_errors);
+                assert_eq!(s1.symbols_sent, s2.symbols_sent);
+                assert_eq!(s1.seconds, s2.seconds);
+                assert_eq!(s1.corrupted_floats, s2.corrupted_floats);
             }
         }
     }

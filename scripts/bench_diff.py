@@ -2,6 +2,7 @@
 """Diff two BENCH_hotpath.json runs and fail on perf regressions.
 
 Usage: bench_diff.py BASELINE.json FRESH.json [--threshold 0.15]
+                     [--require-prefix PREFIX ...]
 
 Records are matched by name. For each record present in both files the
 comparison metric is `throughput` (higher = better) when both runs have
@@ -10,6 +11,12 @@ is more than `threshold` below the baseline. Records that exist in only
 one file (renamed / added benches) are reported but never fail the gate,
 and a missing baseline file is a clean pass so the very first run of a
 branch doesn't fail CI.
+
+`--require-prefix` (repeatable) asserts that the FRESH run contains at
+least one record whose name starts with the prefix — so load-bearing
+bench families (e.g. the `coordinator:` round records) cannot silently
+vanish from the trajectory. Requirements are checked even when the
+baseline is missing.
 """
 
 import argparse
@@ -50,13 +57,32 @@ def main():
         default=0.15,
         help="max tolerated fractional drop per record (default 0.15)",
     )
+    ap.add_argument(
+        "--require-prefix",
+        action="append",
+        default=[],
+        metavar="PREFIX",
+        help="fail unless the fresh run has >= 1 record with this name "
+        "prefix (repeatable)",
+    )
     args = ap.parse_args()
+
+    if not os.path.exists(args.fresh):
+        print(f"bench_diff: fresh results missing at {args.fresh} — bench step failed?")
+        return 1
+    fresh = load(args.fresh)
+    missing_prefixes = [
+        p for p in args.require_prefix if not any(n.startswith(p) for n in fresh)
+    ]
+    if missing_prefixes:
+        for p in missing_prefixes:
+            print(f"bench_diff: no fresh record matches required prefix `{p}`")
+        return 1
 
     if not os.path.exists(args.baseline):
         print(f"bench_diff: no baseline at {args.baseline} — skipping gate")
         return 0
     base = load(args.baseline)
-    fresh = load(args.fresh)
 
     regressions = []
     width = max((len(n) for n in fresh), default=20)
