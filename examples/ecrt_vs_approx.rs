@@ -1,4 +1,6 @@
-//! Transmission-level head-to-head of the four uplink schemes: airtime,
+//! Transmission-level head-to-head of the uplink schemes (including the
+//! CSI-adaptive policy; see examples/adaptive_study.rs for its dedicated
+//! burst-channel sweep): airtime,
 //! residual BER, and gradient distortion per model upload, across SNRs.
 //! Shows the paper's core trade *without* running FL (seconds, no
 //! artifacts needed): ECRT pays >=2x airtime for exactness; the proposed

@@ -210,8 +210,11 @@ fn main() {
     }
 
     {
+        // Explicit V1: the ExperimentConfig default flipped to
+        // v2_batched, but this record tracks the legacy scalar stream.
         let cfg = ExperimentConfig {
             scheme: Scheme::Proposed,
+            rng_version: RngVersion::V1,
             ..ExperimentConfig::default()
         };
         let t = Transport::new(cfg.transport());
@@ -220,6 +223,53 @@ fn main() {
             black_box(t.send(black_box(&grads), &mut rng));
         });
         let tp = report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        sink.push(name, &s, Some(tp));
+    }
+
+    // Adaptive policy layer: the full adaptive send (pilot + decision +
+    // approx arm; AWGN at 20 dB so the estimate always clears the enter
+    // threshold and the record measures a stable composition), and the
+    // bare pilot-estimate stage.
+    {
+        let cfg = ExperimentConfig {
+            scheme: Scheme::Adaptive,
+            fading: Fading::None,
+            snr_db: 20.0,
+            rng_version: RngVersion::V2Batched,
+            ..ExperimentConfig::default()
+        };
+        let t = Transport::new(cfg.transport());
+        let mut scratch = TxScratch::new();
+        let mut out: Vec<f32> = Vec::new();
+        let name = "transport: adaptive send (1 model)";
+        let s = bench(name, 1, 10, || {
+            black_box(t.send_adaptive_into(
+                black_box(&grads),
+                &mut rng,
+                Some(awc_fl::transport::LinkArm::Approx),
+                &mut scratch,
+                &mut out,
+            ));
+        });
+        let tp = report_throughput("transport (payload bits)", MODEL_BITS as f64, &s);
+        sink.push(name, &s, Some(tp));
+
+        let con = Constellation::new(Modulation::Qpsk);
+        let ch = Channel::new(cfg.channel());
+        let pilots = cfg.adaptive_pilots;
+        let name = "policy: pilot estimate + decide x1e4";
+        let pol = cfg.adaptive();
+        let s = bench(name, 2, 10, || {
+            let mut arm = None;
+            for _ in 0..10_000 {
+                let est = awc_fl::transport::policy::estimate_effective_snr_db(
+                    &con, &ch, pilots, &rng, &mut scratch,
+                );
+                arm = Some(pol.decide(arm, est));
+            }
+            black_box(arm);
+        });
+        let tp = report_throughput("policy (estimates)", 1e4, &s);
         sink.push(name, &s, Some(tp));
     }
 

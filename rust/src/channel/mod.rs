@@ -516,6 +516,18 @@ impl Channel {
         });
     }
 
+    /// Effective receiver SNR implied by a per-symbol CSI report (the
+    /// `|c|^2` values of [`Channel::transmit_csi_into`]):
+    /// `gamma_eff = mean(|c|^2) Es / sigma^2` in dB (Es = 1 for the
+    /// normalized constellations). This is the pilot-based channel-quality
+    /// summary the CSI-adaptive transport policy thresholds against —
+    /// one source of truth so trace rows, the policy, and the study
+    /// example all report the same number.
+    pub fn csi_effective_snr_db(&self, csi: &[f64]) -> f64 {
+        let mean = csi.iter().sum::<f64>() / csi.len().max(1) as f64;
+        crate::math::lin_to_db(mean / self.sigma2)
+    }
+
     /// Generate `n` unit-power fading gains `h` for the configured
     /// scenario (receiver-known CSI). Draw order: Rician consumes two
     /// normals per symbol; Jakes consumes `2 JAKES_M + 1` uniforms for
@@ -869,6 +881,34 @@ mod tests {
             // Both consumed the stream identically.
             assert_eq!(r1.next_u64(), r2.next_u64(), "{fading:?}");
         }
+    }
+
+    #[test]
+    fn csi_effective_snr_recovers_configured_gamma() {
+        // With enough pilot symbols, mean |c|^2 / sigma^2 must estimate
+        // the configured average SNR for every unit-power fading model.
+        let mut rng = Rng::new(23);
+        for fading in Fading::ALL {
+            let cfg = ChannelConfig { fading, block_len: 16, ..ChannelConfig::with_snr(10.0) };
+            let ch = Channel::new(cfg);
+            let syms = vec![Complex::new(1.0, 0.0); 20_000];
+            let mut eq = Vec::new();
+            let mut csi = Vec::new();
+            let mut scratch = ChannelScratch::new();
+            // Average several transmissions so block/Jakes/GE realization
+            // noise washes out.
+            let mut est = 0.0;
+            let trials = 20;
+            for _ in 0..trials {
+                ch.transmit_csi_into(&syms, &mut rng, &mut scratch, &mut eq, &mut csi);
+                est += db_to_lin(ch.csi_effective_snr_db(&csi));
+            }
+            let est_db = lin_to_db(est / trials as f64);
+            assert!((est_db - 10.0).abs() < 0.5, "{fading:?}: {est_db} dB");
+        }
+        // Degenerate input: empty CSI must not divide by zero.
+        let ch = Channel::new(ChannelConfig::with_snr(10.0));
+        assert!(ch.csi_effective_snr_db(&[]).is_infinite());
     }
 
     #[test]

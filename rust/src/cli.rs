@@ -26,7 +26,8 @@ const VALUE_FLAGS: &[&str] = &[
     "scheme", "modulation", "seed", "bits", "points", "target", "lr",
     "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
     "fading", "rician-k", "doppler", "rng-version", "agg-shards",
-    "pipeline-depth", "parallel-clients",
+    "pipeline-depth", "parallel-clients", "adaptive-enter", "adaptive-exit",
+    "pilots", "payloads", "floats",
 ];
 
 impl Args {
@@ -128,6 +129,15 @@ mod tests {
         assert_eq!(a.opt_parse::<usize>("agg-shards").unwrap(), Some(16));
         assert_eq!(a.opt_parse::<usize>("pipeline-depth").unwrap(), Some(2));
         assert_eq!(a.opt_parse::<usize>("parallel-clients").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn adaptive_flags_take_values() {
+        let a = parse("run --scheme adaptive --adaptive-enter 11 --adaptive-exit 8 --pilots 32");
+        assert_eq!(a.opt("scheme"), Some("adaptive"));
+        assert_eq!(a.opt_parse::<f64>("adaptive-enter").unwrap(), Some(11.0));
+        assert_eq!(a.opt_parse::<f64>("adaptive-exit").unwrap(), Some(8.0));
+        assert_eq!(a.opt_parse::<usize>("pilots").unwrap(), Some(32));
     }
 
     #[test]

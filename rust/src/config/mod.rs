@@ -57,11 +57,26 @@ pub struct ExperimentConfig {
     /// Gilbert–Elliott bad-state power gain in dB (negative = deep fade).
     pub ge_bad_db: f64,
     /// Gaussian sampler version: `v1` replays the seed bitstream
-    /// bit-exactly (published figures), `v2_batched` is the fast batched
-    /// ziggurat engine (statistically identical, different stream).
+    /// bit-exactly (the published figures were generated on it),
+    /// `v2_batched` (default) is the fast batched ziggurat engine
+    /// (statistically identical, different stream). Set `v1` to
+    /// reproduce pre-flip traces bit-for-bit.
     pub rng_version: RngVersion,
     /// Interleaver spread for the proposed scheme (0 = off).
     pub interleave_spread: usize,
+    /// CSI-adaptive policy (`scheme = "adaptive"`): effective-SNR (dB)
+    /// at or above which a client enters the approximate arm. `-inf`
+    /// together with `adaptive_exit_db = -inf` forces the approximate
+    /// arm (pilot skipped); `exit <= enter` is enforced, so the exit
+    /// threshold must be lowered with it.
+    pub adaptive_enter_db: f64,
+    /// Effective-SNR (dB) below which a client on the approximate arm
+    /// falls back to ECRT; must be <= `adaptive_enter_db` (the gap is
+    /// the hysteresis dead band). `+inf` together with
+    /// `adaptive_enter_db = +inf` forces the fallback arm.
+    pub adaptive_exit_db: f64,
+    /// Pilot symbols the adaptive policy sounds per transmission.
+    pub adaptive_pilots: usize,
     /// Value clamp for the proposed scheme (<= 0 disables).
     pub value_clamp: f32,
     /// Force the exponent MSB to zero at the receiver.
@@ -103,8 +118,10 @@ pub struct ExperimentConfig {
 impl Default for ExperimentConfig {
     fn default() -> Self {
         // Scenario knobs have a single source of truth: the channel's
-        // own defaults (`ChannelConfig::default`).
+        // own defaults (`ChannelConfig::default`); likewise the adaptive
+        // policy's (`AdaptiveConfig::default`).
         let ch = ChannelConfig::default();
+        let ad = crate::transport::AdaptiveConfig::default();
         ExperimentConfig {
             seed: 20230519,
             clients: 100,
@@ -125,8 +142,15 @@ impl Default for ExperimentConfig {
             ge_p_g2b: ch.ge_p_g2b,
             ge_p_b2g: ch.ge_p_b2g,
             ge_bad_db: ch.ge_bad_db,
-            rng_version: ch.rng_version,
+            // Experiments default to the batched engine (ROADMAP
+            // follow-on, flipped after PR 3); `ChannelConfig::default`
+            // deliberately stays `v1` so the low-level golden pins and
+            // the seed bitstream remain the channel's baseline contract.
+            rng_version: RngVersion::V2Batched,
             interleave_spread: 37,
+            adaptive_enter_db: ad.enter_snr_db,
+            adaptive_exit_db: ad.exit_snr_db,
+            adaptive_pilots: ad.pilot_symbols,
             value_clamp: 1.0,
             force_exp_msb: true,
             importance_mapping: false,
@@ -239,6 +263,15 @@ impl ExperimentConfig {
             "interleave_spread" | "transport.interleave_spread" => {
                 self.interleave_spread = v.as_u64().ok_or_else(|| bad(key, v))? as usize
             }
+            "adaptive_enter_db" | "transport.adaptive_enter_db" => {
+                self.adaptive_enter_db = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "adaptive_exit_db" | "transport.adaptive_exit_db" => {
+                self.adaptive_exit_db = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "adaptive_pilots" | "transport.adaptive_pilots" => {
+                self.adaptive_pilots = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
             "value_clamp" | "transport.value_clamp" => {
                 self.value_clamp = v.as_f64().ok_or_else(|| bad(key, v))? as f32
             }
@@ -326,7 +359,17 @@ impl ExperimentConfig {
                 return Err(Error::Config(format!("{name} {p} must be a probability")));
             }
         }
+        self.adaptive().validate().map_err(Error::Config)?;
         Ok(())
+    }
+
+    /// Derived CSI-adaptive policy config.
+    pub fn adaptive(&self) -> crate::transport::AdaptiveConfig {
+        crate::transport::AdaptiveConfig {
+            enter_snr_db: self.adaptive_enter_db,
+            exit_snr_db: self.adaptive_exit_db,
+            pilot_symbols: self.adaptive_pilots,
+        }
     }
 
     /// Derived channel config.
@@ -361,6 +404,7 @@ impl ExperimentConfig {
             value_clamp: (self.value_clamp > 0.0).then_some(self.value_clamp),
             zero_non_finite: true,
         };
+        t.adaptive = self.adaptive();
         t
     }
 }
@@ -377,7 +421,50 @@ mod tests {
         assert_eq!(c.lr, 0.01);
         assert_eq!(c.snr_db, 10.0);
         assert_eq!(c.modulation, Modulation::Qpsk);
+        // Experiments ride the batched sampler by default (the ROADMAP
+        // follow-on flip); `rng_version = "v1"` restores the seed
+        // streams.
+        assert_eq!(c.rng_version, RngVersion::V2Batched);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn v1_stays_selectable_for_published_traces() {
+        let o = vec![("rng_version".to_string(), "v1".to_string())];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.rng_version, RngVersion::V1);
+        assert_eq!(c.channel().rng_version, RngVersion::V1);
+    }
+
+    #[test]
+    fn adaptive_keys_parse_and_validate() {
+        let o = vec![
+            ("scheme".to_string(), "adaptive".to_string()),
+            ("adaptive_enter_db".to_string(), "12".to_string()),
+            ("adaptive_exit_db".to_string(), "8.5".to_string()),
+            ("adaptive_pilots".to_string(), "128".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.scheme, Scheme::Adaptive);
+        let t = c.transport();
+        assert_eq!(t.adaptive.enter_snr_db, 12.0);
+        assert_eq!(t.adaptive.exit_snr_db, 8.5);
+        assert_eq!(t.adaptive.pilot_symbols, 128);
+        // Section-qualified spellings and forced infinite thresholds
+        // ("inf"/"-inf" parse as floats) work too.
+        let o = vec![
+            ("transport.scheme".to_string(), "csi".to_string()),
+            ("transport.adaptive_enter_db".to_string(), "-inf".to_string()),
+            ("transport.adaptive_exit_db".to_string(), "-inf".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.scheme, Scheme::Adaptive);
+        assert_eq!(c.adaptive_enter_db, f64::NEG_INFINITY);
+        // Inverted dead band and zero pilots are rejected loudly.
+        for (k, v) in [("adaptive_exit_db", "20"), ("adaptive_pilots", "0")] {
+            let o = vec![(k.to_string(), v.to_string())];
+            assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
+        }
     }
 
     #[test]

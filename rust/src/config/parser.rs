@@ -3,7 +3,21 @@
 //! Supported: `[section]` headers (flattened to `section.key`), `key =
 //! value` with string (`"..."`), boolean, integer, and float scalars,
 //! `#` comments, and blank lines. Arrays/tables-of-tables are not needed
-//! by the experiment configs and are rejected loudly.
+//! by the experiment configs and are rejected loudly. Float scalars ride
+//! Rust's `f64` parser, so `inf` / `-inf` are valid values — the
+//! CSI-adaptive keys use them for the forced-arm modes.
+//!
+//! The recognized experiment keys are documented field-by-field on
+//! [`crate::config::ExperimentConfig`]; the `[transport]` section gained
+//! the adaptive-policy trio in PR 4:
+//!
+//! * `adaptive_enter_db` — effective-SNR (dB) at which a client enters
+//!   the approximate arm (both thresholds `-inf` forces approx, pilot
+//!   skipped);
+//! * `adaptive_exit_db`  — effective-SNR (dB) below which it falls back
+//!   to ECRT; must be `<= adaptive_enter_db` (hysteresis dead band;
+//!   both `+inf` forces fallback);
+//! * `adaptive_pilots`   — pilot symbols sounded per transmission.
 
 use crate::{Error, Result};
 
@@ -137,6 +151,9 @@ mod tests {
         assert_eq!(parse_scalar("true"), Value::Bool(true));
         assert_eq!(parse_scalar("\"qpsk\""), Value::Str("qpsk".into()));
         assert_eq!(parse_scalar("qpsk"), Value::Str("qpsk".into()));
+        // Forced-arm thresholds of the adaptive policy.
+        assert_eq!(parse_scalar("inf"), Value::Float(f64::INFINITY));
+        assert_eq!(parse_scalar("-inf"), Value::Float(f64::NEG_INFINITY));
     }
 
     #[test]

@@ -134,6 +134,24 @@ impl ShardAccumulator {
         s.retransmissions += c.report.retransmissions;
         s.grad_max_abs = s.grad_max_abs.max(c.grad_max_abs);
         s.grad_small_sum += c.grad_small_frac;
+        // Policy-layer observables (Scheme::Adaptive): arm census,
+        // switch count, estimate sums, per-arm airtime.
+        if let Some(p) = c.report.policy {
+            match p.arm {
+                crate::timing::LinkArm::Approx => {
+                    s.approx_clients += 1;
+                    s.approx_s += c.report.seconds;
+                }
+                crate::timing::LinkArm::Fallback => s.fallback_s += c.report.seconds,
+            }
+            if p.switched {
+                s.policy_switches += 1;
+            }
+            if let Some(est) = p.est_snr_db {
+                s.est_snr_sum += est;
+                s.est_snr_count += 1;
+            }
+        }
     }
 
     pub fn stats(&self) -> &ShardStats {
@@ -152,6 +170,13 @@ pub struct RoundTotals {
     pub retransmissions: usize,
     pub grad_max_abs: f32,
     pub grad_small_sum: f64,
+    /// Policy-layer totals (zero for non-policy schemes).
+    pub approx_clients: usize,
+    pub policy_switches: usize,
+    pub est_snr_sum: f64,
+    pub est_snr_count: usize,
+    pub approx_s: f64,
+    pub fallback_s: f64,
 }
 
 /// The round-level engine: a [`ShardPlan`] plus one live
@@ -224,6 +249,12 @@ impl ShardedAggregator {
             totals.retransmissions += s.retransmissions;
             totals.grad_max_abs = totals.grad_max_abs.max(s.grad_max_abs);
             totals.grad_small_sum += s.grad_small_sum;
+            totals.approx_clients += s.approx_clients;
+            totals.policy_switches += s.policy_switches;
+            totals.est_snr_sum += s.est_snr_sum;
+            totals.est_snr_count += s.est_snr_count;
+            totals.approx_s += s.approx_s;
+            totals.fallback_s += s.fallback_s;
         }
         let mut sum = accs.remove(0).acc;
         for a in &accs {
@@ -371,6 +402,49 @@ mod tests {
             let fed: usize = stats.iter().map(|s| s.clients).sum();
             assert_eq!(fed, pays.len());
         }
+    }
+
+    #[test]
+    fn policy_observables_flow_through_shards() {
+        use crate::timing::LinkArm;
+        use crate::transport::PolicyReport;
+        let man = manifest();
+        let pays = payloads(4, man.num_params());
+        let mut agg = ShardedAggregator::new(&man, 4, 2);
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            let arm = if i % 2 == 0 { LinkArm::Approx } else { LinkArm::Fallback };
+            let report = TxReport {
+                seconds: 1.0 + i as f64,
+                policy: Some(PolicyReport {
+                    arm,
+                    est_snr_db: (i < 3).then(|| 10.0 + i as f64),
+                    switched: i == 1,
+                    pilot_seconds: 1e-6,
+                }),
+                ..Default::default()
+            };
+            agg.feed(
+                i,
+                &Contribution {
+                    rx,
+                    weight: *w,
+                    loss: 0.0,
+                    grad_max_abs: 0.0,
+                    grad_small_frac: 1.0,
+                    report: &report,
+                },
+            )
+            .unwrap();
+        }
+        let (_, totals, stats) = agg.finish();
+        assert_eq!(totals.approx_clients, 2);
+        assert_eq!(totals.policy_switches, 1);
+        assert_eq!(totals.est_snr_count, 3);
+        assert!((totals.est_snr_sum - 33.0).abs() < 1e-12);
+        assert!((totals.approx_s - 4.0).abs() < 1e-12); // passes 0 and 2
+        assert!((totals.fallback_s - 6.0).abs() < 1e-12); // passes 1 and 3
+        let shard_approx: usize = stats.iter().map(|s| s.approx_clients).sum();
+        assert_eq!(shard_approx, 2);
     }
 
     #[test]

@@ -2,12 +2,13 @@
 //! (see DESIGN.md §3 for the index). Shared by the CLI, the examples,
 //! and the benches so every entry point produces identical numbers.
 
+use crate::channel::Fading;
 use crate::config::ExperimentConfig;
 use crate::metrics::{self, Trace};
 use crate::modem::{analysis, Modulation};
 use crate::rng::Rng;
 use crate::runtime::Engine;
-use crate::transport::Scheme;
+use crate::transport::{PolicyState, Scheme, Transport, TxScratch};
 use crate::Result;
 
 /// E1 — BER vs SNR for the three modulations of the paper (plus 64-QAM).
@@ -133,7 +134,7 @@ pub fn fig4(
 /// measured retransmission factor. Returns rows
 /// `(snr_db, avg_attempts, time_ratio_vs_uncoded)`.
 pub fn ecrt_overhead(snrs: &[f64], payload_floats: usize, seed: u64) -> Vec<(f64, f64, f64)> {
-    use crate::transport::{Transport, TransportConfig};
+    use crate::transport::TransportConfig;
     let root = Rng::new(seed);
     let mut out = Vec::new();
     for (i, &snr) in snrs.iter().enumerate() {
@@ -157,6 +158,99 @@ pub fn ecrt_overhead(snrs: &[f64], payload_floats: usize, seed: u64) -> Vec<(f64
         let attempts =
             1.0 + re.retransmissions as f64 / (grads.len() * 32).div_ceil(324) as f64;
         out.push((snr, attempts, re.seconds / rn.seconds));
+    }
+    out
+}
+
+/// One cell of the adaptive link study (E9): a `(fading, snr, scheme)`
+/// combination measured over repeated model-payload deliveries.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveRow {
+    pub fading: Fading,
+    pub snr_db: f64,
+    pub scheme: Scheme,
+    /// Mean per-float squared delivery error, with per-float damage
+    /// capped at 4.0 (the clamp-bound scale) so non-finite corruption
+    /// stays comparable across schemes.
+    pub mse: f64,
+    /// Total airtime across the payloads, seconds.
+    pub seconds: f64,
+    /// Fraction of deliveries the policy sent on the approximate arm
+    /// (0 for non-policy schemes).
+    pub approx_frac: f64,
+    /// Policy arm switches across the delivery sequence.
+    pub switches: u64,
+    /// Mean estimated effective SNR over sounded deliveries (NaN when
+    /// nothing sounded).
+    pub mean_est_snr_db: f64,
+}
+
+/// E9 — CSI-adaptive uplink study at the transport level: for every
+/// `(fading, snr, scheme)` cell, deliver `payloads` fresh
+/// `floats`-sized gradients through one [`Transport`] while threading
+/// the per-sequence [`PolicyState`] (so the adaptive hysteresis sees a
+/// burst *trace*, not isolated sends), and report damage, airtime, and
+/// the policy observables. Shared by `examples/adaptive_study.rs` and
+/// the CI adaptive-smoke step.
+pub fn adaptive_link_sweep(
+    base: &ExperimentConfig,
+    fadings: &[Fading],
+    snrs: &[f64],
+    schemes: &[Scheme],
+    payloads: usize,
+    floats: usize,
+) -> Vec<AdaptiveRow> {
+    let root = Rng::new(base.seed);
+    let mut out = Vec::new();
+    let mut scratch = TxScratch::new();
+    let mut rx: Vec<f32> = Vec::new();
+    for (fi, &fading) in fadings.iter().enumerate() {
+        for (si, &snr_db) in snrs.iter().enumerate() {
+            for &scheme in schemes {
+                let cfg = ExperimentConfig { fading, snr_db, scheme, ..base.clone() };
+                let t = Transport::new(cfg.transport());
+                let combo = (fi * snrs.len() + si) as u64;
+                let mut state = PolicyState::default();
+                let (mut sse, mut count) = (0.0f64, 0usize);
+                let mut seconds = 0.0f64;
+                let (mut approx, mut est_sum, mut est_n) = (0usize, 0.0f64, 0usize);
+                for p in 0..payloads {
+                    let mut grng = root.substream("pay", combo, p as u64);
+                    let grads: Vec<f32> = (0..floats)
+                        .map(|_| grng.normal_scaled(0.0, 0.05) as f32)
+                        .collect();
+                    let mut crng = root.substream("chan", combo, p as u64);
+                    let rep =
+                        t.send_adaptive_into(&grads, &mut crng, state.arm, &mut scratch, &mut rx);
+                    seconds += rep.seconds;
+                    for (a, b) in rx.iter().zip(&grads) {
+                        let d = (a - b) as f64;
+                        sse += if d.is_finite() { (d * d).min(4.0) } else { 4.0 };
+                    }
+                    count += grads.len();
+                    if let Some(pol) = rep.policy {
+                        state.observe(&pol);
+                        if pol.arm == crate::timing::LinkArm::Approx {
+                            approx += 1;
+                        }
+                        if let Some(e) = pol.est_snr_db {
+                            est_sum += e;
+                            est_n += 1;
+                        }
+                    }
+                }
+                out.push(AdaptiveRow {
+                    fading,
+                    snr_db,
+                    scheme,
+                    mse: sse / count.max(1) as f64,
+                    seconds,
+                    approx_frac: approx as f64 / payloads.max(1) as f64,
+                    switches: state.switches,
+                    mean_est_snr_db: if est_n > 0 { est_sum / est_n as f64 } else { f64::NAN },
+                });
+            }
+        }
     }
     out
 }
@@ -249,6 +343,40 @@ mod tests {
         let (max_abs, frac_small) = gradient_bound(&cfg, &engine, 3).unwrap();
         assert!(max_abs < 1.0, "synthetic |g| bound violated: {max_abs}");
         assert_eq!(frac_small, 1.0);
+    }
+
+    #[test]
+    fn adaptive_sweep_shape_and_sanity() {
+        let base = ExperimentConfig::default();
+        let rows = adaptive_link_sweep(
+            &base,
+            &[Fading::GilbertElliott],
+            &[10.0, 20.0],
+            &[Scheme::Ecrt, Scheme::Proposed, Scheme::Adaptive],
+            2,
+            2000,
+        );
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            match r.scheme {
+                Scheme::Ecrt => {
+                    assert_eq!(r.mse, 0.0, "ECRT must deliver exactly at {} dB", r.snr_db);
+                    assert_eq!(r.approx_frac, 0.0);
+                }
+                Scheme::Proposed => {
+                    assert!(r.mse < 0.1, "proposed damage bounded: {}", r.mse);
+                    assert_eq!(r.approx_frac, 0.0, "no policy on a fixed scheme");
+                }
+                Scheme::Adaptive => {
+                    assert!((0.0..=1.0).contains(&r.approx_frac));
+                    assert!(r.mean_est_snr_db.is_finite(), "finite thresholds must sound");
+                    // Exact on fallback deliveries, bounded on approx ones.
+                    assert!(r.mse < 0.1, "adaptive damage bounded: {}", r.mse);
+                }
+                _ => unreachable!(),
+            }
+            assert!(r.seconds > 0.0);
+        }
     }
 
     #[test]

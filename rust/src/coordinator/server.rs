@@ -65,7 +65,7 @@ use crate::model::ParamSet;
 use crate::rng::Rng;
 use crate::runtime::Engine;
 use crate::timing::Ledger;
-use crate::transport::{Transport, TxReport, TxScratch};
+use crate::transport::{PolicyReport, PolicyState, Transport, TxReport, TxScratch};
 use crate::Result;
 
 /// The paper's §III gradient-bound diagnostic threshold (|g| < 1).
@@ -85,6 +85,16 @@ pub struct RoundOutcome {
     /// Mean (across clients) fraction of pre-transport gradient entries
     /// with |g| below the paper's §III bound of 1.
     pub grad_small_frac: f64,
+    /// Fraction of passes the CSI-adaptive policy sent on the
+    /// approximate arm (0 for non-policy schemes).
+    pub approx_frac: f64,
+    /// Policy arm switches across clients this round.
+    pub policy_switches: usize,
+    /// Mean pilot-estimated effective SNR (dB) over sounded passes.
+    pub mean_est_snr_db: Option<f64>,
+    /// Airtime split by policy arm this round, seconds.
+    pub approx_time_s: f64,
+    pub fallback_time_s: f64,
     /// Shards the streaming aggregation used this round.
     pub agg_shards: usize,
     /// Measured peak client passes in flight at once (claimed but not
@@ -256,6 +266,16 @@ pub struct FlServer<'e> {
     slot_pool: Vec<PassSlot>,
     /// Per-shard aggregation stats of the most recent round.
     shard_stats: Vec<ShardStats>,
+    /// Per-client CSI-adaptive hysteresis memory (`Scheme::Adaptive`):
+    /// workers read each client's previous arm during the fan-out
+    /// (immutable), and the round's outcomes are folded back in on the
+    /// coordinator thread after the workers join — in selection order,
+    /// so policy trajectories are bit-deterministic under any worker
+    /// count.
+    policy: Vec<PolicyState>,
+    /// Reusable (selection index -> policy outcome) buffer for that
+    /// fold-back.
+    policy_updates: Vec<(usize, PolicyReport)>,
 }
 
 impl<'e> FlServer<'e> {
@@ -270,6 +290,7 @@ impl<'e> FlServer<'e> {
         let mut init_rng = root_rng.substream("init", 0, 0);
         let params = engine.init_params(&mut init_rng);
         let transport = Transport::new(cfg.transport());
+        let policy = vec![PolicyState::default(); clients.len()];
         Ok(FlServer {
             cfg,
             engine,
@@ -283,6 +304,8 @@ impl<'e> FlServer<'e> {
             scratch_pool: Vec::new(),
             slot_pool: Vec::new(),
             shard_stats: Vec::new(),
+            policy,
+            policy_updates: Vec::new(),
         })
     }
 
@@ -304,6 +327,12 @@ impl<'e> FlServer<'e> {
     /// before the first round).
     pub fn shard_stats(&self) -> &[ShardStats] {
         &self.shard_stats
+    }
+
+    /// Per-client CSI-adaptive policy state (arm + switch count), indexed
+    /// by client id. All-default for non-policy schemes.
+    pub fn policy_states(&self) -> &[PolicyState] {
+        &self.policy
     }
 
     /// Participants for `round` (all clients when the config says so —
@@ -370,17 +399,30 @@ impl<'e> FlServer<'e> {
             small as f64 / slot.flat.len() as f64
         };
         let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
-        slot.report = self.transport.send_into(&slot.flat, &mut crng, scratch, &mut slot.rx);
+        // The client's previous policy arm is the hysteresis memory the
+        // adaptive transport thresholds against; `self.policy` is
+        // read-only for the whole fan-out, so this is a safe concurrent
+        // read (updates land after the workers join).
+        slot.report = self.transport.send_adaptive_into(
+            &slot.flat,
+            &mut crng,
+            self.policy[ci].arm,
+            scratch,
+            &mut slot.rx,
+        );
         slot.loss = loss;
         Ok(())
     }
 
     /// Fold a completed pass into its shard (consumer side — always
-    /// called in selection order, which fixes the reduction shape).
+    /// called in selection order, which fixes the reduction shape and
+    /// the policy-update order).
+    #[allow(clippy::too_many_arguments)]
     fn feed_pass(
         &self,
         agg: &mut ShardedAggregator,
         ledger: &mut Ledger,
+        updates: &mut Vec<(usize, PolicyReport)>,
         sel_idx: usize,
         ci: usize,
         selected_data: usize,
@@ -398,7 +440,10 @@ impl<'e> FlServer<'e> {
                 report: &slot.report,
             },
         )?;
-        ledger.record_client(slot.report.seconds);
+        ledger.record_client_arm(slot.report.seconds, slot.report.policy.map(|p| p.arm));
+        if let Some(p) = slot.report.policy {
+            updates.push((ci, p));
+        }
         Ok(())
     }
 
@@ -422,6 +467,8 @@ impl<'e> FlServer<'e> {
         if pool.len() < workers {
             pool.resize_with(workers, TxScratch::new);
         }
+        let mut updates = std::mem::take(&mut self.policy_updates);
+        updates.clear();
         let mut slots = std::mem::take(&mut self.slot_pool);
         // Two in-flight passes per worker: enough slack that workers
         // rarely stall on the in-order feeder, still O(workers) memory.
@@ -440,7 +487,15 @@ impl<'e> FlServer<'e> {
             for (i, &ci) in selected.iter().enumerate() {
                 peak_inflight = 1;
                 res = self.client_pass(ci, round, scratch, slot).and_then(|()| {
-                    self.feed_pass(&mut agg, &mut ledger, i, ci, selected_data, slot)
+                    self.feed_pass(
+                        &mut agg,
+                        &mut ledger,
+                        &mut updates,
+                        i,
+                        ci,
+                        selected_data,
+                        slot,
+                    )
                 });
                 if res.is_err() {
                     break;
@@ -482,6 +537,7 @@ impl<'e> FlServer<'e> {
                         this.feed_pass(
                             &mut agg,
                             &mut ledger,
+                            &mut updates,
                             i,
                             selected_ref[i],
                             selected_data,
@@ -506,6 +562,12 @@ impl<'e> FlServer<'e> {
         self.scratch_pool = pool;
         self.slot_pool = slots;
         self.ledger = ledger;
+        // Fold the round's policy outcomes into the per-client hysteresis
+        // memory (selection order; next round's passes read it).
+        for (ci, rep) in updates.drain(..) {
+            self.policy[ci].observe(&rep);
+        }
+        self.policy_updates = updates;
         run_res?;
 
         // Combine shards in shard order (fixed shape) and apply the
@@ -525,6 +587,12 @@ impl<'e> FlServer<'e> {
             corrupted_frac: totals.corrupted_sum / nf,
             grad_max_abs: totals.grad_max_abs,
             grad_small_frac: totals.grad_small_sum / nf,
+            approx_frac: totals.approx_clients as f64 / nf,
+            policy_switches: totals.policy_switches,
+            mean_est_snr_db: (totals.est_snr_count > 0)
+                .then(|| totals.est_snr_sum / totals.est_snr_count as f64),
+            approx_time_s: totals.approx_s,
+            fallback_time_s: totals.fallback_s,
             agg_shards: self.shard_stats.len(),
             peak_inflight,
         })
@@ -623,9 +691,18 @@ fn emit_round(
 ) {
     if progress {
         let acc_s = acc.map_or(String::new(), |a| format!(" acc={a:.4}"));
+        // Policy-classified rounds additionally show the arm census.
+        let pol_s = if out.approx_time_s + out.fallback_time_s > 0.0 {
+            let est = out
+                .mean_est_snr_db
+                .map_or(String::new(), |e| format!(" est={e:.1}dB"));
+            format!(" approx={:.0}%{est}", 100.0 * out.approx_frac)
+        } else {
+            String::new()
+        };
         eprintln!(
-            "[{}] round {:>4} loss={:.4} ber={:.4} t={:.3}s{}",
-            scheme, out.round, out.mean_loss, out.mean_ber, out.cumulative_comm_s, acc_s
+            "[{}] round {:>4} loss={:.4} ber={:.4} t={:.3}s{}{}",
+            scheme, out.round, out.mean_loss, out.mean_ber, out.cumulative_comm_s, acc_s, pol_s
         );
     }
     trace.push(RoundRecord {
@@ -636,5 +713,10 @@ fn emit_round(
         mean_ber: out.mean_ber,
         retransmissions: out.retransmissions,
         corrupted_frac: out.corrupted_frac,
+        approx_frac: out.approx_frac,
+        policy_switches: out.policy_switches,
+        mean_est_snr_db: out.mean_est_snr_db,
+        approx_time_s: out.approx_time_s,
+        fallback_time_s: out.fallback_time_s,
     });
 }

@@ -124,14 +124,49 @@ pub fn symbol_llrs_eq(
     }
 }
 
+/// Reusable workspace for [`transmit_reliable_with`]: the channel-engine
+/// scratch plus the per-attempt receiver buffers (equalized
+/// observations, CSI report, LLRs). Reused across attempts *and* across
+/// deliveries, so a caller that holds one (the transport's ECRT /
+/// adaptive-fallback leg) pays no per-delivery buffer churn beyond the
+/// returned payload. Scratch contents never influence results.
+#[derive(Default)]
+pub struct ArqScratch {
+    chan: ChannelScratch,
+    eq: Vec<Complex>,
+    csi: Vec<f64>,
+    llrs: Vec<f32>,
+}
+
+impl ArqScratch {
+    pub fn new() -> Self {
+        ArqScratch::default()
+    }
+}
+
 /// Reliably deliver `payload` over `(con, ch)`. Returns the delivered
 /// payload (bit-exact unless `stats.exhausted > 0`) and the stats.
+/// Borrows a fresh scratch internally; hot loops should hold an
+/// [`ArqScratch`] and call [`transmit_reliable_with`].
 pub fn transmit_reliable(
     payload: &BitVec,
     con: &Constellation,
     ch: &Channel,
     rng: &mut Rng,
     cfg: &ArqConfig,
+) -> (BitVec, FecStats) {
+    transmit_reliable_with(payload, con, ch, rng, cfg, &mut ArqScratch::new())
+}
+
+/// [`transmit_reliable`] with a caller-owned [`ArqScratch`]. The RNG
+/// draw order is identical — the scratch only recycles buffers.
+pub fn transmit_reliable_with(
+    payload: &BitVec,
+    con: &Constellation,
+    ch: &Channel,
+    rng: &mut Rng,
+    cfg: &ArqConfig,
+    scratch: &mut ArqScratch,
 ) -> (BitVec, FecStats) {
     let code = LdpcCode::ieee80211n_648_r12();
     let k = code.k;
@@ -144,15 +179,13 @@ pub fn transmit_reliable(
         ..Default::default()
     };
     let mut delivered = BitVec::with_capacity(nblocks * k);
-    let mut llrs: Vec<f32> = Vec::with_capacity(code.n);
-    // Reused across attempts: both receivers ride the version-dispatched
-    // block channel engine with zero steady-state allocation. The
-    // bounded-distance receiver needs only equalized observations
-    // (`transmit_into`); the min-sum receiver additionally takes the
-    // per-symbol |c|^2 for its LLR weights (`transmit_csi_into`).
-    let mut eq: Vec<Complex> = Vec::new();
-    let mut csi: Vec<f64> = Vec::new();
-    let mut chan_scratch = ChannelScratch::new();
+    // Reused across attempts and deliveries: both receivers ride the
+    // version-dispatched block channel engine with zero steady-state
+    // allocation. The bounded-distance receiver needs only equalized
+    // observations (`transmit_into`); the min-sum receiver additionally
+    // takes the per-symbol |c|^2 for its LLR weights
+    // (`transmit_csi_into`).
+    let ArqScratch { chan: chan_scratch, eq, csi, llrs } = scratch;
 
     for b in 0..nblocks {
         // Zero-padded info block.
@@ -174,8 +207,8 @@ pub fn transmit_reliable(
             stats.symbols_sent += syms.len();
             match cfg.decoder {
                 DecoderKind::BoundedDistance(t) => {
-                    ch.transmit_into(&syms, rng, &mut chan_scratch, &mut eq);
-                    let rx = con.demodulate(&eq, code.n);
+                    ch.transmit_into(&syms, rng, chan_scratch, eq);
+                    let rx = con.demodulate(eq, code.n);
                     last_hard = rx.clone();
                     if let Some(fixed) = code.decode_bounded_distance(&cw, &rx, t) {
                         decoded = Some(fixed);
@@ -183,17 +216,17 @@ pub fn transmit_reliable(
                     }
                 }
                 DecoderKind::MinSum { max_iter } => {
-                    ch.transmit_csi_into(&syms, rng, &mut chan_scratch, &mut eq, &mut csi);
+                    ch.transmit_csi_into(&syms, rng, chan_scratch, eq, csi);
                     llrs.clear();
                     let sigma2 = ch.cfg.noise_power();
-                    for (&y, &c2) in eq.iter().zip(&csi) {
-                        symbol_llrs_eq(con, &points, y, c2 / sigma2, &mut llrs);
+                    for (&y, &c2) in eq.iter().zip(csi.iter()) {
+                        symbol_llrs_eq(con, &points, y, c2 / sigma2, llrs);
                     }
                     llrs.truncate(code.n); // drop modulation pad positions
                     while llrs.len() < code.n {
                         llrs.push(0.0);
                     }
-                    let (dec, ok) = code.decode_min_sum(&llrs, max_iter);
+                    let (dec, ok) = code.decode_min_sum(&llrs[..], max_iter);
                     last_hard = dec.clone();
                     if ok {
                         decoded = Some(dec);
@@ -282,6 +315,33 @@ mod tests {
         let (got, stats) = transmit_reliable(&p, &qpsk(), &ch, &mut rng, &cfg);
         assert_eq!(got, p);
         assert_eq!(stats.exhausted, 0);
+    }
+
+    #[test]
+    fn reused_scratch_is_bit_identical_across_deliveries() {
+        // The scratch only recycles buffers: same stream, same payload,
+        // same bits — for both decoders and across shape changes.
+        let root = Rng::new(9);
+        let ch = block_channel(14.0);
+        let mut scratch = ArqScratch::new();
+        for decoder in [
+            DecoderKind::BoundedDistance(crate::fec::PAPER_T),
+            DecoderKind::MinSum { max_iter: 40 },
+        ] {
+            let cfg = ArqConfig { max_attempts: 64, decoder };
+            for (i, n) in [1000usize, 300, 1000].into_iter().enumerate() {
+                let p = payload(&mut root.substream("p", i as u64, 0), n);
+                let mut r1 = root.substream("chan", i as u64, 1);
+                let mut r2 = r1.clone();
+                let (fresh, s1) = transmit_reliable(&p, &qpsk(), &ch, &mut r1, &cfg);
+                let (reused, s2) =
+                    transmit_reliable_with(&p, &qpsk(), &ch, &mut r2, &cfg, &mut scratch);
+                assert_eq!(fresh, reused, "{decoder:?} n={n}");
+                assert_eq!(s1.transmissions, s2.transmissions);
+                assert_eq!(s1.symbols_sent, s2.symbols_sent);
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{decoder:?} stream diverged");
+            }
+        }
     }
 
     #[test]

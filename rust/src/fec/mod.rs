@@ -7,5 +7,5 @@ pub mod conv_code;
 pub mod crc;
 pub mod ldpc;
 
-pub use arq::{ArqConfig, DecoderKind, FecStats};
+pub use arq::{ArqConfig, ArqScratch, DecoderKind, FecStats};
 pub use ldpc::{LdpcCode, PAPER_T};

@@ -8,7 +8,8 @@
 //!   wireless substrate: QAM modem with gray coding ([`modem`]), Rayleigh
 //!   fading channel ([`channel`]), QC-LDPC + CRC + ARQ ([`fec`]),
 //!   IEEE-754 bit manipulation / interleaving / bit-protection ([`bits`]),
-//!   the four uplink transport schemes ([`transport`]), airtime accounting
+//!   the composable uplink link pipeline with its scheme compositions and
+//!   CSI-adaptive policy layer ([`transport`]), airtime accounting
 //!   ([`timing`]), and the FedSGD server/round loop ([`coordinator`]).
 //! * **L2** — the paper's CNN in JAX (`python/compile/model.py`),
 //!   AOT-lowered to HLO text once; loaded and executed from [`runtime`]

@@ -52,6 +52,11 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("agg-shards", "agg_shards"),
         ("pipeline-depth", "pipeline_depth"),
         ("parallel-clients", "parallel_clients"),
+        ("fading", "fading"),
+        ("rng-version", "rng_version"),
+        ("adaptive-enter", "adaptive_enter_db"),
+        ("adaptive-exit", "adaptive_exit_db"),
+        ("pilots", "adaptive_pilots"),
     ] {
         if let Some(v) = args.opt(flag) {
             overrides.push((key.to_string(), v.to_string()));

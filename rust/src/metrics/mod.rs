@@ -22,6 +22,20 @@ pub struct RoundRecord {
     pub retransmissions: usize,
     /// Mean fraction of floats still corrupted after protection.
     pub corrupted_frac: f64,
+    /// Fraction of this round's passes the CSI-adaptive policy sent on
+    /// the approximate arm (0 for non-policy schemes).
+    pub approx_frac: f64,
+    /// Policy arm switches across clients this round.
+    pub policy_switches: usize,
+    /// Mean pilot-estimated effective SNR (dB) over the passes that
+    /// sounded the channel; `None` when no pass did (non-policy schemes
+    /// or forced arms).
+    pub mean_est_snr_db: Option<f64>,
+    /// This round's airtime on the approximate arm, seconds (policy
+    /// schemes only; includes each arm's pilot overhead).
+    pub approx_time_s: f64,
+    /// This round's airtime on the ECRT fallback arm, seconds.
+    pub fallback_time_s: f64,
 }
 
 /// A full experiment trace.
@@ -62,13 +76,16 @@ impl Trace {
             .map(|r| r.comm_time_s)
     }
 
-    /// CSV rows: label,round,comm_time_s,accuracy,loss,ber,retx,corrupted.
+    /// CSV rows: label,round,comm_time_s,accuracy,loss,ber,retx,corrupted,
+    /// then the policy columns (approx fraction, switches, mean estimated
+    /// SNR — empty when nothing sounded — and per-arm airtime).
     pub fn csv_rows(&self) -> String {
         let mut s = String::new();
         for r in &self.rounds {
             let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
+            let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
             s.push_str(&format!(
-                "{},{},{:.6},{},{:.4},{:.6},{},{:.6}\n",
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6}\n",
                 self.label,
                 r.round,
                 r.comm_time_s,
@@ -76,7 +93,12 @@ impl Trace {
                 r.train_loss,
                 r.mean_ber,
                 r.retransmissions,
-                r.corrupted_frac
+                r.corrupted_frac,
+                r.approx_frac,
+                r.policy_switches,
+                est,
+                r.approx_time_s,
+                r.fallback_time_s
             ));
         }
         s
@@ -84,8 +106,9 @@ impl Trace {
 }
 
 /// CSV header matching [`Trace::csv_rows`].
-pub const CSV_HEADER: &str =
-    "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,retransmissions,corrupted_frac\n";
+pub const CSV_HEADER: &str = "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,\
+     retransmissions,corrupted_frac,approx_frac,policy_switches,est_snr_db,\
+     approx_time_s,fallback_time_s\n";
 
 /// Write traces to a CSV file (creating parent dirs).
 pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
@@ -124,6 +147,18 @@ pub struct ShardStats {
     pub grad_max_abs: f32,
     /// Sum of per-client fractions of |g| below the paper's bound.
     pub grad_small_sum: f64,
+    /// Passes the CSI-adaptive policy sent on the approximate arm.
+    pub approx_clients: usize,
+    /// Policy arm switches across this shard's clients.
+    pub policy_switches: usize,
+    /// Sum of pilot-estimated effective SNRs (dB) over the passes that
+    /// sounded the channel, with their count (forced arms don't sound).
+    pub est_snr_sum: f64,
+    pub est_snr_count: usize,
+    /// Airtime split by policy arm, seconds (pilot overhead included in
+    /// the chosen arm's share).
+    pub approx_s: f64,
+    pub fallback_s: f64,
 }
 
 impl ShardStats {
@@ -220,6 +255,7 @@ mod tests {
                 mean_ber: 0.04,
                 retransmissions: 0,
                 corrupted_frac: 0.01,
+                ..Default::default()
             });
         }
         t
@@ -244,6 +280,29 @@ mod tests {
         // Non-eval rounds leave accuracy empty.
         let second = csv.lines().nth(1).unwrap();
         assert!(second.contains(",,"), "{second}");
+        // Every row carries exactly the header's column count (the
+        // policy columns included; unsounded rounds leave est_snr empty).
+        let ncols = CSV_HEADER.trim().split(',').count();
+        assert_eq!(ncols, 13);
+        for line in csv.lines() {
+            assert_eq!(line.split(',').count(), ncols, "{line}");
+        }
+    }
+
+    #[test]
+    fn csv_policy_columns_render() {
+        let mut t = Trace::new("adaptive");
+        t.push(RoundRecord {
+            round: 0,
+            approx_frac: 0.75,
+            policy_switches: 3,
+            mean_est_snr_db: Some(10.25),
+            approx_time_s: 1.5,
+            fallback_time_s: 4.0,
+            ..Default::default()
+        });
+        let row = t.csv_rows();
+        assert!(row.contains(",0.7500,3,10.25,1.500000,4.000000"), "{row}");
     }
 
     #[test]

@@ -173,6 +173,17 @@ impl Constellation {
         )
     }
 
+    /// Reference pilot symbol for channel sounding: the all-zero-bits
+    /// constellation point (a valid, known symbol of this modulation).
+    /// The CSI-adaptive policy sends a short run of these to estimate
+    /// the effective SNR before choosing an uplink arm; the estimate
+    /// reads the receiver-known `|c|^2`, so the pilot's own energy does
+    /// not bias it.
+    #[inline]
+    pub fn pilot_symbol(&self) -> Complex {
+        self.map_symbol(0)
+    }
+
     /// Inverse of [`Self::map_symbol`]: symbol bits of the constellation
     /// point nearest to `y` (exact ML given an equalized observation).
     #[inline]

@@ -7,6 +7,30 @@
 //! numbers; Fig. 3's claims are ratios, which are invariant to the
 //! absolute symbol rate (DESIGN.md §4).
 
+/// Which uplink leg a policy-driven delivery took — the airtime class
+/// used for per-arm accounting. The CSI-adaptive policy layer
+/// (`transport::policy`) chooses the arm per transmission; this lives in
+/// `timing` so the [`Ledger`] can split airtime without depending on the
+/// transport layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkArm {
+    /// The approximate (erroneous-but-bounded) uplink leg.
+    Approx,
+    /// The ECRT (LDPC + ARQ, exact) fallback leg.
+    Fallback,
+}
+
+impl LinkArm {
+    /// Stable index into `[approx, fallback]` accounting arrays.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            LinkArm::Approx => 0,
+            LinkArm::Fallback => 1,
+        }
+    }
+}
+
 /// Physical + MAC constants of the simulated link.
 #[derive(Clone, Copy, Debug)]
 pub struct AirtimeModel {
@@ -40,6 +64,13 @@ impl AirtimeModel {
         self.preamble_s + symbols as f64 / self.symbol_rate
     }
 
+    /// Airtime of a pilot preamble riding an existing burst (no extra
+    /// PHY preamble — pilots share the payload burst's header). Used by
+    /// the CSI-adaptive policy layer to charge its channel sounding.
+    pub fn pilot_time(&self, symbols: usize) -> f64 {
+        symbols as f64 / self.symbol_rate
+    }
+
     /// Airtime of an ECRT delivery under selective-repeat ARQ with
     /// 802.11-style aggregation: every codeword transmission pays its
     /// symbol time; each *burst* (initial aggregated MPDU + one per
@@ -62,10 +93,18 @@ impl AirtimeModel {
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     round_client_times: Vec<f64>,
+    /// Current round's airtime split by policy arm `[approx, fallback]`
+    /// (only policy-classified deliveries contribute).
+    round_arm_s: [f64; 2],
     /// Cumulative communication time, seconds.
     pub total_s: f64,
     /// Per-round totals.
     pub per_round_s: Vec<f64>,
+    /// Cumulative airtime per policy arm `[approx, fallback]`.
+    pub arm_total_s: [f64; 2],
+    /// Per-round `[approx, fallback]` airtime splits (zeros for rounds
+    /// of non-policy schemes).
+    pub per_round_arm_s: Vec<[f64; 2]>,
 }
 
 /// How client slots combine into round time.
@@ -84,7 +123,17 @@ impl Ledger {
 
     /// Record one client's uplink time within the current round.
     pub fn record_client(&mut self, seconds: f64) {
+        self.record_client_arm(seconds, None);
+    }
+
+    /// [`Ledger::record_client`] with the delivery's policy arm, if the
+    /// transmission was policy-classified (`Scheme::Adaptive`): the time
+    /// additionally lands in the per-arm split.
+    pub fn record_client_arm(&mut self, seconds: f64, arm: Option<LinkArm>) {
         self.round_client_times.push(seconds);
+        if let Some(a) = arm {
+            self.round_arm_s[a.index()] += seconds;
+        }
     }
 
     /// Close the round, returning its communication time.
@@ -96,7 +145,16 @@ impl Ledger {
         self.round_client_times.clear();
         self.total_s += t;
         self.per_round_s.push(t);
+        let arms = std::mem::take(&mut self.round_arm_s);
+        self.arm_total_s[0] += arms[0];
+        self.arm_total_s[1] += arms[1];
+        self.per_round_arm_s.push(arms);
         t
+    }
+
+    /// Cumulative airtime spent on one policy arm.
+    pub fn arm_total(&self, arm: LinkArm) -> f64 {
+        self.arm_total_s[arm.index()]
     }
 }
 
@@ -161,5 +219,29 @@ mod tests {
         assert!((l.finish_round(Multiplexing::Fdma) - 5.0).abs() < 1e-12);
         assert!((l.total_s - 11.0).abs() < 1e-12);
         assert_eq!(l.per_round_s.len(), 2);
+    }
+
+    #[test]
+    fn per_arm_airtime_split() {
+        let mut l = Ledger::new();
+        l.record_client_arm(1.0, Some(LinkArm::Approx));
+        l.record_client_arm(4.0, Some(LinkArm::Fallback));
+        l.record_client(2.0); // unclassified: total only
+        let t = l.finish_round(Multiplexing::Tdma);
+        assert!((t - 7.0).abs() < 1e-12);
+        assert_eq!(l.per_round_arm_s, vec![[1.0, 4.0]]);
+        // Next round: the split resets, cumulative arms persist.
+        l.record_client_arm(0.5, Some(LinkArm::Approx));
+        l.finish_round(Multiplexing::Tdma);
+        assert!((l.arm_total(LinkArm::Approx) - 1.5).abs() < 1e-12);
+        assert!((l.arm_total(LinkArm::Fallback) - 4.0).abs() < 1e-12);
+        assert_eq!(l.per_round_arm_s[1], [0.5, 0.0]);
+    }
+
+    #[test]
+    fn pilot_time_has_no_preamble() {
+        let m = AirtimeModel::default();
+        assert_eq!(m.pilot_time(0), 0.0);
+        assert!((m.pilot_time(13_000_000) - 1.0).abs() < 1e-9);
     }
 }

@@ -24,8 +24,12 @@ use crate::modem::Modulation;
 #[derive(Clone, Debug)]
 pub struct ImportanceMap {
     window: usize,
-    /// Forward window permutation (`perm[i]` = wire position whose bit is
-    /// sent in slot `i`), replicated over both 32-bit halves of a word.
+    /// Forward window permutation (`window_perm[i]` = wire position whose
+    /// bit is sent in slot `i`), cached at construction — the single
+    /// source the word tables below are derived from, and what
+    /// [`ImportanceMap::window_perm`] hands out without allocating.
+    window_perm: Vec<usize>,
+    /// `window_perm` replicated over both 32-bit halves of a word.
     perm64: [u8; 64],
     /// The inverse permutation, same replication.
     inv64: [u8; 64],
@@ -69,13 +73,16 @@ impl ImportanceMap {
                 inv64[half * window + slot] = (half * window + inv[slot]) as u8;
             }
         }
-        ImportanceMap { window, perm64, inv64 }
+        ImportanceMap { window, window_perm: perm, perm64, inv64 }
     }
 
     /// The single-window forward permutation (slot -> source wire
     /// position) — the spec the tests pin the word tables against.
-    pub fn window_perm(&self) -> Vec<usize> {
-        self.perm64[..self.window].iter().map(|&b| b as usize).collect()
+    /// Borrows the table cached at construction (no per-call allocation);
+    /// [`ImportanceMap::apply_into`] / [`ImportanceMap::invert_into`] run
+    /// on the word tables derived from this same cache.
+    pub fn window_perm(&self) -> &[usize] {
+        &self.window_perm
     }
 
     /// Apply to a packed float bitstream (length must be a multiple of

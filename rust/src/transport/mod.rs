@@ -1,17 +1,29 @@
-//! Uplink transport schemes (paper §IV-B and §V).
+//! Uplink transport: a composable link-layer pipeline plus a
+//! channel-quality policy layer (paper §IV-B, §V, and the adaptive
+//! premise of §I — approximate only "when the channel quality is
+//! satisfactory").
 //!
 //! A [`Transport`] moves a client's gradient vector to the PS over the
-//! wireless substrate and reports what it cost. Four schemes:
+//! wireless substrate and reports what it cost. Deliveries are built
+//! from the explicit stage pipeline in [`pipeline`]
+//! (frame/pack → protect+interleave → modulate → channel leg →
+//! demod/LLR → decode → unpack/clamp); a [`Scheme`] names either a fixed
+//! stage composition or a policy over compositions:
 //!
-//! | scheme | FEC | ReTX | interleave | bit protection | delivery |
-//! |--------|-----|------|-----------|----------------|----------|
-//! | [`Scheme::Perfect`] | – | – | – | – | exact (genie) |
-//! | [`Scheme::Ecrt`] | LDPC 1/2 | stop-and-wait | – | – | exact |
-//! | [`Scheme::Naive`] | – | – | – | – | erroneous |
-//! | [`Scheme::Proposed`] | – | – | block | bit-2 force + clamp | erroneous-but-bounded |
+//! | scheme | composition | policy | delivery |
+//! |--------|-------------|--------|----------|
+//! | [`Scheme::Perfect`] | [`pipeline::PerfectLink`] | – | exact (genie, uncoded airtime) |
+//! | [`Scheme::Ecrt`] | [`pipeline::ReliableLink`] (LDPC 1/2 + stop-and-wait) | – | exact |
+//! | [`Scheme::Naive`] | [`pipeline::ErroneousLink`], no protection | – | erroneous |
+//! | [`Scheme::Proposed`] | [`pipeline::ErroneousLink`], interleave + exp-MSB force + clamp | – | erroneous-but-bounded |
+//! | [`Scheme::Adaptive`] | Proposed *or* Ecrt composition per transmission | CSI threshold + hysteresis ([`policy`]) | mixed, per channel quality |
 //!
-//! `Perfect` is the error-free ideal (charged the uncoded airtime) used
-//! as the accuracy upper bound; the other three are the arms of Fig. 3.
+//! `Perfect` is the accuracy upper bound; `Ecrt`/`Naive`/`Proposed` are
+//! the arms of Fig. 3. `Adaptive` sounds the channel with pilots, picks
+//! the approximate arm when the effective SNR clears its thresholds and
+//! the ECRT fallback otherwise, and reports its arm choice, SNR estimate
+//! and switch flag on [`TxReport::policy`] — new behaviors are new stage
+//! compositions or policies, not new copies of the chain.
 //!
 //! # Scratch buffers and re-entrancy
 //!
@@ -35,20 +47,25 @@
 //! additionally honours `ChannelConfig::rng_version`: `V1` replays the
 //! seed repo's scalar bitstream bit-exactly, `V2Batched` routes through
 //! the batched channel-noise engine (same distribution, faster stream).
+//! The adaptive policy's pilot sounding draws only from a derived
+//! substream and its per-client hysteresis memory is owned by the caller
+//! ([`policy::PolicyState`]), so the contract extends to
+//! `Scheme::Adaptive` unchanged.
 
 pub mod compress;
 pub mod mapping;
+pub mod pipeline;
+pub mod policy;
 
-use crate::bits::{
-    pack_f32s, pack_f32s_into, unpack_f32s_into, BitProtection, BitVec,
-    BlockInterleaver, EXP_MASK_U64, FRAC_MASK_U64, SIGN_MASK_U64,
-};
+use crate::bits::{BitProtection, BitVec, BlockInterleaver};
 use crate::channel::{Channel, ChannelConfig, ChannelScratch};
-use crate::fec::{self, ArqConfig};
+use crate::fec::{ArqConfig, ArqScratch};
 use crate::math::Complex;
 use crate::modem::{Constellation, Modulation};
 use crate::rng::Rng;
 use crate::timing::AirtimeModel;
+
+pub use policy::{AdaptiveConfig, LinkArm, PolicyReport, PolicyState};
 
 /// Uplink scheme selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,11 +79,20 @@ pub enum Scheme {
     /// The paper's approximate scheme: interleaving + receiver-side
     /// exponent-MSB forcing + value clamp, no FEC, no retransmission.
     Proposed,
+    /// CSI-adaptive policy: per-transmission pilot sounding chooses
+    /// between the Proposed composition (channel good) and the ECRT
+    /// fallback (channel bad) with hysteresis — see [`policy`].
+    Adaptive,
 }
 
 impl Scheme {
-    pub const ALL: [Scheme; 4] =
-        [Scheme::Perfect, Scheme::Ecrt, Scheme::Naive, Scheme::Proposed];
+    pub const ALL: [Scheme; 5] = [
+        Scheme::Perfect,
+        Scheme::Ecrt,
+        Scheme::Naive,
+        Scheme::Proposed,
+        Scheme::Adaptive,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -74,6 +100,7 @@ impl Scheme {
             Scheme::Ecrt => "ecrt",
             Scheme::Naive => "naive",
             Scheme::Proposed => "proposed",
+            Scheme::Adaptive => "adaptive",
         }
     }
 
@@ -83,6 +110,7 @@ impl Scheme {
             "ecrt" => Some(Scheme::Ecrt),
             "naive" => Some(Scheme::Naive),
             "proposed" | "approx" => Some(Scheme::Proposed),
+            "adaptive" | "csi" | "csi_adaptive" => Some(Scheme::Adaptive),
             _ => None,
         }
     }
@@ -109,6 +137,9 @@ pub struct TxReport {
     pub corrupted_floats: usize,
     /// ECRT retransmissions (0 otherwise).
     pub retransmissions: usize,
+    /// Policy-layer outcome (arm chosen, SNR estimate, switch flag,
+    /// pilot airtime) — `Some` only for `Scheme::Adaptive`.
+    pub policy: Option<PolicyReport>,
 }
 
 impl TxReport {
@@ -135,6 +166,9 @@ pub struct TransportConfig {
     /// Optional importance-aware bit-to-symbol-slot mapping (extension
     /// ablation; see [`mapping`]). Mutually exclusive with interleaving.
     pub importance_mapping: bool,
+    /// Thresholds + pilot length of the CSI-adaptive policy (read only
+    /// by `Scheme::Adaptive`).
+    pub adaptive: AdaptiveConfig,
 }
 
 impl TransportConfig {
@@ -148,6 +182,7 @@ impl TransportConfig {
             interleave_spread: 37,
             protection: BitProtection::proposed(),
             importance_mapping: false,
+            adaptive: AdaptiveConfig::default(),
         }
     }
 }
@@ -169,6 +204,12 @@ pub struct TxScratch {
     chan: ChannelScratch,
     /// Interleaver cached per (payload bits, spread).
     interleaver: Option<(usize, usize, BlockInterleaver)>,
+    /// ARQ receiver buffers for the coded (ECRT / adaptive-fallback) leg.
+    arq: ArqScratch,
+    /// Pilot-sounding buffers for the adaptive policy layer.
+    pilot_syms: Vec<Complex>,
+    pilot_eq: Vec<Complex>,
+    pilot_csi: Vec<f64>,
 }
 
 impl TxScratch {
@@ -247,149 +288,118 @@ impl Transport {
         scratch: &mut TxScratch,
         out: &mut Vec<f32>,
     ) -> TxReport {
-        match self.cfg.scheme {
-            Scheme::Perfect => self.send_perfect_into(grads, out),
-            Scheme::Ecrt => self.send_ecrt_into(grads, rng, out),
-            Scheme::Naive => {
-                self.send_erroneous_into(grads, rng, BitProtection::none(), 0, false, scratch, out)
-            }
-            Scheme::Proposed => self.send_erroneous_into(
-                grads,
-                rng,
-                self.cfg.protection,
-                self.cfg.interleave_spread,
-                self.cfg.importance_mapping,
-                scratch,
-                out,
-            ),
-        }
+        self.send_adaptive_into(grads, rng, None, scratch, out)
     }
 
-    fn send_perfect_into(&self, grads: &[f32], out: &mut Vec<f32>) -> TxReport {
-        out.clear();
-        out.extend_from_slice(grads);
-        let payload_bits = grads.len() * 32;
-        let symbols = payload_bits.div_ceil(self.con.modulation.bits_per_symbol());
-        TxReport {
-            seconds: self.cfg.airtime.burst_time(symbols),
-            payload_bits,
-            symbols_sent: symbols,
-            ..Default::default()
-        }
-    }
-
-    fn send_ecrt_into(&self, grads: &[f32], rng: &mut Rng, out: &mut Vec<f32>) -> TxReport {
-        let bits = pack_f32s(grads);
-        let framed = fec::crc::append_crc(&bits);
-        let (delivered, stats) =
-            fec::arq::transmit_reliable(&framed, &self.con, &self.channel, rng, &self.cfg.arq);
-        let (payload, crc_ok) = fec::crc::check_crc(&delivered);
-        // With the retry budget of the paper configurations the CRC always
-        // passes; a residual failure falls back to the corrupted payload
-        // (and is visible in the report).
-        let rx_bits = if crc_ok { payload } else { delivered.slice(0, bits.len()) };
-        unpack_f32s_into(&rx_bits, out);
-        TxReport {
-            seconds: self.cfg.airtime.ecrt_time(&stats),
-            payload_bits: bits.len(),
-            symbols_sent: stats.symbols_sent,
-            bit_errors: rx_bits.hamming(&bits),
-            retransmissions: stats.retransmissions(),
-            ..Default::default()
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn send_erroneous_into(
+    /// [`Self::send_into`] with the client's previous policy arm (the
+    /// hysteresis memory, owned by the caller — the FL coordinator keeps
+    /// one [`PolicyState`] per client and feeds `state.arm` here). The
+    /// argument is ignored by every scheme except `Adaptive`; `None`
+    /// means "first transmission" and makes this identical to
+    /// [`Self::send_into`].
+    pub fn send_adaptive_into(
         &self,
         grads: &[f32],
         rng: &mut Rng,
-        protection: BitProtection,
-        interleave_spread: usize,
-        importance: bool,
-        s: &mut TxScratch,
+        prev_arm: Option<LinkArm>,
+        scratch: &mut TxScratch,
         out: &mut Vec<f32>,
     ) -> TxReport {
-        pack_f32s_into(grads, &mut s.tx_bits);
-        let n = s.tx_bits.len();
-
-        // TX chain: (importance map | interleave) -> modulate. Every
-        // stage writes into a scratch buffer; nothing allocates once the
-        // scratch has seen this payload shape.
-        let wire_bits = if importance {
-            self.imap.as_ref().unwrap().apply_into(&s.tx_bits, &mut s.mapped);
-            &s.mapped
-        } else {
-            &s.tx_bits
-        };
-        let air_bits = if interleave_spread > 0 {
-            let il = {
-                let stale = !matches!(
-                    &s.interleaver,
-                    Some((cn, cs, _)) if *cn == n && *cs == interleave_spread
-                );
-                if stale {
-                    s.interleaver = Some((
-                        n,
-                        interleave_spread,
-                        BlockInterleaver::for_len(n, interleave_spread),
-                    ));
-                }
-                &s.interleaver.as_ref().unwrap().2
-            };
-            il.interleave_into(wire_bits, &mut s.air);
-            &s.air
-        } else {
-            wire_bits
-        };
-
-        self.con.modulate_into(air_bits, &mut s.symbols);
-        // Version dispatch: V1 = seed-compatible scalar loop, V2Batched =
-        // the block channel-noise engine (see `crate::channel`).
-        self.channel.transmit_into(&s.symbols, rng, &mut s.chan, &mut s.eq);
-        self.con.demodulate_into(&s.eq, air_bits.len(), &mut s.rx_air);
-
-        // RX chain: deinterleave -> unmap -> protect.
-        let rx_bits: &BitVec = if interleave_spread > 0 {
-            let il = &s.interleaver.as_ref().unwrap().2;
-            il.deinterleave_into(&s.rx_air, n, &mut s.rx_bits);
-            &s.rx_bits
-        } else {
-            s.rx_air.truncate(n);
-            &s.rx_air
-        };
-        let rx_bits: &BitVec = if importance {
-            self.imap.as_ref().unwrap().invert_into(rx_bits, &mut s.mapped);
-            &s.mapped
-        } else {
-            rx_bits
-        };
-
-        // Error anatomy before protection: XOR + the 32-bit-periodic
-        // class masks + popcount per word (sign/exponent/fraction
-        // positions repeat with period 32, which divides 64).
-        let mut report = TxReport {
-            payload_bits: n,
-            symbols_sent: s.symbols.len(),
-            seconds: self.cfg.airtime.burst_time(s.symbols.len()),
-            ..Default::default()
-        };
-        for (a, b) in s.tx_bits.words().iter().zip(rx_bits.words()) {
-            let e = a ^ b;
-            report.bit_errors += e.count_ones() as usize;
-            report.errors_sign += (e & SIGN_MASK_U64).count_ones() as usize;
-            report.errors_exp += (e & EXP_MASK_U64).count_ones() as usize;
-            report.errors_frac += (e & FRAC_MASK_U64).count_ones() as usize;
+        match self.cfg.scheme {
+            Scheme::Perfect => self.perfect_link().send_into(grads, out),
+            Scheme::Ecrt => self.reliable_link().send_into(grads, rng, &mut scratch.arq, out),
+            Scheme::Naive => self.naive_link().send_into(grads, rng, scratch, out),
+            Scheme::Proposed => self.proposed_link().send_into(grads, rng, scratch, out),
+            Scheme::Adaptive => self.send_policy_into(grads, rng, prev_arm, scratch, out),
         }
+    }
 
-        unpack_f32s_into(rx_bits, out);
-        protection.apply(out);
-        report.corrupted_floats = out
-            .iter()
-            .zip(grads)
-            .filter(|(a, b)| a.to_bits() != b.to_bits())
-            .count();
+    /// The `Scheme::Adaptive` delivery: sound the channel (unless the
+    /// thresholds force an arm), threshold the effective-SNR estimate
+    /// with hysteresis, and run the chosen composition. The pilot draws
+    /// from a substream, so the payload leg consumes the caller's RNG
+    /// exactly as the pure scheme would — forced-arm transmissions are
+    /// bit-identical to `Proposed` / `Ecrt` (pilot skipped entirely).
+    fn send_policy_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        prev_arm: Option<LinkArm>,
+        scratch: &mut TxScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
+        let pol = &self.cfg.adaptive;
+        let (arm, est_snr_db, pilot_seconds) = match pol.forced_arm(prev_arm) {
+            Some(arm) => (arm, None, 0.0),
+            None => {
+                let est = policy::estimate_effective_snr_db(
+                    &self.con,
+                    &self.channel,
+                    pol.pilot_symbols,
+                    rng,
+                    scratch,
+                );
+                (
+                    pol.decide(prev_arm, est),
+                    Some(est),
+                    self.cfg.airtime.pilot_time(pol.pilot_symbols),
+                )
+            }
+        };
+        let mut report = match arm {
+            LinkArm::Approx => self.proposed_link().send_into(grads, rng, scratch, out),
+            LinkArm::Fallback => {
+                self.reliable_link().send_into(grads, rng, &mut scratch.arq, out)
+            }
+        };
+        report.seconds += pilot_seconds;
+        report.policy = Some(PolicyReport {
+            arm,
+            est_snr_db,
+            switched: prev_arm.is_some_and(|p| p != arm),
+            pilot_seconds,
+        });
         report
+    }
+
+    /// The genie composition.
+    fn perfect_link(&self) -> pipeline::PerfectLink<'_> {
+        pipeline::PerfectLink { con: &self.con, airtime: &self.cfg.airtime }
+    }
+
+    /// The coded composition (ECRT scheme / adaptive fallback arm).
+    fn reliable_link(&self) -> pipeline::ReliableLink<'_> {
+        pipeline::ReliableLink {
+            con: &self.con,
+            channel: &self.channel,
+            arq: &self.cfg.arq,
+            airtime: &self.cfg.airtime,
+        }
+    }
+
+    /// The unprotected erroneous composition (`Naive`).
+    fn naive_link(&self) -> pipeline::ErroneousLink<'_> {
+        pipeline::ErroneousLink {
+            con: &self.con,
+            channel: &self.channel,
+            imap: None,
+            protection: BitProtection::none(),
+            interleave_spread: 0,
+            airtime: &self.cfg.airtime,
+        }
+    }
+
+    /// The paper's protected composition (`Proposed` / adaptive approx
+    /// arm): interleave (or importance-map) + receiver-side protection.
+    fn proposed_link(&self) -> pipeline::ErroneousLink<'_> {
+        pipeline::ErroneousLink {
+            con: &self.con,
+            channel: &self.channel,
+            imap: self.imap.as_ref(),
+            protection: self.cfg.protection,
+            interleave_spread: self.cfg.interleave_spread,
+            airtime: &self.cfg.airtime,
+        }
     }
 }
 
@@ -613,6 +623,108 @@ mod tests {
                 assert_eq!(s1.corrupted_floats, s2.corrupted_floats);
             }
         }
+    }
+
+    #[test]
+    fn pipeline_composition_matches_legacy_monolith() {
+        // The refactor pin: the stage pipeline must reproduce the
+        // pre-pipeline monolithic chain bit-for-bit. The legacy chain is
+        // rebuilt here from the unchanged primitives (pack -> interleave
+        // -> modulate -> channel -> demod -> deinterleave -> protect) and
+        // compared against the Transport output, for both RNG versions.
+        use crate::bits::unpack_f32s;
+        use crate::rng::RngVersion;
+        let root = Rng::new(77);
+        let g = grads(&mut root.substream("g", 0, 0), 3000);
+        let con = Constellation::new(Modulation::Qpsk);
+        for (vi, version) in RngVersion::ALL.into_iter().enumerate() {
+            for scheme in [Scheme::Naive, Scheme::Proposed] {
+                let mut c = cfg(scheme, 10.0);
+                c.channel.rng_version = version;
+                let t = Transport::new(c);
+                let mut r1 = root.substream("chan", vi as u64, 0);
+                let mut r2 = r1.clone();
+                let (out, rep) = t.send(&g, &mut r1);
+
+                let bits = crate::bits::pack_f32s(&g);
+                let spread = if scheme == Scheme::Proposed { c.interleave_spread } else { 0 };
+                let il = BlockInterleaver::for_len(bits.len(), spread.max(1));
+                let air =
+                    if spread > 0 { il.interleave(&bits) } else { bits.clone() };
+                let syms = con.modulate(&air);
+                let ch = Channel::new(c.channel);
+                let mut eq = Vec::new();
+                let mut cs = ChannelScratch::new();
+                ch.transmit_into(&syms, &mut r2, &mut cs, &mut eq);
+                let rx_air = con.demodulate(&eq, air.len());
+                let rx_bits = if spread > 0 {
+                    il.deinterleave(&rx_air, bits.len())
+                } else {
+                    let mut rb = rx_air;
+                    rb.truncate(bits.len());
+                    rb
+                };
+                let mut expect = unpack_f32s(&rx_bits);
+                let protection = if scheme == Scheme::Proposed {
+                    c.protection
+                } else {
+                    BitProtection::none()
+                };
+                protection.apply(&mut expect);
+
+                let bitsof = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bitsof(&out), bitsof(&expect), "{scheme:?} {version:?}");
+                assert_eq!(rep.bit_errors, rx_bits.hamming(&bits), "{scheme:?} {version:?}");
+                assert_eq!(rep.symbols_sent, syms.len());
+                assert_eq!(rep.payload_bits, bits.len());
+                // Both consumed the stream identically.
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{scheme:?} {version:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_picks_approx_on_good_channels() {
+        // High SNR (AWGN: the CSI estimate equals the configured SNR
+        // exactly): the estimate clears the enter threshold, the approx
+        // arm runs, and the policy outcome rides the report.
+        let mut rng = Rng::new(50);
+        let g = grads(&mut rng, 2000);
+        let mut c = cfg(Scheme::Adaptive, 40.0);
+        c.channel.fading = Fading::None;
+        let t = Transport::new(c);
+        let (out, rep) = t.send(&g, &mut rng);
+        let pol = rep.policy.expect("adaptive must report policy");
+        assert_eq!(pol.arm, LinkArm::Approx);
+        assert!(!pol.switched, "prev arm None cannot count as a switch");
+        let est = pol.est_snr_db.expect("pilot must run with finite thresholds");
+        assert!((est - 40.0).abs() < 6.0, "est {est} dB");
+        assert!(pol.pilot_seconds > 0.0);
+        assert_eq!(out, g, "40 dB approx leg is error-free");
+        assert_eq!(rep.retransmissions, 0);
+    }
+
+    #[test]
+    fn adaptive_falls_back_on_bad_channels() {
+        // Below-threshold SNR (AWGN: estimate == configured SNR): the
+        // ECRT leg delivers exactly, at FEC airtime.
+        let mut rng = Rng::new(51);
+        let g = grads(&mut rng, 600);
+        let mut c = cfg(Scheme::Adaptive, 7.0);
+        c.channel.fading = Fading::None;
+        let t = Transport::new(c);
+        let (out, rep) = t.send(&g, &mut rng);
+        let pol = rep.policy.expect("adaptive must report policy");
+        assert_eq!(pol.arm, LinkArm::Fallback);
+        assert!(pol.est_snr_db.unwrap() < 9.0, "{:?}", pol.est_snr_db);
+        assert_eq!(out, g, "fallback arm must deliver exactly");
+        assert_eq!(rep.bit_errors, 0);
+        // Fallback airtime is the coded one: >= ~2x the uncoded burst.
+        let mut cn = cfg(Scheme::Naive, 7.0);
+        cn.channel.fading = Fading::None;
+        let naive = Transport::new(cn);
+        let (_, rn) = naive.send(&g, &mut rng);
+        assert!(rep.seconds > 1.9 * rn.seconds, "{} vs {}", rep.seconds, rn.seconds);
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! The composable link-layer pipeline: explicit TX/RX stages plus the
+//! three link compositions every uplink scheme is built from.
+//!
+//! The stage graph of a delivery is
+//!
+//! ```text
+//! frame/pack -> protect+interleave -> modulate -> channel leg
+//!     -> demod/LLR -> decode -> deinterleave/unmap -> unpack+clamp
+//! ```
+//!
+//! and each scheme is a *composition* over it:
+//!
+//! * [`PerfectLink`] — frame only; genie delivery charged the uncoded
+//!   airtime (no channel stages run).
+//! * [`ReliableLink`] — frame -> CRC -> {LDPC encode -> modulate ->
+//!   channel -> LLR/demod -> decode} under stop-and-wait ARQ (the coded
+//!   stages live in [`crate::fec::arq`], sharing its [`ArqScratch`]) ->
+//!   unpack. Exact delivery.
+//! * [`ErroneousLink`] — frame -> (importance map | interleave) ->
+//!   modulate -> channel -> hard demod -> (deinterleave | unmap) ->
+//!   error anatomy -> unpack + receiver-side protection. One uncoded
+//!   burst, erroneous delivery. `Naive` and `Proposed` are the same
+//!   composition with different protection parameters, and the adaptive
+//!   policy's approximate arm reuses it unchanged.
+//!
+//! Every stage writes into the shared [`TxScratch`] workspace, so a
+//! composition makes **zero steady-state heap allocations**, and no
+//! stage owns an RNG — the channel leg consumes the caller's stream
+//! exactly as the pre-pipeline monolith did (the draw-for-draw contract
+//! `tests/adaptive_it.rs` pins).
+
+use crate::bits::{
+    pack_f32s, pack_f32s_into, unpack_f32s_into, BitProtection, BitVec,
+    BlockInterleaver, EXP_MASK_U64, FRAC_MASK_U64, SIGN_MASK_U64,
+};
+use crate::channel::Channel;
+use crate::fec::{self, ArqConfig, ArqScratch};
+use crate::modem::Constellation;
+use crate::rng::Rng;
+use crate::timing::AirtimeModel;
+
+use super::mapping::ImportanceMap;
+use super::{TxReport, TxScratch};
+
+/// Interleaver stage setup: fetch the cached permutation tables for this
+/// payload shape, rebuilding them only when `(payload bits, spread)`
+/// changed since the last transmission through this scratch.
+pub fn cached_interleaver(
+    slot: &mut Option<(usize, usize, BlockInterleaver)>,
+    n: usize,
+    spread: usize,
+) -> &BlockInterleaver {
+    let stale = !matches!(slot, Some((cn, cs, _)) if *cn == n && *cs == spread);
+    if stale {
+        *slot = Some((n, spread, BlockInterleaver::for_len(n, spread)));
+    }
+    &slot.as_ref().unwrap().2
+}
+
+/// Error-anatomy stage: classify pre-protection channel errors into
+/// sign / exponent / fraction wire positions. Word-parallel — XOR plus
+/// the 32-bit-periodic class masks and a popcount per 64-bit word
+/// (the float layout repeats with period 32, which divides 64).
+pub fn error_anatomy(tx: &BitVec, rx: &BitVec, report: &mut TxReport) {
+    for (a, b) in tx.words().iter().zip(rx.words()) {
+        let e = a ^ b;
+        report.bit_errors += e.count_ones() as usize;
+        report.errors_sign += (e & SIGN_MASK_U64).count_ones() as usize;
+        report.errors_exp += (e & EXP_MASK_U64).count_ones() as usize;
+        report.errors_frac += (e & FRAC_MASK_U64).count_ones() as usize;
+    }
+}
+
+/// Terminal unpack+clamp stage: IEEE-754 unpack into the caller's
+/// buffer, apply receiver-side protection, and count floats still
+/// corrupted relative to the transmitted payload.
+pub fn deliver(
+    rx_bits: &BitVec,
+    protection: BitProtection,
+    tx: &[f32],
+    out: &mut Vec<f32>,
+) -> usize {
+    unpack_f32s_into(rx_bits, out);
+    protection.apply(out);
+    out.iter().zip(tx).filter(|(a, b)| a.to_bits() != b.to_bits()).count()
+}
+
+/// Genie composition: exact delivery charged the uncoded airtime (the
+/// accuracy upper bound of Fig. 3).
+pub struct PerfectLink<'a> {
+    pub con: &'a Constellation,
+    pub airtime: &'a AirtimeModel,
+}
+
+impl PerfectLink<'_> {
+    pub fn send_into(&self, grads: &[f32], out: &mut Vec<f32>) -> TxReport {
+        out.clear();
+        out.extend_from_slice(grads);
+        let payload_bits = grads.len() * 32;
+        let symbols = payload_bits.div_ceil(self.con.modulation.bits_per_symbol());
+        TxReport {
+            seconds: self.airtime.burst_time(symbols),
+            payload_bits,
+            symbols_sent: symbols,
+            ..Default::default()
+        }
+    }
+}
+
+/// Coded composition (the ECRT scheme and the adaptive policy's
+/// fallback arm): CRC framing over the packed payload, then the
+/// LDPC-coded stages under stop-and-wait ARQ.
+pub struct ReliableLink<'a> {
+    pub con: &'a Constellation,
+    pub channel: &'a Channel,
+    pub arq: &'a ArqConfig,
+    pub airtime: &'a AirtimeModel,
+}
+
+impl ReliableLink<'_> {
+    pub fn send_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        scratch: &mut ArqScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
+        // Stage: frame/pack + CRC. (The framing BitVecs still allocate —
+        // ECRT is the exactness baseline, not the streaming-scale arm.)
+        let bits = pack_f32s(grads);
+        let framed = fec::crc::append_crc(&bits);
+        // Stages: LDPC encode -> modulate -> channel -> demod/LLR ->
+        // decode, looped per codeword by the ARQ engine over the shared
+        // scratch.
+        let (delivered, stats) = fec::arq::transmit_reliable_with(
+            &framed, self.con, self.channel, rng, self.arq, scratch,
+        );
+        let (payload, crc_ok) = fec::crc::check_crc(&delivered);
+        // With the retry budget of the paper configurations the CRC always
+        // passes; a residual failure falls back to the corrupted payload
+        // (and is visible in the report).
+        let rx_bits = if crc_ok { payload } else { delivered.slice(0, bits.len()) };
+        // Stage: unpack (no receiver-side protection — delivery is exact
+        // unless the retry budget exhausted).
+        unpack_f32s_into(&rx_bits, out);
+        TxReport {
+            seconds: self.airtime.ecrt_time(&stats),
+            payload_bits: bits.len(),
+            symbols_sent: stats.symbols_sent,
+            bit_errors: rx_bits.hamming(&bits),
+            retransmissions: stats.retransmissions(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Uncoded erroneous composition (`Naive`, `Proposed`, and the adaptive
+/// policy's approximate arm — they differ only in the protection
+/// parameters below). Zero steady-state allocation via [`TxScratch`].
+pub struct ErroneousLink<'a> {
+    pub con: &'a Constellation,
+    pub channel: &'a Channel,
+    /// Importance-aware slot mapping (mutually exclusive with
+    /// interleaving; see [`super::mapping`]).
+    pub imap: Option<&'a ImportanceMap>,
+    /// Receiver-side bit protection (`BitProtection::none()` = Naive).
+    pub protection: BitProtection,
+    /// Block-interleaver spread; 0 disables the interleave stages.
+    pub interleave_spread: usize,
+    pub airtime: &'a AirtimeModel,
+}
+
+impl ErroneousLink<'_> {
+    pub fn send_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        s: &mut TxScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
+        // Stage: frame/pack.
+        pack_f32s_into(grads, &mut s.tx_bits);
+        let n = s.tx_bits.len();
+
+        // Stage: TX protection mapping — importance map or interleave
+        // (each writes into its scratch buffer; nothing allocates once
+        // the scratch has seen this payload shape).
+        let wire_bits: &BitVec = if let Some(map) = self.imap {
+            map.apply_into(&s.tx_bits, &mut s.mapped);
+            &s.mapped
+        } else {
+            &s.tx_bits
+        };
+        let air_bits: &BitVec = if self.interleave_spread > 0 {
+            let il = cached_interleaver(&mut s.interleaver, n, self.interleave_spread);
+            il.interleave_into(wire_bits, &mut s.air);
+            &s.air
+        } else {
+            wire_bits
+        };
+
+        // Stage: modulate.
+        self.con.modulate_into(air_bits, &mut s.symbols);
+
+        // Stage: channel leg. Version dispatch lives in the channel:
+        // V1 = seed-compatible scalar loop, V2Batched = the block
+        // channel-noise engine (see `crate::channel`).
+        self.channel.transmit_into(&s.symbols, rng, &mut s.chan, &mut s.eq);
+
+        // Stage: hard demod (the soft LLR variant of this stage lives on
+        // the reliable link's min-sum decoder).
+        self.con.demodulate_into(&s.eq, air_bits.len(), &mut s.rx_air);
+
+        // Stage: RX inverse mapping — deinterleave, then unmap.
+        let rx_bits: &BitVec = if self.interleave_spread > 0 {
+            let il = &s.interleaver.as_ref().unwrap().2;
+            il.deinterleave_into(&s.rx_air, n, &mut s.rx_bits);
+            &s.rx_bits
+        } else {
+            s.rx_air.truncate(n);
+            &s.rx_air
+        };
+        let rx_bits: &BitVec = if let Some(map) = self.imap {
+            map.invert_into(rx_bits, &mut s.mapped);
+            &s.mapped
+        } else {
+            rx_bits
+        };
+
+        // Stage: error anatomy (pre-protection damage classification).
+        let mut report = TxReport {
+            payload_bits: n,
+            symbols_sent: s.symbols.len(),
+            seconds: self.airtime.burst_time(s.symbols.len()),
+            ..Default::default()
+        };
+        error_anatomy(&s.tx_bits, rx_bits, &mut report);
+
+        // Stage: unpack + receiver-side protection.
+        report.corrupted_floats = deliver(rx_bits, self.protection, grads, out);
+        report
+    }
+}

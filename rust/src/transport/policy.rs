@@ -1,0 +1,269 @@
+//! CSI-driven adaptive scheme selection — the policy layer on top of the
+//! link pipeline (see [`crate::transport::pipeline`]).
+//!
+//! The paper's premise is that the approximate scheme "simply delivers
+//! gradients with errors **when the channel quality is satisfactory**".
+//! [`AdaptiveConfig`] makes that an explicit, configurable policy: before
+//! each transmission the sender sounds the channel with a short pilot run
+//! ([`estimate_effective_snr_db`]), summarizes the receiver-known CSI
+//! into an effective SNR, and thresholds it with hysteresis to pick an
+//! uplink arm —
+//!
+//! * [`LinkArm::Approx`] — the Proposed approximate leg (interleave +
+//!   bit protection, no FEC / no ReTX);
+//! * [`LinkArm::Fallback`] — the ECRT leg (LDPC-1/2 + ARQ, exact).
+//!
+//! # Hysteresis
+//!
+//! Two thresholds, `exit_snr_db <= enter_snr_db`, keyed on the client's
+//! previous arm: a client on the fallback arm moves to approx only when
+//! the estimate reaches `enter_snr_db`; a client already on approx stays
+//! there until the estimate drops below `exit_snr_db`. The dead band
+//! suppresses arm-flapping when the channel hovers near one threshold.
+//! Per-client state ([`PolicyState`]) is owned by the caller (the FL
+//! coordinator keeps one per client), which is what keeps transmissions
+//! re-entrant and traces bit-deterministic under any worker count.
+//!
+//! # Forced arms and RNG determinism
+//!
+//! An infinite threshold makes the decision independent of any possible
+//! estimate ([`AdaptiveConfig::forced_arm`]); the transport then skips
+//! the pilot entirely, so a forced-approx adaptive transmission consumes
+//! the RNG stream — and produces outputs — **bit-identically** to
+//! `Scheme::Proposed`, and forced-fallback to `Scheme::Ecrt` (pinned by
+//! `tests/adaptive_it.rs`). When the pilot does run, it draws from a
+//! *derived* substream (`rng.substream("pilot", ..)`), never from the
+//! payload stream, so the payload leg's realization is unaffected by the
+//! sounding. Pilot and payload therefore see independent channel
+//! realizations — the pilot slot precedes the payload burst and fading
+//! coherence across that boundary is not modeled.
+
+use crate::channel::Channel;
+use crate::modem::Constellation;
+use crate::rng::Rng;
+pub use crate::timing::LinkArm;
+
+use super::TxScratch;
+
+/// Thresholds + sounding length of the CSI-adaptive policy.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Effective-SNR (dB) at or above which a client *enters* the
+    /// approximate arm. `-inf` (with `exit_snr_db = -inf`, which the
+    /// `exit <= enter` validation then requires) forces approx; `+inf`
+    /// (with `exit_snr_db = +inf`) forces fallback.
+    pub enter_snr_db: f64,
+    /// Effective-SNR (dB) below which a client on the approximate arm
+    /// *exits* to the fallback arm. Must satisfy
+    /// `exit_snr_db <= enter_snr_db`.
+    pub exit_snr_db: f64,
+    /// Pilot symbols sounded per transmission (ignored when the arm is
+    /// forced).
+    pub pilot_symbols: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        // Enter where the proposed scheme's accuracy is near-perfect in
+        // Fig. 3 (>= ~9 dB Rayleigh); a 2 dB dead band absorbs estimate
+        // noise; 64 pilots cost < 0.01% of a model upload's airtime.
+        AdaptiveConfig { enter_snr_db: 9.0, exit_snr_db: 7.0, pilot_symbols: 64 }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Forced mode: every transmission takes the approximate leg and the
+    /// pilot is skipped — bit-identical to `Scheme::Proposed`.
+    pub fn always_approx() -> Self {
+        AdaptiveConfig {
+            enter_snr_db: f64::NEG_INFINITY,
+            exit_snr_db: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Forced mode: every transmission takes the ECRT fallback leg and
+    /// the pilot is skipped — bit-identical to `Scheme::Ecrt`.
+    pub fn always_fallback() -> Self {
+        AdaptiveConfig {
+            enter_snr_db: f64::INFINITY,
+            exit_snr_db: f64::INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// The hysteresis decision for a finite estimate, given the client's
+    /// previous arm (`None` = first transmission, treated as fallback:
+    /// the client must *earn* the approximate arm).
+    pub fn decide(&self, prev: Option<LinkArm>, est_snr_db: f64) -> LinkArm {
+        match prev {
+            Some(LinkArm::Approx) => {
+                if est_snr_db < self.exit_snr_db {
+                    LinkArm::Fallback
+                } else {
+                    LinkArm::Approx
+                }
+            }
+            _ => {
+                if est_snr_db >= self.enter_snr_db {
+                    LinkArm::Approx
+                } else {
+                    LinkArm::Fallback
+                }
+            }
+        }
+    }
+
+    /// The arm this state would take regardless of any finite estimate,
+    /// if the relevant threshold is infinite — the pilot short-circuit
+    /// behind the forced-mode equivalence pins.
+    pub fn forced_arm(&self, prev: Option<LinkArm>) -> Option<LinkArm> {
+        let relevant = match prev {
+            Some(LinkArm::Approx) => self.exit_snr_db,
+            _ => self.enter_snr_db,
+        };
+        relevant.is_infinite().then(|| self.decide(prev, 0.0))
+    }
+
+    /// Threshold sanity: NaN or an inverted dead band is a config error.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.exit_snr_db <= self.enter_snr_db) {
+            return Err(format!(
+                "adaptive thresholds need exit <= enter, got exit {} / enter {}",
+                self.exit_snr_db, self.enter_snr_db
+            ));
+        }
+        if self.pilot_symbols == 0 {
+            return Err("adaptive_pilots must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// What the policy layer did for one transmission — carried on
+/// `TxReport` so arm choices, estimates, and pilot overhead flow through
+/// the coordinator's delivery ring into trace rows and metrics.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyReport {
+    /// The uplink leg this transmission took.
+    pub arm: LinkArm,
+    /// Pilot-estimated effective SNR in dB (`None` when the arm was
+    /// forced and the pilot skipped).
+    pub est_snr_db: Option<f64>,
+    /// Whether the arm differs from the client's previous one.
+    pub switched: bool,
+    /// Airtime spent sounding, seconds (already included in the
+    /// report's total `seconds`; charged to the chosen arm).
+    pub pilot_seconds: f64,
+}
+
+/// Per-client policy memory, owned by the caller (one per client in the
+/// FL coordinator). Feeding each transmission's [`PolicyReport`] back
+/// via [`PolicyState::observe`] is what gives the hysteresis its memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyState {
+    /// Arm of the most recent transmission (`None` before the first).
+    pub arm: Option<LinkArm>,
+    /// Total arm switches observed.
+    pub switches: u64,
+}
+
+impl PolicyState {
+    /// Fold one transmission's outcome into the state.
+    pub fn observe(&mut self, rep: &PolicyReport) {
+        if rep.switched {
+            self.switches += 1;
+        }
+        self.arm = Some(rep.arm);
+    }
+}
+
+/// Pilot-based effective-SNR estimate: modulate `pilots` known symbols
+/// ([`Constellation::pilot_symbol`]), push them through the channel's
+/// CSI-reporting leg on a substream derived from `rng` (the payload
+/// stream is never advanced), and summarize the receiver-known `|c|^2`
+/// via [`Channel::csi_effective_snr_db`]. Zero steady-state allocation:
+/// the pilot buffers live in [`TxScratch`].
+pub fn estimate_effective_snr_db(
+    con: &Constellation,
+    channel: &Channel,
+    pilots: usize,
+    rng: &Rng,
+    s: &mut TxScratch,
+) -> f64 {
+    let mut prng = rng.substream("pilot", pilots as u64, 0);
+    s.pilot_syms.clear();
+    s.pilot_syms.resize(pilots, con.pilot_symbol());
+    channel.transmit_csi_into(
+        &s.pilot_syms,
+        &mut prng,
+        &mut s.chan,
+        &mut s.pilot_eq,
+        &mut s.pilot_csi,
+    );
+    channel.csi_effective_snr_db(&s.pilot_csi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hysteresis_has_memory() {
+        let p = AdaptiveConfig { enter_snr_db: 10.0, exit_snr_db: 8.0, pilot_symbols: 16 };
+        // Fresh clients must earn the approximate arm.
+        assert_eq!(p.decide(None, 9.0), LinkArm::Fallback);
+        assert_eq!(p.decide(None, 10.0), LinkArm::Approx);
+        // Inside the dead band the previous arm wins.
+        assert_eq!(p.decide(Some(LinkArm::Approx), 9.0), LinkArm::Approx);
+        assert_eq!(p.decide(Some(LinkArm::Fallback), 9.0), LinkArm::Fallback);
+        // Outside it, both directions switch.
+        assert_eq!(p.decide(Some(LinkArm::Approx), 7.9), LinkArm::Fallback);
+        assert_eq!(p.decide(Some(LinkArm::Fallback), 10.1), LinkArm::Approx);
+    }
+
+    #[test]
+    fn forced_modes_short_circuit_every_state() {
+        for prev in [None, Some(LinkArm::Approx), Some(LinkArm::Fallback)] {
+            assert_eq!(AdaptiveConfig::always_approx().forced_arm(prev), Some(LinkArm::Approx));
+            assert_eq!(
+                AdaptiveConfig::always_fallback().forced_arm(prev),
+                Some(LinkArm::Fallback)
+            );
+        }
+        // Finite thresholds never short-circuit.
+        let p = AdaptiveConfig::default();
+        assert_eq!(p.forced_arm(None), None);
+        assert_eq!(p.forced_arm(Some(LinkArm::Approx)), None);
+    }
+
+    #[test]
+    fn validation_rejects_inverted_band_and_nan() {
+        assert!(AdaptiveConfig::default().validate().is_ok());
+        assert!(AdaptiveConfig::always_approx().validate().is_ok());
+        assert!(AdaptiveConfig::always_fallback().validate().is_ok());
+        let bad = AdaptiveConfig { enter_snr_db: 5.0, exit_snr_db: 9.0, pilot_symbols: 8 };
+        assert!(bad.validate().is_err());
+        let nan = AdaptiveConfig { enter_snr_db: f64::NAN, ..Default::default() };
+        assert!(nan.validate().is_err());
+        let zero = AdaptiveConfig { pilot_symbols: 0, ..Default::default() };
+        assert!(zero.validate().is_err());
+    }
+
+    #[test]
+    fn state_counts_switches() {
+        let mut st = PolicyState::default();
+        let rep = |arm, switched| PolicyReport {
+            arm,
+            est_snr_db: Some(11.0),
+            switched,
+            pilot_seconds: 0.0,
+        };
+        st.observe(&rep(LinkArm::Approx, false));
+        st.observe(&rep(LinkArm::Fallback, true));
+        st.observe(&rep(LinkArm::Fallback, false));
+        st.observe(&rep(LinkArm::Approx, true));
+        assert_eq!(st.switches, 2);
+        assert_eq!(st.arm, Some(LinkArm::Approx));
+    }
+}

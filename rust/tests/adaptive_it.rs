@@ -1,0 +1,295 @@
+//! Equivalence and behavior pins for the CSI-adaptive policy layer.
+//!
+//! The refactor contract: `Scheme::Adaptive` is a *policy over* the
+//! existing compositions, not a new chain — so with its thresholds
+//! forced (infinite, pilot skipped) it must be **bit-identical** to the
+//! pure scheme of the chosen arm, for every fading scenario and both
+//! RNG versions. With finite thresholds it must actually switch arms
+//! under a Gilbert–Elliott burst trace, and its policy observables must
+//! flow through the FL coordinator into trace rows deterministically
+//! under any worker count.
+
+use awc_fl::channel::Fading;
+use awc_fl::config::ExperimentConfig;
+use awc_fl::coordinator::FlServer;
+use awc_fl::metrics::Trace;
+use awc_fl::model::Manifest;
+use awc_fl::rng::{Rng, RngVersion};
+use awc_fl::runtime::Engine;
+use awc_fl::transport::{
+    AdaptiveConfig, LinkArm, PolicyState, Scheme, Transport, TransportConfig, TxReport,
+};
+
+fn grads(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect()
+}
+
+/// Transport config for `(scheme, fading, version)` derived the same way
+/// the coordinator derives it (so the pins cover the real plumbing).
+fn tcfg(scheme: Scheme, fading: Fading, version: RngVersion) -> TransportConfig {
+    let cfg = ExperimentConfig {
+        scheme,
+        fading,
+        snr_db: 14.0,
+        rng_version: version,
+        fade_block_symbols: 324,
+        // Bound the fallback leg's worst case (deep scenario fades can
+        // exhaust the ARQ budget; both legs must still be bit-equal).
+        max_attempts: 8,
+        ..ExperimentConfig::default()
+    };
+    cfg.transport()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_reports_equal(a: &TxReport, b: &TxReport, label: &str) {
+    assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{label} seconds");
+    assert_eq!(a.payload_bits, b.payload_bits, "{label} payload_bits");
+    assert_eq!(a.symbols_sent, b.symbols_sent, "{label} symbols");
+    assert_eq!(a.bit_errors, b.bit_errors, "{label} bit_errors");
+    assert_eq!(a.errors_sign, b.errors_sign, "{label} errors_sign");
+    assert_eq!(a.errors_exp, b.errors_exp, "{label} errors_exp");
+    assert_eq!(a.errors_frac, b.errors_frac, "{label} errors_frac");
+    assert_eq!(a.corrupted_floats, b.corrupted_floats, "{label} corrupted");
+    assert_eq!(a.retransmissions, b.retransmissions, "{label} retx");
+}
+
+/// Forced-arm pin shared by both directions: `Adaptive` with `forced`
+/// thresholds vs the pure `reference` scheme, every fading x version.
+fn pin_forced(forced: AdaptiveConfig, arm: LinkArm, reference: Scheme, n_floats: usize) {
+    let root = Rng::new(0xAD_A91);
+    let g = grads(&mut root.substream("g", 0, 0), n_floats);
+    for (vi, version) in RngVersion::ALL.into_iter().enumerate() {
+        for (fi, fading) in Fading::ALL.into_iter().enumerate() {
+            let label = format!("{reference:?} {fading:?} {version:?}");
+            let mut ac = tcfg(Scheme::Adaptive, fading, version);
+            ac.adaptive = forced;
+            let adaptive = Transport::new(ac);
+            let pure = Transport::new(tcfg(reference, fading, version));
+            // Same stream for both transports; prev-arm states must not
+            // matter when the arm is forced.
+            for prev in [None, Some(LinkArm::Approx), Some(LinkArm::Fallback)] {
+                let mut r1 = root.substream("chan", (vi * 16 + fi) as u64, 0);
+                let mut r2 = r1.clone();
+                let mut scratch1 = awc_fl::transport::TxScratch::new();
+                let mut scratch2 = awc_fl::transport::TxScratch::new();
+                let mut o1 = Vec::new();
+                let mut o2 = Vec::new();
+                let ra =
+                    adaptive.send_adaptive_into(&g, &mut r1, prev, &mut scratch1, &mut o1);
+                let rp = pure.send_into(&g, &mut r2, &mut scratch2, &mut o2);
+                assert_eq!(bits(&o1), bits(&o2), "{label} prev={prev:?} floats");
+                assert_reports_equal(&ra, &rp, &label);
+                // The streams must end in the same place: the forced
+                // policy consumed no extra draws (pilot skipped).
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{label} stream diverged");
+                // And the policy outcome is reported, with no sounding.
+                let pol = ra.policy.expect("forced adaptive still reports policy");
+                assert_eq!(pol.arm, arm, "{label}");
+                assert_eq!(pol.est_snr_db, None, "{label} pilot must be skipped");
+                assert_eq!(pol.pilot_seconds, 0.0, "{label}");
+                assert_eq!(
+                    pol.switched,
+                    prev.is_some() && prev != Some(arm),
+                    "{label} prev={prev:?}"
+                );
+                assert!(rp.policy.is_none(), "{label}: pure schemes carry no policy");
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_approx_is_bit_identical_to_proposed() {
+    pin_forced(AdaptiveConfig::always_approx(), LinkArm::Approx, Scheme::Proposed, 1200);
+}
+
+#[test]
+fn forced_fallback_is_bit_identical_to_ecrt() {
+    pin_forced(AdaptiveConfig::always_fallback(), LinkArm::Fallback, Scheme::Ecrt, 300);
+}
+
+/// A strongly bimodal Gilbert–Elliott regime: ~50% stationary bad
+/// fraction, mean burst ~50 symbols, bad state ~14 dB below good — the
+/// pilot window (32 symbols) mostly lands in one state, so estimates
+/// separate cleanly around the thresholds.
+fn bursty_ge(scheme: Scheme) -> ExperimentConfig {
+    ExperimentConfig {
+        scheme,
+        fading: Fading::GilbertElliott,
+        snr_db: 10.0,
+        ge_p_g2b: 0.02,
+        ge_p_b2g: 0.02,
+        ge_bad_db: -14.0,
+        adaptive_enter_db: 10.0,
+        adaptive_exit_db: 5.0,
+        adaptive_pilots: 32,
+        // Bad-burst codewords can exhaust the budget — keep the
+        // fallback leg cheap; exactness is not what this test pins.
+        max_attempts: 4,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn adaptive_switches_arms_under_ge_bursts() {
+    let cfg = bursty_ge(Scheme::Adaptive);
+    let t = Transport::new(cfg.transport());
+    let root = Rng::new(0x6E);
+    let g = grads(&mut root.substream("g", 0, 0), 400);
+    let mut scratch = awc_fl::transport::TxScratch::new();
+    let mut rx = Vec::new();
+    let mut state = PolicyState::default();
+    let (mut approx, mut fallback) = (0usize, 0usize);
+    for i in 0..60u64 {
+        let mut rng = root.substream("chan", i, 0);
+        let rep = t.send_adaptive_into(&g, &mut rng, state.arm, &mut scratch, &mut rx);
+        let pol = rep.policy.expect("adaptive reports policy");
+        let est = pol.est_snr_db.expect("finite thresholds must sound");
+        assert!(est.is_finite(), "pass {i}: est {est}");
+        assert!(pol.pilot_seconds > 0.0);
+        match pol.arm {
+            LinkArm::Approx => approx += 1,
+            LinkArm::Fallback => fallback += 1,
+        }
+        state.observe(&pol);
+    }
+    // Bimodal estimates around the thresholds: both arms must occur and
+    // the hysteresis must actually switch along the burst trace.
+    assert!(approx >= 3, "approx arm too rare: {approx}/60");
+    assert!(fallback >= 3, "fallback arm too rare: {fallback}/60");
+    assert!(state.switches >= 2, "no arm switching: {}", state.switches);
+    assert!(
+        state.switches < 60,
+        "hysteresis should damp flapping: {} switches",
+        state.switches
+    );
+}
+
+fn small_engine() -> Engine {
+    let man = Manifest::parse(
+        "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+         param w1 64,30\nparam b1 64\nparam w2 64,20\nparam b2 10\n\
+         artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+    )
+    .unwrap();
+    Engine::synthetic_with(man, 0xADA)
+}
+
+fn run_adaptive_fl(workers: usize) -> (Trace, Vec<u32>, Vec<PolicyState>) {
+    let engine = small_engine();
+    let cfg = ExperimentConfig {
+        clients: 6,
+        participants_per_round: 6,
+        train_n: 600,
+        test_n: 100,
+        rounds: 3,
+        eval_every: 0,
+        lr: 0.05,
+        batch: 8,
+        parallel_clients: workers,
+        ..bursty_ge(Scheme::Adaptive)
+    };
+    let mut server = FlServer::from_config(cfg, &engine).unwrap();
+    let trace = server.run(false).unwrap();
+    let params = server.params().flatten().iter().map(|x| x.to_bits()).collect();
+    let states = server.policy_states().to_vec();
+    (trace, params, states)
+}
+
+#[test]
+fn adaptive_fl_rounds_are_worker_invariant_with_policy_in_trace() {
+    let (t1, p1, s1) = run_adaptive_fl(1);
+    for workers in [2, 4] {
+        let (t2, p2, s2) = run_adaptive_fl(workers);
+        assert_eq!(p1, p2, "workers={workers}: global model diverged");
+        assert_eq!(t1.rounds.len(), t2.rounds.len());
+        for (a, b) in t1.rounds.iter().zip(&t2.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.comm_time_s.to_bits(), b.comm_time_s.to_bits());
+            // The policy observables are part of the determinism
+            // contract too.
+            assert_eq!(a.approx_frac.to_bits(), b.approx_frac.to_bits());
+            assert_eq!(a.policy_switches, b.policy_switches);
+            assert_eq!(
+                a.mean_est_snr_db.map(f64::to_bits),
+                b.mean_est_snr_db.map(f64::to_bits)
+            );
+            assert_eq!(a.approx_time_s.to_bits(), b.approx_time_s.to_bits());
+            assert_eq!(a.fallback_time_s.to_bits(), b.fallback_time_s.to_bits());
+        }
+        for (a, b) in s1.iter().zip(&s2) {
+            assert_eq!(a.arm, b.arm, "workers={workers}: policy state diverged");
+            assert_eq!(a.switches, b.switches);
+        }
+    }
+    // The policy actually ran: every pass is classified, estimates are
+    // visible in the trace, and per-arm airtime splits the round time.
+    for r in &t1.rounds {
+        assert!((0.0..=1.0).contains(&r.approx_frac));
+        assert!(r.mean_est_snr_db.is_some(), "finite thresholds must sound");
+        assert!(r.approx_time_s + r.fallback_time_s > 0.0);
+    }
+    // Under this burst regime both arms occur across the experiment
+    // (P[all 18 passes same arm] ~ 2^-18 for this seed structure).
+    let any_approx = t1.rounds.iter().any(|r| r.approx_frac > 0.0);
+    let any_fallback = t1.rounds.iter().any(|r| r.approx_frac < 1.0);
+    assert!(any_approx, "no pass ever took the approximate arm");
+    assert!(any_fallback, "no pass ever took the fallback arm");
+    // Trace CSV rows carry the policy columns.
+    let csv = t1.csv_rows();
+    let ncols = awc_fl::metrics::CSV_HEADER.trim().split(',').count();
+    for line in csv.lines() {
+        assert_eq!(line.split(',').count(), ncols, "{line}");
+    }
+}
+
+#[test]
+fn adaptive_with_pure_arms_matches_fixed_schemes_in_fl() {
+    // FL-level forced-arm pin: an all-approx adaptive federation is
+    // bit-identical to a Proposed one (same trace core fields, same
+    // model), modulo the policy columns themselves.
+    let engine = small_engine();
+    let run = |scheme: Scheme, forced: Option<(f64, f64)>| {
+        let mut cfg = ExperimentConfig {
+            clients: 5,
+            participants_per_round: 5,
+            train_n: 500,
+            test_n: 100,
+            rounds: 2,
+            eval_every: 0,
+            lr: 0.05,
+            batch: 8,
+            parallel_clients: 2,
+            ..bursty_ge(scheme)
+        };
+        if let Some((enter, exit)) = forced {
+            cfg.adaptive_enter_db = enter;
+            cfg.adaptive_exit_db = exit;
+        }
+        let mut server = FlServer::from_config(cfg, &engine).unwrap();
+        let trace = server.run(false).unwrap();
+        let params: Vec<u32> =
+            server.params().flatten().iter().map(|x| x.to_bits()).collect();
+        (trace, params)
+    };
+    let (tp, pp) = run(Scheme::Proposed, None);
+    let (ta, pa) = run(
+        Scheme::Adaptive,
+        Some((f64::NEG_INFINITY, f64::NEG_INFINITY)),
+    );
+    assert_eq!(pp, pa, "forced-approx federation diverged from Proposed");
+    for (a, b) in tp.rounds.iter().zip(&ta.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.mean_ber.to_bits(), b.mean_ber.to_bits());
+        assert_eq!(a.comm_time_s.to_bits(), b.comm_time_s.to_bits());
+        assert_eq!(a.corrupted_frac.to_bits(), b.corrupted_frac.to_bits());
+        // The adaptive run additionally classifies every pass.
+        assert_eq!(b.approx_frac, 1.0);
+        assert_eq!(a.approx_frac, 0.0, "fixed schemes carry no policy");
+        assert!(b.mean_est_snr_db.is_none(), "forced arms never sound");
+    }
+}
