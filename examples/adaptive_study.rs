@@ -58,11 +58,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut csv =
         String::from("fading,snr_db,scheme,mse,seconds,approx_frac,switches,est_snr_db\n");
     for r in &rows {
-        let est = if r.mean_est_snr_db.is_finite() {
-            format!("{:.2}", r.mean_est_snr_db)
-        } else {
-            String::new()
-        };
+        // Unsounded cells render as an empty field — `nan` never lands
+        // in the published CSV.
+        let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
         println!(
             "{:<16} {:>6} {:<9} {:>11.4e} {:>11.5} {:>7.0}% {:>8} {:>9}",
             r.fading.name(),

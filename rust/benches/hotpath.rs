@@ -330,6 +330,38 @@ fn main() {
         });
         let tp = report_throughput("coordinator (client passes)", clients as f64, &s);
         sink.push(name, &s, Some(tp));
+
+        // Same 1024-client round under a live fault plan (20% dropout +
+        // stragglers): the degradation ladder — fault draws, skip
+        // bookkeeping, survivor renormalization — must stay in the same
+        // throughput class as the clean round (dropouts skip their
+        // passes entirely, so this record typically runs *faster*; the
+        // gate only guards against regressions in the fault machinery).
+        let mut fcfg = ExperimentConfig {
+            clients,
+            participants_per_round: clients,
+            train_n: 4096,
+            test_n: 128,
+            rounds: 1,
+            eval_every: 0,
+            batch: 8,
+            scheme: Scheme::Proposed,
+            rng_version: RngVersion::V2Batched,
+            agg_shards: 0,
+            ..ExperimentConfig::default()
+        };
+        fcfg.fault_dropout = 0.2;
+        fcfg.fault_straggle = 0.3;
+        let mut server = FlServer::from_config(fcfg, &engine).unwrap();
+        let mut round = 0usize;
+        let name = "faults: round 1024-client dropout=0.2";
+        let s = bench(name, 1, 5, || {
+            let out = server.run_round(round).unwrap();
+            black_box((out.mean_ber, out.dropped));
+            round += 1;
+        });
+        let tp = report_throughput("faults (client passes)", clients as f64, &s);
+        sink.push(name, &s, Some(tp));
     }
 
     // PJRT round-trips (needs artifacts).

@@ -27,7 +27,9 @@ const VALUE_FLAGS: &[&str] = &[
     "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
     "fading", "rician-k", "doppler", "rng-version", "agg-shards",
     "pipeline-depth", "parallel-clients", "adaptive-enter", "adaptive-exit",
-    "pilots", "payloads", "floats",
+    "pilots", "payloads", "floats", "max-retx", "deadline", "fault-dropout",
+    "fault-straggle", "fault-straggle-max", "fault-corrupt",
+    "fault-corrupt-len", "fault-poison", "quarantine", "quarantine-bound",
 ];
 
 impl Args {
@@ -138,6 +140,20 @@ mod tests {
         assert_eq!(a.opt_parse::<f64>("adaptive-enter").unwrap(), Some(11.0));
         assert_eq!(a.opt_parse::<f64>("adaptive-exit").unwrap(), Some(8.0));
         assert_eq!(a.opt_parse::<usize>("pilots").unwrap(), Some(32));
+    }
+
+    #[test]
+    fn fault_flags_take_values() {
+        let a = parse(
+            "run --fault-dropout 0.2 --fault-straggle 0.3 --deadline 2.5 \
+             --quarantine reject --quarantine-bound 1.0 --max-retx 8",
+        );
+        assert_eq!(a.opt_parse::<f64>("fault-dropout").unwrap(), Some(0.2));
+        assert_eq!(a.opt_parse::<f64>("fault-straggle").unwrap(), Some(0.3));
+        assert_eq!(a.opt_parse::<f64>("deadline").unwrap(), Some(2.5));
+        assert_eq!(a.opt("quarantine"), Some("reject"));
+        assert_eq!(a.opt_parse::<f64>("quarantine-bound").unwrap(), Some(1.0));
+        assert_eq!(a.opt_parse::<usize>("max-retx").unwrap(), Some(8));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 pub mod parser;
 
 use crate::channel::{ChannelConfig, Fading};
+use crate::faults::{FaultConfig, QuarantinePolicy};
 use crate::fec::{ArqConfig, DecoderKind};
 use crate::modem::Modulation;
 use crate::rng::RngVersion;
@@ -113,6 +114,34 @@ pub struct ExperimentConfig {
     /// parameter snapshots) overlap the following rounds' client
     /// fan-out. Results are bit-identical for any depth.
     pub pipeline_depth: usize,
+    /// Fault plan: per-round client dropout probability (0 = off).
+    pub fault_dropout: f64,
+    /// Fault plan: straggler probability — an afflicted client's modeled
+    /// round time is inflated by a factor drawn uniformly from
+    /// `[1, fault_straggle_max]`.
+    pub fault_straggle: f64,
+    /// Upper bound of the straggler inflation factor.
+    pub fault_straggle_max: f64,
+    /// Fault plan: probability a delivered payload takes a post-channel
+    /// corruption burst.
+    pub fault_corrupt: f64,
+    /// Corruption burst length in floats.
+    pub fault_corrupt_len: usize,
+    /// Fault plan: probability a corruption burst poisons with
+    /// non-finite values instead of bit flips (conditioned on corrupt).
+    pub fault_poison: f64,
+    /// Round deadline in modeled seconds; clients whose (straggle-
+    /// inflated) completion time overruns it are excluded and the
+    /// aggregate renormalized over the survivors. 0 (default) = off.
+    /// Under TDMA the budget is shared serially in selection order;
+    /// under FDMA each client gets the whole deadline.
+    pub round_deadline_s: f64,
+    /// Quarantine screen for delivered gradients (`off` | `clamp` |
+    /// `reject` — see [`crate::faults::QuarantinePolicy`]).
+    pub quarantine: QuarantinePolicy,
+    /// Magnitude bound the quarantine screens against (the paper's
+    /// gradient encoding range).
+    pub quarantine_bound: f32,
 }
 
 impl Default for ExperimentConfig {
@@ -122,6 +151,7 @@ impl Default for ExperimentConfig {
         // policy's (`AdaptiveConfig::default`).
         let ch = ChannelConfig::default();
         let ad = crate::transport::AdaptiveConfig::default();
+        let fa = FaultConfig::default();
         ExperimentConfig {
             seed: 20230519,
             clients: 100,
@@ -163,6 +193,15 @@ impl Default for ExperimentConfig {
             parallel_clients: 0,
             agg_shards: 1,
             pipeline_depth: 1,
+            fault_dropout: fa.dropout,
+            fault_straggle: fa.straggle_p,
+            fault_straggle_max: fa.straggle_max,
+            fault_corrupt: fa.corrupt_p,
+            fault_corrupt_len: fa.corrupt_len,
+            fault_poison: fa.poison_p,
+            round_deadline_s: 0.0,
+            quarantine: QuarantinePolicy::Off,
+            quarantine_bound: 1.0,
         }
     }
 }
@@ -319,6 +358,36 @@ impl ExperimentConfig {
             "pipeline_depth" | "fl.pipeline_depth" => {
                 self.pipeline_depth = v.as_u64().ok_or_else(|| bad(key, v))? as usize
             }
+            "fault_dropout" | "faults.dropout" => {
+                self.fault_dropout = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "fault_straggle" | "faults.straggle" => {
+                self.fault_straggle = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "fault_straggle_max" | "faults.straggle_max" => {
+                self.fault_straggle_max = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "fault_corrupt" | "faults.corrupt" => {
+                self.fault_corrupt = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "fault_corrupt_len" | "faults.corrupt_len" => {
+                self.fault_corrupt_len = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "fault_poison" | "faults.poison" => {
+                self.fault_poison = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "round_deadline_s" | "timing.round_deadline_s" => {
+                self.round_deadline_s = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "quarantine" | "faults.quarantine" => {
+                self.quarantine = v
+                    .as_str()
+                    .and_then(QuarantinePolicy::parse)
+                    .ok_or_else(|| bad(key, v))?
+            }
+            "quarantine_bound" | "faults.quarantine_bound" => {
+                self.quarantine_bound = v.as_f64().ok_or_else(|| bad(key, v))? as f32
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -359,16 +428,61 @@ impl ExperimentConfig {
                 return Err(Error::Config(format!("{name} {p} must be a probability")));
             }
         }
+        if self.max_attempts == 0 {
+            return Err(Error::Config(
+                "max_attempts must be >= 1 (every codeword needs one transmission)".into(),
+            ));
+        }
+        if !self.round_deadline_s.is_finite() || self.round_deadline_s < 0.0 {
+            return Err(Error::Config(format!(
+                "round_deadline_s {} must be finite and >= 0 (0 = off)",
+                self.round_deadline_s
+            )));
+        }
+        if !self.quarantine_bound.is_finite() || self.quarantine_bound <= 0.0 {
+            return Err(Error::Config(format!(
+                "quarantine_bound {} must be finite and > 0",
+                self.quarantine_bound
+            )));
+        }
+        self.faults().validate().map_err(Error::Config)?;
         self.adaptive().validate().map_err(Error::Config)?;
         Ok(())
     }
 
-    /// Derived CSI-adaptive policy config.
+    /// Derived fault-injection plan (zero-fault by default).
+    pub fn faults(&self) -> FaultConfig {
+        FaultConfig {
+            dropout: self.fault_dropout,
+            straggle_p: self.fault_straggle,
+            straggle_max: self.fault_straggle_max,
+            corrupt_p: self.fault_corrupt,
+            corrupt_len: self.fault_corrupt_len,
+            poison_p: self.fault_poison,
+        }
+    }
+
+    /// Derived CSI-adaptive policy config. A round deadline grants each
+    /// participant an equal airtime slice; the policy treats a slice its
+    /// reliable-leg floor cannot meet as deadline pressure and degrades
+    /// to the approximate arm up front.
     pub fn adaptive(&self) -> crate::transport::AdaptiveConfig {
         crate::transport::AdaptiveConfig {
             enter_snr_db: self.adaptive_enter_db,
             exit_snr_db: self.adaptive_exit_db,
             pilot_symbols: self.adaptive_pilots,
+            deadline_slice_s: if self.round_deadline_s > 0.0 {
+                match self.mux {
+                    // TDMA shares the round budget across the selection;
+                    // FDMA clients each get the whole deadline.
+                    Multiplexing::Tdma => {
+                        self.round_deadline_s / self.participants_per_round.max(1) as f64
+                    }
+                    Multiplexing::Fdma => self.round_deadline_s,
+                }
+            } else {
+                0.0
+            },
         }
     }
 
@@ -576,6 +690,72 @@ mod tests {
         // Non-numeric values are rejected.
         let o = vec![("agg_shards".to_string(), "many".to_string())];
         assert!(ExperimentConfig::load(None, &o).is_err());
+    }
+
+    #[test]
+    fn fault_keys_parse_and_validate() {
+        // Default: zero-fault plan, quarantine off, no deadline.
+        let c = ExperimentConfig::default();
+        assert!(c.faults().is_zero());
+        assert_eq!(c.quarantine, QuarantinePolicy::Off);
+        assert_eq!(c.round_deadline_s, 0.0);
+        assert_eq!(c.adaptive().deadline_slice_s, 0.0);
+        // Bare spellings.
+        let o = vec![
+            ("fault_dropout".to_string(), "0.2".to_string()),
+            ("fault_straggle".to_string(), "0.3".to_string()),
+            ("fault_straggle_max".to_string(), "6".to_string()),
+            ("fault_corrupt".to_string(), "0.1".to_string()),
+            ("fault_corrupt_len".to_string(), "32".to_string()),
+            ("fault_poison".to_string(), "0.5".to_string()),
+            ("round_deadline_s".to_string(), "2.5".to_string()),
+            ("quarantine".to_string(), "clamp".to_string()),
+            ("quarantine_bound".to_string(), "2.0".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        let f = c.faults();
+        assert_eq!(f.dropout, 0.2);
+        assert_eq!(f.straggle_p, 0.3);
+        assert_eq!(f.straggle_max, 6.0);
+        assert_eq!(f.corrupt_p, 0.1);
+        assert_eq!(f.corrupt_len, 32);
+        assert_eq!(f.poison_p, 0.5);
+        assert_eq!(c.round_deadline_s, 2.5);
+        assert_eq!(c.quarantine, QuarantinePolicy::Clamp);
+        assert_eq!(c.quarantine_bound, 2.0);
+        // TDMA slices the deadline across the selection (default 100
+        // participants); FDMA grants each client the whole budget.
+        assert_eq!(c.adaptive().deadline_slice_s, 2.5 / 100.0);
+        let o = vec![
+            ("round_deadline_s".to_string(), "2.5".to_string()),
+            ("mux".to_string(), "fdma".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.adaptive().deadline_slice_s, 2.5);
+        // Section-qualified spellings.
+        let o = vec![
+            ("faults.dropout".to_string(), "0.1".to_string()),
+            ("faults.quarantine".to_string(), "reject".to_string()),
+            ("timing.round_deadline_s".to_string(), "1.0".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.fault_dropout, 0.1);
+        assert_eq!(c.quarantine, QuarantinePolicy::Reject);
+        assert_eq!(c.round_deadline_s, 1.0);
+        // Bad values are rejected loudly — including the satellite
+        // guarantee that a zero ARQ budget cannot be configured.
+        for (k, v) in [
+            ("fault_dropout", "1.5"),
+            ("fault_straggle_max", "0.5"),
+            ("fault_corrupt_len", "0"),
+            ("round_deadline_s", "-1"),
+            ("quarantine", "maybe"),
+            ("quarantine_bound", "0"),
+            ("max_attempts", "0"),
+        ] {
+            let o = vec![(k.to_string(), v.to_string())];
+            assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
+        }
     }
 
     #[test]

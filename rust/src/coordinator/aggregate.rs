@@ -106,8 +106,25 @@ pub struct Contribution<'a> {
     pub grad_max_abs: f32,
     /// Fraction of pre-transport |g| below the paper's bound.
     pub grad_small_frac: f64,
+    /// Floats of this delivery flagged by the quarantine screen (already
+    /// clamped in `rx` when the policy repairs; 0 with screening off).
+    pub quarantined: usize,
     /// Transport cost / damage report.
     pub report: &'a TxReport,
+}
+
+/// Why a selected client's contribution was withheld from the reduction
+/// (fault injection / graceful degradation; see `crate::faults`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SkipReason {
+    /// The client dropped out — no compute, no transmission.
+    Dropout,
+    /// The client's modeled completion time overran the round deadline
+    /// (it did transmit; its airtime stays off the ledger by policy).
+    Deadline,
+    /// The delivered gradients tripped the quarantine screen under
+    /// `QuarantinePolicy::Reject`.
+    Quarantine,
 }
 
 /// Shard-local streaming accumulator: a weighted `axpy` target plus the
@@ -134,6 +151,10 @@ impl ShardAccumulator {
         s.retransmissions += c.report.retransmissions;
         s.grad_max_abs = s.grad_max_abs.max(c.grad_max_abs);
         s.grad_small_sum += c.grad_small_frac;
+        if c.quarantined > 0 {
+            s.quarantined += 1;
+        }
+        s.arq_exhausted += c.report.arq_exhausted;
         // Policy-layer observables (Scheme::Adaptive): arm census,
         // switch count, estimate sums, per-arm airtime.
         if let Some(p) = c.report.policy {
@@ -164,6 +185,10 @@ impl ShardAccumulator {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundTotals {
     pub clients: usize,
+    /// Sum of the aggregation weights actually fed. Equals ~1 when every
+    /// selected client contributed; after exclusions it is the survivor
+    /// mass the weighted sum was renormalized by.
+    pub weight_sum: f64,
     pub loss_sum: f64,
     pub ber_sum: f64,
     pub corrupted_sum: f64,
@@ -177,6 +202,11 @@ pub struct RoundTotals {
     pub est_snr_count: usize,
     pub approx_s: f64,
     pub fallback_s: f64,
+    /// Fault/degradation totals (zero under the zero-fault plan).
+    pub dropped: usize,
+    pub deadline_skipped: usize,
+    pub quarantined: usize,
+    pub arq_exhausted: usize,
 }
 
 /// The round-level engine: a [`ShardPlan`] plus one live
@@ -233,16 +263,51 @@ impl ShardedAggregator {
         Ok(())
     }
 
+    /// Withhold selection index `sel_idx` from the reduction (dropout /
+    /// deadline overrun / quarantine rejection). Takes the same
+    /// selection-order slot a [`ShardedAggregator::feed`] would — the
+    /// in-order contract covers exclusions too, which is what keeps
+    /// fault traces bit-identical across worker counts.
+    pub fn skip(&mut self, sel_idx: usize, reason: SkipReason) -> Result<()> {
+        if sel_idx != self.next {
+            return Err(Error::Shape(format!(
+                "sharded aggregation skipped out of order: got selection \
+                 index {sel_idx}, expected {}",
+                self.next
+            )));
+        }
+        self.next += 1;
+        let s = &mut self.accs[self.plan.shard_of(sel_idx)].stats;
+        match reason {
+            SkipReason::Dropout => s.dropped += 1,
+            SkipReason::Deadline => s.deadline_skipped += 1,
+            SkipReason::Quarantine => s.quarantined += 1,
+        }
+        Ok(())
+    }
+
     /// Combine shards in shard order: shard 0's accumulator is the base
     /// (so a 1-shard plan is bit-exactly the seed's serial reduction) and
     /// the rest merge in with [`ParamSet::add_assign`]. Returns the
     /// weighted-gradient sum, the round totals, and per-shard stats.
+    ///
+    /// When any selected client was withheld ([`ShardedAggregator::skip`])
+    /// the survivors' weighted sum is renormalized by the fed weight mass
+    /// — effective weights become |D_m| / |D_survivors|, keeping the
+    /// FedSGD step an unbiased average over the survivors (eq. 5 over the
+    /// reduced cohort). A full round is never rescaled, so the zero-fault
+    /// path stays bit-exact with pre-fault builds.
     pub fn finish(self) -> (ParamSet, RoundTotals, Vec<ShardStats>) {
         let mut accs = self.accs;
         let stats: Vec<ShardStats> = accs.iter().map(|a| a.stats).collect();
         let mut totals = RoundTotals::default();
         for s in &stats {
             totals.clients += s.clients;
+            totals.weight_sum += s.weight_sum;
+            totals.dropped += s.dropped;
+            totals.deadline_skipped += s.deadline_skipped;
+            totals.quarantined += s.quarantined;
+            totals.arq_exhausted += s.arq_exhausted;
             totals.loss_sum += s.loss_sum;
             totals.ber_sum += s.ber_sum;
             totals.corrupted_sum += s.corrupted_sum;
@@ -259,6 +324,9 @@ impl ShardedAggregator {
         let mut sum = accs.remove(0).acc;
         for a in &accs {
             sum.add_assign(&a.acc);
+        }
+        if totals.clients < self.plan.len() && totals.weight_sum > 0.0 {
+            sum.scale((1.0 / totals.weight_sum) as f32);
         }
         (sum, totals, stats)
     }
@@ -302,6 +370,7 @@ mod tests {
                     loss: 0.5 + i as f32 * 0.125,
                     grad_max_abs: 0.25 + i as f32 * 0.0625,
                     grad_small_frac: 1.0,
+                    quarantined: 0,
                     report: &report,
                 },
             )
@@ -431,6 +500,7 @@ mod tests {
                     loss: 0.0,
                     grad_max_abs: 0.0,
                     grad_small_frac: 1.0,
+                    quarantined: 0,
                     report: &report,
                 },
             )
@@ -459,6 +529,7 @@ mod tests {
             loss: 0.0,
             grad_max_abs: 0.0,
             grad_small_frac: 1.0,
+            quarantined: 0,
             report: &report,
         };
         // Out of order: index 1 before 0.
@@ -467,5 +538,124 @@ mod tests {
         // Wrong payload shape.
         let short = Contribution { rx: &pays[0].1[..3], ..c };
         assert!(agg.feed(1, &short).is_err());
+        // Skips honour the same selection-order contract.
+        assert!(agg.skip(2, SkipReason::Dropout).is_err());
+        agg.skip(1, SkipReason::Dropout).unwrap();
+        agg.feed(2, &c).unwrap();
+    }
+
+    #[test]
+    fn skips_renormalize_survivor_weights() {
+        // Withholding clients rescales the weighted sum by the fed
+        // weight mass — bit-exactly 1/weight_sum applied once — and the
+        // skip reasons land in the per-shard stats and round totals.
+        let man = manifest();
+        let pays = payloads(6, man.num_params());
+        let report = TxReport::default();
+        let mut agg = ShardedAggregator::new(&man, 6, 2);
+        let skip_at = |i: usize| i == 1 || i == 4;
+        let mut weight_sum = 0.0f64;
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            if i == 1 {
+                agg.skip(i, SkipReason::Dropout).unwrap();
+            } else if i == 4 {
+                agg.skip(i, SkipReason::Deadline).unwrap();
+            } else {
+                weight_sum += *w as f64;
+                agg.feed(
+                    i,
+                    &Contribution {
+                        rx,
+                        weight: *w,
+                        loss: 0.0,
+                        grad_max_abs: 0.0,
+                        grad_small_frac: 1.0,
+                        quarantined: 0,
+                        report: &report,
+                    },
+                )
+                .unwrap();
+            }
+        }
+        let (sum, totals, stats) = agg.finish();
+        assert_eq!(totals.clients, 4);
+        assert_eq!((totals.dropped, totals.deadline_skipped), (1, 1));
+        assert_eq!(totals.weight_sum.to_bits(), weight_sum.to_bits());
+        assert_eq!(stats[0].dropped, 1); // index 1 lives in shard 0
+        assert_eq!(stats[1].deadline_skipped, 1); // index 4 in shard 1
+        // Reference: per-shard partials of the survivors, combined in
+        // shard order, then scaled once by 1/weight_sum.
+        let mut parts = [ParamSet::zeros(&man), ParamSet::zeros(&man)];
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            if !skip_at(i) {
+                parts[i / 3].axpy_flat(*w, rx);
+            }
+        }
+        let [mut reference, p1] = parts;
+        reference.add_assign(&p1);
+        reference.scale((1.0 / weight_sum) as f32);
+        let bits =
+            |p: &ParamSet| p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&sum), bits(&reference));
+    }
+
+    #[test]
+    fn full_rounds_are_never_rescaled() {
+        // Even though float weights only sum to ~1, a round with every
+        // selected client fed must skip the renormalization entirely —
+        // this is the zero-fault bit-exactness guarantee.
+        let man = manifest();
+        let pays = payloads(5, man.num_params());
+        let mut agg = ShardedAggregator::new(&man, 5, 2);
+        feed_all(&mut agg, &pays);
+        let (sum, totals, _) = agg.finish();
+        assert_eq!(totals.clients, 5);
+        assert_eq!(
+            (totals.dropped, totals.deadline_skipped, totals.quarantined),
+            (0, 0, 0)
+        );
+        // No scale applied: raw shard-order sum, bit-for-bit.
+        let mut parts = [ParamSet::zeros(&man), ParamSet::zeros(&man)];
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            parts[i / 3].axpy_flat(*w, rx);
+        }
+        let [mut chunked, p1] = parts;
+        chunked.add_assign(&p1);
+        let bits =
+            |p: &ParamSet| p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&sum), bits(&chunked));
+    }
+
+    #[test]
+    fn quarantine_and_exhaustion_counters_flow_through() {
+        let man = manifest();
+        let pays = payloads(3, man.num_params());
+        let mut agg = ShardedAggregator::new(&man, 3, 1);
+        for (i, (w, rx)) in pays.iter().enumerate() {
+            if i == 2 {
+                agg.skip(i, SkipReason::Quarantine).unwrap();
+                continue;
+            }
+            let report = TxReport { arq_exhausted: i + 1, ..Default::default() };
+            agg.feed(
+                i,
+                &Contribution {
+                    rx,
+                    weight: *w,
+                    loss: 0.0,
+                    grad_max_abs: 0.0,
+                    grad_small_frac: 1.0,
+                    quarantined: if i == 0 { 7 } else { 0 },
+                    report: &report,
+                },
+            )
+            .unwrap();
+        }
+        let (_, totals, stats) = agg.finish();
+        // Client 0 was clamp-quarantined and fed; client 2 rejected.
+        assert_eq!(totals.quarantined, 2);
+        assert_eq!(totals.arq_exhausted, 3); // 1 + 2
+        assert_eq!(stats[0].quarantined, 2);
+        assert_eq!(totals.clients, 2);
     }
 }

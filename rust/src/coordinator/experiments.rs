@@ -180,9 +180,9 @@ pub struct AdaptiveRow {
     pub approx_frac: f64,
     /// Policy arm switches across the delivery sequence.
     pub switches: u64,
-    /// Mean estimated effective SNR over sounded deliveries (NaN when
-    /// nothing sounded).
-    pub mean_est_snr_db: f64,
+    /// Mean estimated effective SNR over sounded deliveries (`None` when
+    /// nothing sounded — rendered as an empty CSV field, never NaN).
+    pub mean_est_snr_db: Option<f64>,
 }
 
 /// E9 — CSI-adaptive uplink study at the transport level: for every
@@ -247,12 +247,83 @@ pub fn adaptive_link_sweep(
                     seconds,
                     approx_frac: approx as f64 / payloads.max(1) as f64,
                     switches: state.switches,
-                    mean_est_snr_db: if est_n > 0 { est_sum / est_n as f64 } else { f64::NAN },
+                    mean_est_snr_db: (est_n > 0).then(|| est_sum / est_n as f64),
                 });
             }
         }
     }
     out
+}
+
+/// One cell of the fault-resilience study: a `(dropout, straggle_p)`
+/// fault level run for `rounds` rounds on the full round loop, with the
+/// degradation counters accumulated across the run.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRow {
+    pub dropout: f64,
+    pub straggle_p: f64,
+    pub rounds: usize,
+    /// Total dropouts across the run.
+    pub dropped: usize,
+    /// Total deadline exclusions across the run.
+    pub deadline_skipped: usize,
+    /// Total quarantine flags across the run.
+    pub quarantined: usize,
+    /// Smallest per-round survivor count.
+    pub min_survivors: usize,
+    /// Smallest per-round pre-renormalization survivor weight mass.
+    pub min_survivor_weight: f64,
+    /// Mean of the per-round mean training loss.
+    pub mean_loss: f64,
+    /// Cumulative modeled communication time, seconds.
+    pub comm_time_s: f64,
+}
+
+/// E10 — fault-resilience study on the live round loop: for every
+/// `(dropout, straggle_p)` level, run `rounds` full FL rounds under the
+/// deterministic fault plan and report the degradation counters plus the
+/// surviving aggregation mass. Shared by `examples/fault_study.rs` and
+/// the CI fault-smoke step.
+pub fn fault_resilience_sweep(
+    base: &ExperimentConfig,
+    engine: &Engine,
+    levels: &[(f64, f64)],
+    rounds: usize,
+) -> Result<Vec<FaultRow>> {
+    let mut out = Vec::new();
+    for &(dropout, straggle_p) in levels {
+        let mut cfg = base.clone();
+        cfg.fault_dropout = dropout;
+        cfg.fault_straggle = straggle_p;
+        cfg.rounds = rounds;
+        cfg.eval_every = 0;
+        cfg.validate()?;
+        let mut server = crate::coordinator::FlServer::from_config(cfg, engine)?;
+        let mut row = FaultRow {
+            dropout,
+            straggle_p,
+            rounds,
+            dropped: 0,
+            deadline_skipped: 0,
+            quarantined: 0,
+            min_survivors: usize::MAX,
+            min_survivor_weight: f64::INFINITY,
+            mean_loss: 0.0,
+            comm_time_s: 0.0,
+        };
+        for round in 0..rounds {
+            let o = server.run_round(round)?;
+            row.dropped += o.dropped;
+            row.deadline_skipped += o.deadline_skipped;
+            row.quarantined += o.quarantined;
+            row.min_survivors = row.min_survivors.min(o.survivors);
+            row.min_survivor_weight = row.min_survivor_weight.min(o.survivor_weight);
+            row.mean_loss += o.mean_loss / rounds.max(1) as f64;
+            row.comm_time_s = o.cumulative_comm_s;
+        }
+        out.push(row);
+    }
+    Ok(out)
 }
 
 /// E7 — empirical gradient-bound check on the live system: runs a few
@@ -346,6 +417,70 @@ mod tests {
     }
 
     #[test]
+    fn fault_sweep_counts_match_the_plan() {
+        let man = crate::model::Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 32,8\nparam b1 8\n\
+             artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n",
+        )
+        .unwrap();
+        let engine = Engine::synthetic_with(man, 0xFA);
+        let base = ExperimentConfig {
+            clients: 4,
+            participants_per_round: 4,
+            train_n: 400,
+            test_n: 50,
+            batch: 8,
+            eval_every: 0,
+            ..ExperimentConfig::default()
+        };
+        let rounds = 3;
+        let rows =
+            fault_resilience_sweep(&base, &engine, &[(0.0, 0.0), (0.5, 0.5)], rounds).unwrap();
+        assert_eq!(rows.len(), 2);
+        // Zero-fault cell: nobody dropped, every round at full strength,
+        // weight mass ~1 (float sum of |D_m|/|D_sel|), nothing screened.
+        let clean = &rows[0];
+        assert_eq!(clean.dropped, 0);
+        assert_eq!(clean.deadline_skipped, 0);
+        assert_eq!(clean.quarantined, 0);
+        assert_eq!(clean.min_survivors, base.clients);
+        assert!((clean.min_survivor_weight - 1.0).abs() < 1e-6);
+        // Faulted cell: the dropout count is a pure function of
+        // (seed, client, round) — recompute it from the plan directly
+        // (all clients participate, so selection is the identity).
+        let faulted = &rows[1];
+        let plan = crate::faults::FaultConfig {
+            dropout: 0.5,
+            straggle_p: 0.5,
+            ..Default::default()
+        };
+        let root = Rng::new(base.seed);
+        let mut expect_dropped = 0usize;
+        let mut expect_min_surv = usize::MAX;
+        for round in 0..rounds {
+            let mut surv = 0usize;
+            for ci in 0..base.clients {
+                let drop = plan.draw(&root, ci, round).dropout;
+                expect_dropped += drop as usize;
+                surv += !drop as usize;
+            }
+            expect_min_surv = expect_min_surv.min(surv);
+        }
+        assert!(expect_dropped > 0, "seed draws no dropout — weaken the test");
+        assert_eq!(faulted.dropped, expect_dropped);
+        assert_eq!(faulted.min_survivors, expect_min_surv);
+        assert!(faulted.min_survivor_weight < 1.0);
+        if expect_min_surv > 0 {
+            assert!(faulted.min_survivor_weight > 0.0);
+        }
+        // No deadline and no corruption configured: the other
+        // degradation paths must stay silent.
+        assert_eq!(faulted.deadline_skipped, 0);
+        assert_eq!(faulted.quarantined, 0);
+    }
+
+    #[test]
     fn adaptive_sweep_shape_and_sanity() {
         let base = ExperimentConfig::default();
         let rows = adaptive_link_sweep(
@@ -369,7 +504,10 @@ mod tests {
                 }
                 Scheme::Adaptive => {
                     assert!((0.0..=1.0).contains(&r.approx_frac));
-                    assert!(r.mean_est_snr_db.is_finite(), "finite thresholds must sound");
+                    assert!(
+                        r.mean_est_snr_db.is_some_and(f64::is_finite),
+                        "finite thresholds must sound"
+                    );
                     // Exact on fallback deliveries, bounded on approx ones.
                     assert!(r.mse < 0.1, "adaptive damage bounded: {}", r.mse);
                 }

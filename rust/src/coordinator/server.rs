@@ -57,14 +57,17 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::aggregate::{resolve_shards, Contribution, ShardedAggregator};
+use crate::coordinator::aggregate::{
+    resolve_shards, Contribution, ShardedAggregator, SkipReason,
+};
 use crate::coordinator::ClientState;
 use crate::data::{partition_non_iid, Dataset, TrainTest};
+use crate::faults::{self, ClientFault, QuarantinePolicy};
 use crate::metrics::{RoundRecord, ShardStats, Trace};
 use crate::model::ParamSet;
 use crate::rng::Rng;
 use crate::runtime::Engine;
-use crate::timing::Ledger;
+use crate::timing::{Ledger, Multiplexing};
 use crate::transport::{PolicyReport, PolicyState, Transport, TxReport, TxScratch};
 use crate::Result;
 
@@ -95,6 +98,23 @@ pub struct RoundOutcome {
     /// Airtime split by policy arm this round, seconds.
     pub approx_time_s: f64,
     pub fallback_time_s: f64,
+    /// Selected clients that dropped out (fault injection).
+    pub dropped: usize,
+    /// Selected clients excluded because their modeled completion time
+    /// overran `round_deadline_s`.
+    pub deadline_skipped: usize,
+    /// Clients whose delivered gradients tripped the quarantine screen
+    /// (clamped or rejected per `QuarantinePolicy`).
+    pub quarantined: usize,
+    /// ECRT codewords delivered best-effort after exhausting the ARQ
+    /// retry budget, summed across the round's passes.
+    pub arq_exhausted: usize,
+    /// Clients whose contributions were actually aggregated (== the
+    /// selection size under the zero-fault plan).
+    pub survivors: usize,
+    /// Pre-renormalization weight mass of the survivors (~1 at full
+    /// participation; the aggregate was rescaled by it after exclusions).
+    pub survivor_weight: f64,
     /// Shards the streaming aggregation used this round.
     pub agg_shards: usize,
     /// Measured peak client passes in flight at once (claimed but not
@@ -115,6 +135,10 @@ struct PassSlot {
     grad_max: f32,
     grad_small_frac: f64,
     report: TxReport,
+    /// The deterministic fault drawn for this `(client, round)` pass.
+    fault: ClientFault,
+    /// Floats flagged by the quarantine screen over `rx`.
+    quarantined: usize,
 }
 
 /// Bounded in-order delivery ring between the client-pass workers and
@@ -367,6 +391,18 @@ impl<'e> FlServer<'e> {
         scratch: &mut TxScratch,
         slot: &mut PassSlot,
     ) -> Result<()> {
+        // Deterministic fault plan, drawn from its own substream keyed on
+        // `(client, round)` — the batch/channel streams below never see
+        // it, and the zero-fault default never derives it.
+        slot.fault = self.cfg.faults().draw(&self.root_rng, ci, round);
+        slot.quarantined = 0;
+        if slot.fault.dropout {
+            // Dropped clients never compute or transmit; the consumer
+            // skips them without touching the ledger or the policy.
+            slot.report = TxReport::default();
+            slot.loss = 0.0;
+            return Ok(());
+        }
         let client = &self.clients[ci];
         // Local computation (eq. 4): one minibatch gradient.
         let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
@@ -410,24 +446,66 @@ impl<'e> FlServer<'e> {
             scratch,
             &mut slot.rx,
         );
+        // Post-channel fault stages: burst corruption of the delivered
+        // payload, then the quarantine screen against the encoding bound.
+        if let Some(spec) = slot.fault.corrupt {
+            spec.apply(&mut slot.rx);
+        }
+        slot.quarantined =
+            faults::screen(&mut slot.rx, self.cfg.quarantine_bound, self.cfg.quarantine);
         slot.loss = loss;
         Ok(())
     }
 
     /// Fold a completed pass into its shard (consumer side — always
     /// called in selection order, which fixes the reduction shape and
-    /// the policy-update order).
+    /// the policy-update order). Degradation ladder: dropouts never
+    /// transmitted (no ledger charge, no policy update); deadline misses
+    /// transmitted but arrive too late (policy update, no ledger charge);
+    /// quarantine rejects occupied the channel (ledger charge and policy
+    /// update, contribution discarded).
     #[allow(clippy::too_many_arguments)]
     fn feed_pass(
         &self,
         agg: &mut ShardedAggregator,
         ledger: &mut Ledger,
         updates: &mut Vec<(usize, PolicyReport)>,
+        deadline_used: &mut f64,
         sel_idx: usize,
         ci: usize,
         selected_data: usize,
         slot: &PassSlot,
     ) -> Result<()> {
+        if slot.fault.dropout {
+            return agg.skip(sel_idx, SkipReason::Dropout);
+        }
+        // Straggler inflation through the timing ledger: ×1.0 on the
+        // zero-fault plan is bit-exact, so the default path is unchanged.
+        let secs = slot.report.seconds * slot.fault.straggle;
+        let deadline = self.cfg.round_deadline_s;
+        if deadline > 0.0 {
+            let missed = match self.cfg.mux {
+                // TDMA shares the round's airtime budget serially; FDMA
+                // clients each get the whole deadline in parallel.
+                Multiplexing::Tdma => *deadline_used + secs > deadline,
+                Multiplexing::Fdma => secs > deadline,
+            };
+            if missed {
+                agg.skip(sel_idx, SkipReason::Deadline)?;
+                if let Some(p) = slot.report.policy {
+                    updates.push((ci, p));
+                }
+                return Ok(());
+            }
+        }
+        *deadline_used += secs;
+        ledger.record_client_arm(secs, slot.report.policy.map(|p| p.arm));
+        if let Some(p) = slot.report.policy {
+            updates.push((ci, p));
+        }
+        if self.cfg.quarantine == QuarantinePolicy::Reject && slot.quarantined > 0 {
+            return agg.skip(sel_idx, SkipReason::Quarantine);
+        }
         let weight = self.clients[ci].data_size() as f32 / selected_data as f32;
         agg.feed(
             sel_idx,
@@ -438,13 +516,9 @@ impl<'e> FlServer<'e> {
                 grad_max_abs: slot.grad_max,
                 grad_small_frac: slot.grad_small_frac,
                 report: &slot.report,
+                quarantined: slot.quarantined,
             },
-        )?;
-        ledger.record_client_arm(slot.report.seconds, slot.report.policy.map(|p| p.arm));
-        if let Some(p) = slot.report.policy {
-            updates.push((ci, p));
-        }
-        Ok(())
+        )
     }
 
     /// Execute one full FL round.
@@ -479,6 +553,10 @@ impl<'e> FlServer<'e> {
         }
 
         let mut peak_inflight = 0usize;
+        // TDMA airtime consumed so far this round (selection order), the
+        // basis of the deadline gate. Consumer-side only, so it is
+        // independent of worker scheduling.
+        let mut deadline_used = 0.0f64;
         let run_res: Result<()> = if workers <= 1 {
             // Serial: compute and feed in place — one resident pass.
             let scratch = &mut pool[0];
@@ -491,6 +569,7 @@ impl<'e> FlServer<'e> {
                         &mut agg,
                         &mut ledger,
                         &mut updates,
+                        &mut deadline_used,
                         i,
                         ci,
                         selected_data,
@@ -538,6 +617,7 @@ impl<'e> FlServer<'e> {
                             &mut agg,
                             &mut ledger,
                             &mut updates,
+                            &mut deadline_used,
                             i,
                             selected_ref[i],
                             selected_data,
@@ -576,7 +656,10 @@ impl<'e> FlServer<'e> {
         self.shard_stats = shard_stats;
         self.params.sgd_step(&sum, self.cfg.lr);
         let comm = self.ledger.finish_round(self.cfg.mux);
-        let nf = n as f64;
+        // Per-client means are over the survivors — the clients that
+        // actually contributed. Equals `n` on the zero-fault plan, so the
+        // default trace is bit-identical to the pre-fault baseline.
+        let nf = totals.clients.max(1) as f64;
         Ok(RoundOutcome {
             round,
             comm_time_s: comm,
@@ -593,6 +676,12 @@ impl<'e> FlServer<'e> {
                 .then(|| totals.est_snr_sum / totals.est_snr_count as f64),
             approx_time_s: totals.approx_s,
             fallback_time_s: totals.fallback_s,
+            dropped: totals.dropped,
+            deadline_skipped: totals.deadline_skipped,
+            quarantined: totals.quarantined,
+            arq_exhausted: totals.arq_exhausted,
+            survivors: totals.clients,
+            survivor_weight: totals.weight_sum,
             agg_shards: self.shard_stats.len(),
             peak_inflight,
         })
@@ -718,5 +807,9 @@ fn emit_round(
         mean_est_snr_db: out.mean_est_snr_db,
         approx_time_s: out.approx_time_s,
         fallback_time_s: out.fallback_time_s,
+        dropped: out.dropped,
+        deadline_skipped: out.deadline_skipped,
+        quarantined: out.quarantined,
+        arq_exhausted: out.arq_exhausted,
     });
 }

@@ -1,0 +1,405 @@
+//! Deterministic fault injection for the federation round loop.
+//!
+//! The paper's premise is that FL tolerates imperfect *delivery*; this
+//! module extends the threat model to imperfect *clients*: dropouts,
+//! stragglers (modeled latency inflation through the timing ledger),
+//! post-channel payload corruption bursts that slip past any CRC, and
+//! non-finite poisoning. The coordinator pairs it with deadline-bounded
+//! graceful degradation (`coordinator::server`) and a quarantine screen
+//! over delivered gradients ([`screen`]).
+//!
+//! # Determinism contract
+//!
+//! Every fault decision for `(client, round)` is drawn from a dedicated
+//! derived substream, `root.substream("fault", client, round)` — never
+//! from the payload ("channel"/"batch") or pilot streams, and never from
+//! worker-local state — so the schedule is a pure function of
+//! `(seed, client, round)`. Fault traces are therefore bit-identical
+//! across `parallel_clients` and `agg_shards`, and a zero-fault config
+//! ([`FaultConfig::is_zero`]) never derives the substream at all: the
+//! default path is structurally identical to a build without this
+//! module (pinned in `tests/parallel_it.rs`).
+
+use crate::rng::Rng;
+
+/// What the coordinator does with delivered gradients that violate the
+/// paper's encoding-range bound (non-finite, or |g| beyond the bound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum QuarantinePolicy {
+    /// No screening (default — the receiver-side bit protection of the
+    /// Proposed scheme is the only mitigation, exactly as pre-fault
+    /// builds behaved).
+    #[default]
+    Off,
+    /// Repair in place: non-finite entries become 0, out-of-range
+    /// entries clamp to `±bound`.
+    Clamp,
+    /// Exclude the whole pass from aggregation (survivor weights
+    /// renormalize); the client is still charged its airtime.
+    Reject,
+}
+
+impl QuarantinePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            QuarantinePolicy::Off => "off",
+            QuarantinePolicy::Clamp => "clamp",
+            QuarantinePolicy::Reject => "reject",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QuarantinePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(QuarantinePolicy::Off),
+            "clamp" => Some(QuarantinePolicy::Clamp),
+            "reject" => Some(QuarantinePolicy::Reject),
+            _ => None,
+        }
+    }
+}
+
+/// Per-round, per-client fault schedule parameters (config-derived; see
+/// the `fault_*` keys). The default is the zero-fault plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Probability a selected client drops out of the round entirely
+    /// (no compute, no transmission, no policy observation).
+    pub dropout: f64,
+    /// Probability a surviving client straggles this round.
+    pub straggle_p: f64,
+    /// Straggler latency inflation: the modeled slot time is multiplied
+    /// by a factor drawn uniformly from `[1, straggle_max)`.
+    pub straggle_max: f64,
+    /// Probability a surviving client's *delivered* payload suffers a
+    /// post-channel corruption burst (e.g. a memory fault after CRC).
+    pub corrupt_p: f64,
+    /// Burst length of a corruption event, in floats.
+    pub corrupt_len: usize,
+    /// Probability a corruption burst poisons with non-finite values
+    /// instead of bit garbage.
+    pub poison_p: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            dropout: 0.0,
+            straggle_p: 0.0,
+            straggle_max: 4.0,
+            corrupt_p: 0.0,
+            corrupt_len: 16,
+            poison_p: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when no fault can ever fire — the coordinator then skips the
+    /// fault substream derivation and every degradation branch, keeping
+    /// the default path bit-exact with pre-fault builds.
+    pub fn is_zero(&self) -> bool {
+        self.dropout <= 0.0 && self.straggle_p <= 0.0 && self.corrupt_p <= 0.0
+    }
+
+    /// Config sanity: probabilities in [0, 1], a sane inflation range,
+    /// and a non-empty burst.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("fault_dropout", self.dropout),
+            ("fault_straggle", self.straggle_p),
+            ("fault_corrupt", self.corrupt_p),
+            ("fault_poison", self.poison_p),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} {p} must be a probability in [0, 1]"));
+            }
+        }
+        if !(self.straggle_max >= 1.0 && self.straggle_max.is_finite()) {
+            return Err(format!(
+                "fault_straggle_max {} must be finite and >= 1",
+                self.straggle_max
+            ));
+        }
+        if self.corrupt_len == 0 {
+            return Err("fault_corrupt_len must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Draw the fault for `(client, round)` from its private substream of
+    /// `root`. Deriving a substream never consumes `root`'s state, and a
+    /// zero-fault config returns the no-fault schedule without deriving
+    /// anything, so payload/pilot streams are untouched either way.
+    pub fn draw(&self, root: &Rng, client: usize, round: usize) -> ClientFault {
+        if self.is_zero() {
+            return ClientFault::default();
+        }
+        let mut frng = root.substream("fault", client as u64, round as u64);
+        // A dropped client never transmits, so its straggle/corruption
+        // draws are skipped — safe because this substream is private to
+        // (client, round) and nothing else ever reads it.
+        if self.dropout > 0.0 && frng.bernoulli(self.dropout) {
+            return ClientFault { dropout: true, ..ClientFault::default() };
+        }
+        let straggle = if self.straggle_p > 0.0 && frng.bernoulli(self.straggle_p) {
+            frng.uniform(1.0, self.straggle_max)
+        } else {
+            1.0
+        };
+        let corrupt = if self.corrupt_p > 0.0 && frng.bernoulli(self.corrupt_p) {
+            Some(CorruptionSpec {
+                offset: frng.next_u64(),
+                len: self.corrupt_len,
+                // `| 1` keeps the XOR garble non-zero under every
+                // rotation, so a burst always changes its floats.
+                pattern: frng.next_u64() | 1,
+                poison: self.poison_p > 0.0 && frng.bernoulli(self.poison_p),
+            })
+        } else {
+            None
+        };
+        ClientFault { dropout: false, straggle, corrupt }
+    }
+}
+
+/// One corruption burst over a delivered float payload. Application is
+/// deterministic — no RNG is consumed at apply time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CorruptionSpec {
+    /// Burst start, reduced modulo the payload length at apply time.
+    pub offset: u64,
+    /// Burst length in floats (clamped to the payload).
+    pub len: usize,
+    /// XOR garble pattern (non-zero; rotated per position).
+    pub pattern: u64,
+    /// Poison with non-finite values instead of bit garbage.
+    pub poison: bool,
+}
+
+impl CorruptionSpec {
+    /// Corrupt `rx` in place; returns the number of floats touched.
+    /// The burst wraps around the end of the payload.
+    pub fn apply(&self, rx: &mut [f32]) -> usize {
+        if rx.is_empty() || self.len == 0 {
+            return 0;
+        }
+        let start = (self.offset % rx.len() as u64) as usize;
+        let n = self.len.min(rx.len());
+        for k in 0..n {
+            let i = (start + k) % rx.len();
+            rx[i] = if self.poison {
+                if k % 2 == 0 {
+                    f32::NAN
+                } else {
+                    f32::INFINITY
+                }
+            } else {
+                f32::from_bits(
+                    rx[i].to_bits() ^ self.pattern.rotate_left(k as u32) as u32,
+                )
+            };
+        }
+        n
+    }
+}
+
+/// The drawn fault schedule for one `(client, round)` pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClientFault {
+    /// The client never responds this round.
+    pub dropout: bool,
+    /// Modeled slot-time inflation factor (1.0 = on time).
+    pub straggle: f64,
+    /// Post-channel payload corruption, if scheduled.
+    pub corrupt: Option<CorruptionSpec>,
+}
+
+impl Default for ClientFault {
+    fn default() -> Self {
+        ClientFault { dropout: false, straggle: 1.0, corrupt: None }
+    }
+}
+
+/// Quarantine screen over a delivered gradient vector: flag entries that
+/// are non-finite or exceed the paper's encoding-range bound. Under
+/// [`QuarantinePolicy::Clamp`] the offenders are repaired in place
+/// (non-finite → 0, out-of-range → ±bound); under `Reject` the payload
+/// is left untouched (the caller excludes the whole pass). Returns the
+/// number of flagged floats (always 0 under `Off`).
+pub fn screen(rx: &mut [f32], bound: f32, policy: QuarantinePolicy) -> usize {
+    if policy == QuarantinePolicy::Off {
+        return 0;
+    }
+    let mut flagged = 0usize;
+    for g in rx.iter_mut() {
+        let bad = !g.is_finite() || g.abs() > bound;
+        if !bad {
+            continue;
+        }
+        flagged += 1;
+        if policy == QuarantinePolicy::Clamp {
+            *g = if g.is_finite() { bound.copysign(*g) } else { 0.0 };
+        }
+    }
+    flagged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_fault_config_is_inert() {
+        let f = FaultConfig::default();
+        assert!(f.is_zero());
+        f.validate().unwrap();
+        let root = Rng::new(7);
+        for (c, r) in [(0usize, 0usize), (3, 1), (999, 42)] {
+            assert_eq!(f.draw(&root, c, r), ClientFault::default());
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_client_round() {
+        let f = FaultConfig {
+            dropout: 0.3,
+            straggle_p: 0.5,
+            corrupt_p: 0.4,
+            poison_p: 0.5,
+            ..Default::default()
+        };
+        let root = Rng::new(99);
+        for c in 0..20 {
+            for r in 0..5 {
+                assert_eq!(f.draw(&root, c, r), f.draw(&root, c, r));
+            }
+        }
+        // Different (client, round) keys decorrelate: over a grid this
+        // size at these rates, at least one of each fault kind fires and
+        // at least one pass is clean.
+        let mut drops = 0;
+        let mut straggles = 0;
+        let mut corrupts = 0;
+        let mut clean = 0;
+        for c in 0..40 {
+            for r in 0..10 {
+                let cf = f.draw(&root, c, r);
+                drops += cf.dropout as usize;
+                straggles += (cf.straggle > 1.0) as usize;
+                corrupts += cf.corrupt.is_some() as usize;
+                clean += (cf == ClientFault::default()) as usize;
+            }
+        }
+        assert!(drops > 0 && straggles > 0 && corrupts > 0 && clean > 0);
+        // Dropout frequency lands near its rate (400 draws, p = 0.3).
+        let freq = drops as f64 / 400.0;
+        assert!((freq - 0.3).abs() < 0.08, "dropout freq {freq}");
+    }
+
+    #[test]
+    fn dropout_excludes_other_faults_and_straggle_stays_in_range() {
+        let f = FaultConfig {
+            dropout: 0.5,
+            straggle_p: 1.0,
+            straggle_max: 3.0,
+            corrupt_p: 1.0,
+            ..Default::default()
+        };
+        let root = Rng::new(5);
+        for c in 0..200 {
+            let cf = f.draw(&root, c, 0);
+            if cf.dropout {
+                assert_eq!(cf.straggle, 1.0);
+                assert!(cf.corrupt.is_none());
+            } else {
+                assert!((1.0..3.0).contains(&cf.straggle), "{}", cf.straggle);
+                assert!(cf.corrupt.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn substream_derivation_never_consumes_root() {
+        let f = FaultConfig { dropout: 0.5, ..Default::default() };
+        let mut a = Rng::new(123);
+        let mut b = Rng::new(123);
+        for c in 0..10 {
+            f.draw(&a, c, 0);
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn corruption_apply_is_deterministic_and_wraps() {
+        let spec =
+            CorruptionSpec { offset: 7, len: 4, pattern: 0xDEAD_BEEF_F00D_0001, poison: false };
+        let mut a = vec![0.25f32; 8];
+        let mut b = a.clone();
+        assert_eq!(spec.apply(&mut a), 4);
+        spec.apply(&mut b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        // Burst starts at 7 and wraps to 0..=2; positions 3..=6 untouched.
+        for i in 3..7 {
+            assert_eq!(a[i].to_bits(), 0.25f32.to_bits(), "index {i}");
+        }
+        for i in [7usize, 0, 1, 2] {
+            assert_ne!(a[i].to_bits(), 0.25f32.to_bits(), "index {i}");
+        }
+        // Empty payloads and zero-length bursts are no-ops.
+        assert_eq!(spec.apply(&mut []), 0);
+        let zero = CorruptionSpec { len: 0, ..spec };
+        let mut c = vec![1.0f32; 4];
+        assert_eq!(zero.apply(&mut c), 0);
+    }
+
+    #[test]
+    fn poison_produces_non_finite() {
+        let spec = CorruptionSpec { offset: 0, len: 3, pattern: 1, poison: true };
+        let mut v = vec![0.5f32; 6];
+        assert_eq!(spec.apply(&mut v), 3);
+        assert!(v[..3].iter().all(|x| !x.is_finite()));
+        assert!(v[3..].iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn screen_clamps_or_counts() {
+        let dirty = [0.5f32, f32::NAN, -2.5, f32::INFINITY, -0.75, 1.0];
+        // Off never flags or touches.
+        let mut v = dirty;
+        assert_eq!(screen(&mut v, 1.0, QuarantinePolicy::Off), 0);
+        // Reject counts without modifying.
+        let mut v = dirty;
+        assert_eq!(screen(&mut v, 1.0, QuarantinePolicy::Reject), 3);
+        assert_eq!(v[2], -2.5);
+        // Clamp repairs in place: non-finite -> 0, out-of-range -> ±bound.
+        let mut v = dirty;
+        assert_eq!(screen(&mut v, 1.0, QuarantinePolicy::Clamp), 3);
+        assert_eq!(v, [0.5, 0.0, -1.0, 0.0, -0.75, 1.0]);
+        assert_eq!(screen(&mut v, 1.0, QuarantinePolicy::Clamp), 0);
+    }
+
+    #[test]
+    fn quarantine_policy_parse_roundtrip() {
+        for p in [QuarantinePolicy::Off, QuarantinePolicy::Clamp, QuarantinePolicy::Reject] {
+            assert_eq!(QuarantinePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(QuarantinePolicy::parse("none"), Some(QuarantinePolicy::Off));
+        assert_eq!(QuarantinePolicy::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        assert!(FaultConfig::default().validate().is_ok());
+        assert!(FaultConfig { dropout: 1.5, ..Default::default() }.validate().is_err());
+        assert!(FaultConfig { straggle_p: -0.1, ..Default::default() }.validate().is_err());
+        assert!(FaultConfig { straggle_max: 0.5, ..Default::default() }.validate().is_err());
+        assert!(
+            FaultConfig { straggle_max: f64::INFINITY, ..Default::default() }
+                .validate()
+                .is_err()
+        );
+        assert!(FaultConfig { corrupt_len: 0, ..Default::default() }.validate().is_err());
+        assert!(FaultConfig { poison_p: f64::NAN, ..Default::default() }.validate().is_err());
+    }
+}

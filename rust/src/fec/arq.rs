@@ -72,6 +72,26 @@ pub struct FecStats {
 }
 
 impl FecStats {
+    /// The best-case delivery of a `framed_bits` frame: every codeword
+    /// accepted on its first attempt, in one aggregated burst. This is
+    /// the floor of ECRT airtime for the frame — the adaptive policy's
+    /// deadline-pressure check uses it to recognize frames that cannot
+    /// possibly meet a deadline slice even without retransmission.
+    pub fn one_shot(framed_bits: usize, bits_per_symbol: usize) -> FecStats {
+        let code = LdpcCode::ieee80211n_648_r12();
+        let codewords = framed_bits.div_ceil(code.k).max(1);
+        let symbols_per_cw = code.n.div_ceil(bits_per_symbol);
+        FecStats {
+            info_bits: framed_bits,
+            codewords,
+            transmissions: codewords,
+            coded_bits_sent: codewords * code.n,
+            symbols_sent: codewords * symbols_per_cw,
+            exhausted: 0,
+            bursts: 1,
+        }
+    }
+
     /// Retransmissions beyond the first attempt of each codeword.
     pub fn retransmissions(&self) -> usize {
         self.transmissions - self.codewords
@@ -342,6 +362,24 @@ mod tests {
                 assert_eq!(r1.next_u64(), r2.next_u64(), "{decoder:?} stream diverged");
             }
         }
+    }
+
+    #[test]
+    fn one_shot_matches_clean_channel_delivery() {
+        // The analytic floor equals real stats when nothing retransmits.
+        let mut rng = Rng::new(11);
+        let p = payload(&mut rng, 324 * 10 + 17);
+        let ch = block_channel(30.0); // virtually no retransmission
+        let (_, s) = transmit_reliable(&p, &qpsk(), &ch, &mut rng, &ArqConfig::default());
+        let floor = FecStats::one_shot(p.len(), 2);
+        assert_eq!(floor.codewords, s.codewords);
+        assert_eq!(floor.transmissions, s.transmissions);
+        assert_eq!(floor.coded_bits_sent, s.coded_bits_sent);
+        assert_eq!(floor.symbols_sent, s.symbols_sent);
+        assert_eq!(floor.bursts, s.bursts);
+        assert_eq!(floor.exhausted, 0);
+        // Degenerate frames still cost one codeword.
+        assert_eq!(FecStats::one_shot(0, 2).codewords, 1);
     }
 
     #[test]

@@ -8,6 +8,11 @@ use crate::bits::BitVec;
 
 const POLY: u32 = 0xEDB8_8320;
 
+/// Frame-check-sequence width appended by [`append_crc`] — the framing
+/// overhead callers must budget when sizing a frame before it exists
+/// (e.g. the adaptive policy's deadline-pressure airtime floor).
+pub const CRC_BITS: usize = 32;
+
 /// 256-entry lookup table, built at first use.
 fn table() -> &'static [u32; 256] {
     use std::sync::OnceLock;
@@ -62,7 +67,7 @@ pub fn crc32_bits(bits: &BitVec) -> u32 {
 pub fn append_crc(payload: &BitVec) -> BitVec {
     let fcs = crc32_bits(payload);
     let mut out = payload.clone();
-    out.push_bits_lsb(fcs as u64, 32);
+    out.push_bits_lsb(fcs as u64, CRC_BITS);
     out
 }
 

@@ -8,4 +8,5 @@ pub mod crc;
 pub mod ldpc;
 
 pub use arq::{ArqConfig, ArqScratch, DecoderKind, FecStats};
+pub use crc::CRC_BITS;
 pub use ldpc::{LdpcCode, PAPER_T};

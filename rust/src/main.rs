@@ -57,6 +57,16 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("adaptive-enter", "adaptive_enter_db"),
         ("adaptive-exit", "adaptive_exit_db"),
         ("pilots", "adaptive_pilots"),
+        ("max-retx", "max_attempts"),
+        ("deadline", "round_deadline_s"),
+        ("fault-dropout", "fault_dropout"),
+        ("fault-straggle", "fault_straggle"),
+        ("fault-straggle-max", "fault_straggle_max"),
+        ("fault-corrupt", "fault_corrupt"),
+        ("fault-corrupt-len", "fault_corrupt_len"),
+        ("fault-poison", "fault_poison"),
+        ("quarantine", "quarantine"),
+        ("quarantine-bound", "quarantine_bound"),
     ] {
         if let Some(v) = args.opt(flag) {
             overrides.push((key.to_string(), v.to_string()));

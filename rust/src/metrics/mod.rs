@@ -36,6 +36,17 @@ pub struct RoundRecord {
     pub approx_time_s: f64,
     /// This round's airtime on the ECRT fallback arm, seconds.
     pub fallback_time_s: f64,
+    /// Selected clients that dropped out of the round (fault injection).
+    pub dropped: usize,
+    /// Selected clients excluded because their modeled completion time
+    /// overran the round deadline.
+    pub deadline_skipped: usize,
+    /// Clients whose delivered gradients tripped the quarantine screen
+    /// (clamped or rejected per policy).
+    pub quarantined: usize,
+    /// ECRT codewords delivered best-effort after exhausting the ARQ
+    /// retry budget, summed across this round's passes.
+    pub arq_exhausted: usize,
 }
 
 /// A full experiment trace.
@@ -78,14 +89,16 @@ impl Trace {
 
     /// CSV rows: label,round,comm_time_s,accuracy,loss,ber,retx,corrupted,
     /// then the policy columns (approx fraction, switches, mean estimated
-    /// SNR — empty when nothing sounded — and per-arm airtime).
+    /// SNR — empty when nothing sounded — and per-arm airtime), then the
+    /// fault columns (dropouts, deadline exclusions, quarantined clients,
+    /// exhausted ARQ codewords).
     pub fn csv_rows(&self) -> String {
         let mut s = String::new();
         for r in &self.rounds {
             let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
             let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
             s.push_str(&format!(
-                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6}\n",
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{}\n",
                 self.label,
                 r.round,
                 r.comm_time_s,
@@ -98,7 +111,11 @@ impl Trace {
                 r.policy_switches,
                 est,
                 r.approx_time_s,
-                r.fallback_time_s
+                r.fallback_time_s,
+                r.dropped,
+                r.deadline_skipped,
+                r.quarantined,
+                r.arq_exhausted
             ));
         }
         s
@@ -108,7 +125,8 @@ impl Trace {
 /// CSV header matching [`Trace::csv_rows`].
 pub const CSV_HEADER: &str = "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,\
      retransmissions,corrupted_frac,approx_frac,policy_switches,est_snr_db,\
-     approx_time_s,fallback_time_s\n";
+     approx_time_s,fallback_time_s,dropped,deadline_skipped,quarantined,\
+     arq_exhausted\n";
 
 /// Write traces to a CSV file (creating parent dirs).
 pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
@@ -159,6 +177,16 @@ pub struct ShardStats {
     /// the chosen arm's share).
     pub approx_s: f64,
     pub fallback_s: f64,
+    /// Selected clients in this shard's range that dropped out.
+    pub dropped: usize,
+    /// Selected clients in this shard's range excluded by the round
+    /// deadline.
+    pub deadline_skipped: usize,
+    /// Clients whose delivery tripped the quarantine screen (counted
+    /// whether the policy clamped the floats or rejected the pass).
+    pub quarantined: usize,
+    /// ARQ retry-budget exhaustions summed over this shard's deliveries.
+    pub arq_exhausted: usize,
 }
 
 impl ShardStats {
@@ -283,7 +311,7 @@ mod tests {
         // Every row carries exactly the header's column count (the
         // policy columns included; unsounded rounds leave est_snr empty).
         let ncols = CSV_HEADER.trim().split(',').count();
-        assert_eq!(ncols, 13);
+        assert_eq!(ncols, 17);
         for line in csv.lines() {
             assert_eq!(line.split(',').count(), ncols, "{line}");
         }
@@ -299,10 +327,16 @@ mod tests {
             mean_est_snr_db: Some(10.25),
             approx_time_s: 1.5,
             fallback_time_s: 4.0,
+            dropped: 2,
+            deadline_skipped: 1,
+            quarantined: 4,
+            arq_exhausted: 5,
             ..Default::default()
         });
         let row = t.csv_rows();
         assert!(row.contains(",0.7500,3,10.25,1.500000,4.000000"), "{row}");
+        // The fault columns terminate the row.
+        assert!(row.trim_end().ends_with(",2,1,4,5"), "{row}");
     }
 
     #[test]

@@ -82,6 +82,15 @@ impl AirtimeModel {
             + stats.symbols_sent as f64 / self.symbol_rate
             + stats.coded_bits_sent as f64 * self.fec_compute_per_bit_s
     }
+
+    /// Lower bound on [`AirtimeModel::ecrt_time`] for a `framed_bits`
+    /// frame (payload + CRC): every codeword accepted on its first
+    /// attempt in one aggregated burst. A frame whose *floor* already
+    /// overruns a deadline slice cannot meet it at any channel quality —
+    /// the adaptive policy's deadline-pressure fallback keys on this.
+    pub fn ecrt_floor(&self, framed_bits: usize, bits_per_symbol: usize) -> f64 {
+        self.ecrt_time(&crate::fec::FecStats::one_shot(framed_bits, bits_per_symbol))
+    }
 }
 
 /// Cumulative per-round communication-time ledger.
@@ -205,6 +214,27 @@ mod tests {
         };
         let ratio = m.ecrt_time(&stats) / m.burst_time(uncoded_syms);
         assert!((ratio - 2.0).abs() < 1e-9, "{ratio}");
+    }
+
+    #[test]
+    fn ecrt_floor_is_a_lower_bound_and_monotone() {
+        let m = AirtimeModel::default();
+        // Floor for one 648/2 codeword frame: one burst, 324 QPSK symbols.
+        let expect = (m.preamble_s + m.ack_s) + 324.0 / m.symbol_rate;
+        assert!((m.ecrt_floor(324, 2) - expect).abs() < 1e-12);
+        // Any retransmitting delivery of the same frame costs strictly more.
+        let retx = FecStats {
+            info_bits: 324,
+            codewords: 1,
+            transmissions: 2,
+            coded_bits_sent: 1296,
+            symbols_sent: 648,
+            exhausted: 0,
+            bursts: 2,
+        };
+        assert!(m.ecrt_time(&retx) > m.ecrt_floor(324, 2));
+        // More framed bits never lowers the floor.
+        assert!(m.ecrt_floor(324 * 50, 2) > m.ecrt_floor(324, 2));
     }
 
     #[test]

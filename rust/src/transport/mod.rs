@@ -59,7 +59,7 @@ pub mod policy;
 
 use crate::bits::{BitProtection, BitVec, BlockInterleaver};
 use crate::channel::{Channel, ChannelConfig, ChannelScratch};
-use crate::fec::{ArqConfig, ArqScratch};
+use crate::fec::{ArqConfig, ArqScratch, CRC_BITS};
 use crate::math::Complex;
 use crate::modem::{Constellation, Modulation};
 use crate::rng::Rng;
@@ -137,6 +137,10 @@ pub struct TxReport {
     pub corrupted_floats: usize,
     /// ECRT retransmissions (0 otherwise).
     pub retransmissions: usize,
+    /// ECRT codewords that exhausted the `max_attempts` retry budget and
+    /// were delivered best-effort, residual errors possible (0 for every
+    /// non-coded scheme and in every paper configuration).
+    pub arq_exhausted: usize,
     /// Policy-layer outcome (arm chosen, SNR estimate, switch flag,
     /// pilot airtime) — `Some` only for `Scheme::Adaptive`.
     pub policy: Option<PolicyReport>,
@@ -329,21 +333,36 @@ impl Transport {
         out: &mut Vec<f32>,
     ) -> TxReport {
         let pol = &self.cfg.adaptive;
-        let (arm, est_snr_db, pilot_seconds) = match pol.forced_arm(prev_arm) {
-            Some(arm) => (arm, None, 0.0),
-            None => {
-                let est = policy::estimate_effective_snr_db(
-                    &self.con,
-                    &self.channel,
-                    pol.pilot_symbols,
-                    rng,
-                    scratch,
-                );
-                (
-                    pol.decide(prev_arm, est),
-                    Some(est),
-                    self.cfg.airtime.pilot_time(pol.pilot_symbols),
-                )
+        // Deadline pressure, checked before everything else: when even
+        // the retransmission-free ECRT airtime floor of this frame
+        // overruns the per-client deadline slice, the fallback arm is a
+        // guaranteed deadline miss — degrade gracefully to the bounded-
+        // damage approximate leg without paying for a pilot. Derived
+        // from config + payload size only, so every worker agrees.
+        let deadline_forced = pol.deadline_slice_s > 0.0
+            && self.cfg.airtime.ecrt_floor(
+                grads.len() * 32 + CRC_BITS,
+                self.cfg.modulation.bits_per_symbol(),
+            ) > pol.deadline_slice_s;
+        let (arm, est_snr_db, pilot_seconds) = if deadline_forced {
+            (LinkArm::Approx, None, 0.0)
+        } else {
+            match pol.forced_arm(prev_arm) {
+                Some(arm) => (arm, None, 0.0),
+                None => {
+                    let est = policy::estimate_effective_snr_db(
+                        &self.con,
+                        &self.channel,
+                        pol.pilot_symbols,
+                        rng,
+                        scratch,
+                    );
+                    (
+                        pol.decide(prev_arm, est),
+                        Some(est),
+                        self.cfg.airtime.pilot_time(pol.pilot_symbols),
+                    )
+                }
             }
         };
         let mut report = match arm {
@@ -725,6 +744,41 @@ mod tests {
         let naive = Transport::new(cn);
         let (_, rn) = naive.send(&g, &mut rng);
         assert!(rep.seconds > 1.9 * rn.seconds, "{} vs {}", rep.seconds, rn.seconds);
+    }
+
+    #[test]
+    fn deadline_pressure_forces_approx_without_pilot() {
+        // A deadline slice below the frame's ECRT airtime floor makes the
+        // fallback arm a guaranteed miss: the policy must skip the pilot
+        // and take the approximate leg even on a channel so bad the CSI
+        // decision would have picked fallback.
+        let mut rng = Rng::new(52);
+        let g = grads(&mut rng, 600);
+        let mut c = cfg(Scheme::Adaptive, 7.0);
+        c.channel.fading = Fading::None;
+        let floor = c.airtime.ecrt_floor(g.len() * 32 + CRC_BITS, 2);
+        c.adaptive.deadline_slice_s = floor * 0.5;
+        let t = Transport::new(c);
+        let mut r2 = rng.clone();
+        let (out, rep) = t.send(&g, &mut rng);
+        let pol = rep.policy.expect("adaptive must report policy");
+        assert_eq!(pol.arm, LinkArm::Approx);
+        assert_eq!(pol.est_snr_db, None, "pilot must be skipped");
+        assert_eq!(pol.pilot_seconds, 0.0);
+        assert!(rep.seconds <= c.adaptive.deadline_slice_s * 1.01);
+        // Deadline-forced approx is bit-identical to Scheme::Proposed.
+        let mut cp = cfg(Scheme::Proposed, 7.0);
+        cp.channel.fading = Fading::None;
+        let (op, _) = Transport::new(cp).send(&g, &mut r2);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out), bits(&op));
+        // A slice the floor fits under leaves the CSI decision in charge.
+        let mut c2 = cfg(Scheme::Adaptive, 7.0);
+        c2.channel.fading = Fading::None;
+        c2.adaptive.deadline_slice_s = floor * 100.0;
+        let (_, rep2) = Transport::new(c2).send(&g, &mut rng);
+        assert_eq!(rep2.policy.unwrap().arm, LinkArm::Fallback);
+        assert!(rep2.policy.unwrap().est_snr_db.is_some());
     }
 
     #[test]

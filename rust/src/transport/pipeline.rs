@@ -149,6 +149,7 @@ impl ReliableLink<'_> {
             symbols_sent: stats.symbols_sent,
             bit_errors: rx_bits.hamming(&bits),
             retransmissions: stats.retransmissions(),
+            arq_exhausted: stats.exhausted,
             ..Default::default()
         }
     }

@@ -60,6 +60,13 @@ pub struct AdaptiveConfig {
     /// Pilot symbols sounded per transmission (ignored when the arm is
     /// forced).
     pub pilot_symbols: usize,
+    /// Per-client deadline slice, seconds (derived from the round
+    /// deadline by the coordinator config; 0 disables). When even the
+    /// retransmission-free ECRT airtime floor of the frame overruns this
+    /// slice, the fallback arm is a guaranteed deadline miss — the
+    /// policy then skips the pilot and takes the approximate leg:
+    /// bounded damage instead of unbounded retransmission.
+    pub deadline_slice_s: f64,
 }
 
 impl Default for AdaptiveConfig {
@@ -67,7 +74,13 @@ impl Default for AdaptiveConfig {
         // Enter where the proposed scheme's accuracy is near-perfect in
         // Fig. 3 (>= ~9 dB Rayleigh); a 2 dB dead band absorbs estimate
         // noise; 64 pilots cost < 0.01% of a model upload's airtime.
-        AdaptiveConfig { enter_snr_db: 9.0, exit_snr_db: 7.0, pilot_symbols: 64 }
+        // No deadline pressure unless the coordinator sets a deadline.
+        AdaptiveConfig {
+            enter_snr_db: 9.0,
+            exit_snr_db: 7.0,
+            pilot_symbols: 64,
+            deadline_slice_s: 0.0,
+        }
     }
 }
 
@@ -135,6 +148,12 @@ impl AdaptiveConfig {
         }
         if self.pilot_symbols == 0 {
             return Err("adaptive_pilots must be >= 1".into());
+        }
+        if !(self.deadline_slice_s >= 0.0 && self.deadline_slice_s.is_finite()) {
+            return Err(format!(
+                "deadline slice {} must be finite and >= 0",
+                self.deadline_slice_s
+            ));
         }
         Ok(())
     }
@@ -210,7 +229,12 @@ mod tests {
 
     #[test]
     fn hysteresis_has_memory() {
-        let p = AdaptiveConfig { enter_snr_db: 10.0, exit_snr_db: 8.0, pilot_symbols: 16 };
+        let p = AdaptiveConfig {
+            enter_snr_db: 10.0,
+            exit_snr_db: 8.0,
+            pilot_symbols: 16,
+            ..Default::default()
+        };
         // Fresh clients must earn the approximate arm.
         assert_eq!(p.decide(None, 9.0), LinkArm::Fallback);
         assert_eq!(p.decide(None, 10.0), LinkArm::Approx);
@@ -242,12 +266,26 @@ mod tests {
         assert!(AdaptiveConfig::default().validate().is_ok());
         assert!(AdaptiveConfig::always_approx().validate().is_ok());
         assert!(AdaptiveConfig::always_fallback().validate().is_ok());
-        let bad = AdaptiveConfig { enter_snr_db: 5.0, exit_snr_db: 9.0, pilot_symbols: 8 };
+        let bad = AdaptiveConfig {
+            enter_snr_db: 5.0,
+            exit_snr_db: 9.0,
+            pilot_symbols: 8,
+            ..Default::default()
+        };
         assert!(bad.validate().is_err());
         let nan = AdaptiveConfig { enter_snr_db: f64::NAN, ..Default::default() };
         assert!(nan.validate().is_err());
         let zero = AdaptiveConfig { pilot_symbols: 0, ..Default::default() };
         assert!(zero.validate().is_err());
+        // Deadline slices must be finite and non-negative.
+        let neg = AdaptiveConfig { deadline_slice_s: -1.0, ..Default::default() };
+        assert!(neg.validate().is_err());
+        let inf = AdaptiveConfig { deadline_slice_s: f64::INFINITY, ..Default::default() };
+        assert!(inf.validate().is_err());
+        let nan_d = AdaptiveConfig { deadline_slice_s: f64::NAN, ..Default::default() };
+        assert!(nan_d.validate().is_err());
+        let ok = AdaptiveConfig { deadline_slice_s: 0.25, ..Default::default() };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

@@ -15,8 +15,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use awc_fl::config::ExperimentConfig;
 use awc_fl::coordinator::FlServer;
+use awc_fl::faults::{FaultConfig, QuarantinePolicy};
 use awc_fl::metrics::Trace;
 use awc_fl::model::Manifest;
+use awc_fl::rng::Rng;
 use awc_fl::runtime::Engine;
 use awc_fl::transport::Scheme;
 
@@ -130,6 +132,10 @@ fn assert_traces_bit_identical(a: &Trace, b: &Trace, label: &str) {
             y.test_accuracy.map(f64::to_bits),
             "{label} accuracy"
         );
+        assert_eq!(x.dropped, y.dropped, "{label} dropped");
+        assert_eq!(x.deadline_skipped, y.deadline_skipped, "{label} deadline");
+        assert_eq!(x.quarantined, y.quarantined, "{label} quarantined");
+        assert_eq!(x.arq_exhausted, y.arq_exhausted, "{label} arq_exhausted");
     }
 }
 
@@ -269,6 +275,150 @@ fn shard_stats_cover_selection_and_respect_plan() {
     assert!((w - 1.0).abs() < 1e-6, "weights sum to {w}");
     // In-flight passes stay within the delivery window: O(workers).
     assert!(out.peak_inflight <= 4, "window {}", out.peak_inflight);
+}
+
+#[test]
+fn fault_plan_is_worker_and_shard_invariant() {
+    // Tentpole contract: a live fault plan (20% dropout + stragglers)
+    // produces bit-identical traces and models for every worker count
+    // and shard layout, and the per-round counters match the schedule
+    // recomputed straight from the fault substream (selection is the
+    // identity here, so sel_idx == client).
+    let plan = FaultConfig { dropout: 0.2, straggle_p: 0.5, ..Default::default() };
+    let (clients, rounds) = (9usize, 3usize);
+    // Pick the first seed whose plan actually exercises the machinery:
+    // at least one dropout and one straggler fire, and every round keeps
+    // at least one survivor (so renormalization always has mass).
+    let seed = (1u64..)
+        .find(|&s| {
+            let root = Rng::new(s);
+            let draws = || (0..rounds).flat_map(|r| (0..clients).map(move |c| (c, r)));
+            draws().any(|(c, r)| plan.draw(&root, c, r).dropout)
+                && draws().any(|(c, r)| plan.draw(&root, c, r).straggle > 1.0)
+                && (0..rounds)
+                    .all(|r| (0..clients).any(|c| !plan.draw(&root, c, r).dropout))
+        })
+        .unwrap();
+    let mk = |workers: usize, shards: usize| {
+        let mut c = cfg(Scheme::Proposed, workers);
+        c.seed = seed;
+        c.fault_dropout = plan.dropout;
+        c.fault_straggle = plan.straggle_p;
+        c.fault_straggle_max = plan.straggle_max;
+        c.agg_shards = shards;
+        run_cfg(c)
+    };
+    let (base_trace, base_params) = mk(1, 1);
+    // Counters match the plan, round by round.
+    let root = Rng::new(seed);
+    let mut total = 0usize;
+    for (round, row) in base_trace.rounds.iter().enumerate() {
+        let expect =
+            (0..clients).filter(|&c| plan.draw(&root, c, round).dropout).count();
+        assert_eq!(row.dropped, expect, "round {round}");
+        assert_eq!(row.deadline_skipped, 0, "no deadline configured");
+        assert_eq!(row.quarantined, 0, "no corruption configured");
+        total += expect;
+    }
+    assert!(total > 0, "seed search guaranteed a dropout");
+    for (workers, shards) in [(4, 1), (8, 1), (1, 0), (4, 0), (8, 0)] {
+        let (t, p) = mk(workers, shards);
+        assert_traces_bit_identical(
+            &base_trace,
+            &t,
+            &format!("faults workers={workers} shards={shards}"),
+        );
+        assert_eq!(
+            base_params, p,
+            "faults workers={workers} shards={shards}: global model diverged"
+        );
+    }
+}
+
+#[test]
+fn zero_fault_plan_is_bit_exact_with_default_for_every_scheme() {
+    // The fault runtime must be structurally invisible when disabled:
+    // spelling every fault key out as zero (plus quarantine off and no
+    // deadline) is bit-identical to the untouched default config, for
+    // every uplink scheme, and no degradation counter ever moves.
+    for scheme in
+        [Scheme::Perfect, Scheme::Naive, Scheme::Proposed, Scheme::Ecrt, Scheme::Adaptive]
+    {
+        let (def_trace, def_params) = run(scheme, 2);
+        for r in &def_trace.rounds {
+            assert_eq!(
+                (r.dropped, r.deadline_skipped, r.quarantined),
+                (0, 0, 0),
+                "{scheme:?}: zero-fault counters moved"
+            );
+        }
+        let mut c = cfg(scheme, 2);
+        c.fault_dropout = 0.0;
+        c.fault_straggle = 0.0;
+        c.fault_corrupt = 0.0;
+        c.fault_poison = 0.0;
+        c.round_deadline_s = 0.0;
+        c.quarantine = QuarantinePolicy::Off;
+        let (t, p) = run_cfg(c);
+        assert_traces_bit_identical(&def_trace, &t, &format!("{scheme:?} explicit zero"));
+        assert_eq!(def_params, p, "{scheme:?}: explicit zero-fault config diverged");
+    }
+    // Clamp-quarantine at the Proposed scheme's delivery clamp bound is
+    // a no-op too: the receiver already confines |g| to the bound, so
+    // screening flags nothing and perturbs nothing.
+    let (def_trace, def_params) = run(Scheme::Proposed, 2);
+    let mut c = cfg(Scheme::Proposed, 2);
+    c.quarantine = QuarantinePolicy::Clamp;
+    c.quarantine_bound = 1.0;
+    let (t, p) = run_cfg(c);
+    assert_traces_bit_identical(&def_trace, &t, "clamp at delivery bound");
+    assert_eq!(def_params, p, "clamp at delivery bound diverged");
+    assert!(t.rounds.iter().all(|r| r.quarantined == 0));
+}
+
+#[test]
+fn round_deadline_excludes_stragglers_per_plan() {
+    // FDMA deadline gate: every Proposed-scheme client transmits the
+    // same airtime S, so with a deadline of 2S exactly the clients whose
+    // straggle factor inflates past it are excluded — recompute the
+    // schedule from the plan and match the trace counters.
+    let plan = FaultConfig { straggle_p: 0.6, straggle_max: 4.0, ..Default::default() };
+    let (clients, rounds) = (9usize, 3usize);
+    let engine = small_engine();
+    let s = awc_fl::timing::AirtimeModel::default()
+        .burst_time((engine.manifest.num_params() * 32).div_ceil(2));
+    let deadline = 2.0 * s;
+    let seed = (1u64..)
+        .find(|&s_| {
+            let root = Rng::new(s_);
+            let miss = |c: usize, r: usize| s * plan.draw(&root, c, r).straggle > deadline;
+            (0..rounds).all(|r| (0..clients).any(|c| !miss(c, r)))
+                && (0..rounds).any(|r| (0..clients).any(|c| miss(c, r)))
+        })
+        .unwrap();
+    let mut c = cfg(Scheme::Proposed, 4);
+    c.seed = seed;
+    c.fault_straggle = plan.straggle_p;
+    c.fault_straggle_max = plan.straggle_max;
+    c.round_deadline_s = deadline;
+    c.mux = awc_fl::timing::Multiplexing::Fdma;
+    let mut server = FlServer::from_config(c, &engine).unwrap();
+    let root = Rng::new(seed);
+    let mut total = 0usize;
+    for round in 0..rounds {
+        let out = server.run_round(round).unwrap();
+        let expect = (0..clients)
+            .filter(|&ci| s * plan.draw(&root, ci, round).straggle > deadline)
+            .count();
+        assert_eq!(out.deadline_skipped, expect, "round {round}");
+        assert_eq!(out.dropped, 0);
+        assert_eq!(out.survivors, clients - expect);
+        if expect > 0 {
+            assert!(out.survivor_weight < 1.0);
+        }
+        total += expect;
+    }
+    assert!(total > 0, "seed search guaranteed a deadline miss");
 }
 
 #[test]

@@ -25,26 +25,59 @@ import os
 import sys
 
 
+def die(msg):
+    """Fail the gate with a clear one-line diagnosis, never a traceback."""
+    sys.exit(f"bench_diff: {msg}")
+
+
 def load(path):
-    with open(path) as f:
-        records = json.load(f)
-    return {r["name"]: r for r in records}
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except json.JSONDecodeError as e:
+        die(f"{path} is not valid JSON ({e}) — truncated bench run?")
+    if not isinstance(records, list):
+        die(f"{path}: expected a JSON array of bench records, got {type(records).__name__}")
+    out = {}
+    for i, r in enumerate(records):
+        if not isinstance(r, dict) or "name" not in r:
+            die(f"{path}: record #{i} has no `name` field: {r!r}")
+        out[r["name"]] = dict(r, _path=path)
+    return out
+
+
+def num(record, field):
+    """Numeric field of a record, with a clear diagnosis on bad data."""
+    if field not in record or record[field] is None:
+        die(
+            f"{record.get('_path', '?')}: record `{record['name']}` is missing "
+            f"numeric field `{field}`"
+        )
+    try:
+        v = float(record[field])
+    except (TypeError, ValueError):
+        die(
+            f"{record.get('_path', '?')}: record `{record['name']}` field "
+            f"`{field}` is not numeric: {record[field]!r}"
+        )
+    if field == "mean_s" and v <= 0:
+        die(f"{record.get('_path', '?')}: record `{record['name']}` mean_s {v} <= 0")
+    return v
 
 
 def metric(record):
     """Display metric for a record that exists on only one side."""
-    tp = record.get("throughput")
-    if tp is not None:
-        return float(tp)
-    return 1.0 / float(record["mean_s"])
+    if record.get("throughput") is not None:
+        return num(record, "throughput")
+    return 1.0 / num(record, "mean_s")
 
 
 def metric_pair(a, b):
     """Comparable metrics for a record present in both runs: throughput
     when BOTH have one, else 1/mean_s for both (never mixed units)."""
     if a.get("throughput") is not None and b.get("throughput") is not None:
-        return float(a["throughput"]), float(b["throughput"])
-    return 1.0 / float(a["mean_s"]), 1.0 / float(b["mean_s"])
+        return num(a, "throughput"), num(b, "throughput")
+    return 1.0 / num(a, "mean_s"), 1.0 / num(b, "mean_s")
 
 
 def main():
