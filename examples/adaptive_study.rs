@@ -10,10 +10,18 @@
 //!     [--fading ge|jakes|both] [--snr-list 6,8,10,12,14,20] \
 //!     [--payloads 6] [--floats 8000] \
 //!     [--adaptive-enter 9] [--adaptive-exit 7] [--pilots 64] \
+//!     [--coherence stateless|link|round] \
+//!     [--ge-p-g2b 0.001] [--ge-p-b2g 0.05] \
 //!     [--out results/adaptive_study.csv]
 //! ```
+//!
+//! With `--coherence link` the pilot sounds the very fading state the
+//! payload then rides (burst-aware selection); with `--coherence round`
+//! that state additionally persists across the payload sequence, so slow
+//! Gilbert–Elliott chains produce long same-arm dwells and fewer
+//! switches than `stateless`.
 
-use awc_fl::channel::Fading;
+use awc_fl::channel::{Coherence, Fading};
 use awc_fl::cli::Args;
 use awc_fl::config::ExperimentConfig;
 use awc_fl::coordinator::experiments::adaptive_link_sweep;
@@ -42,13 +50,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if let Some(p) = args.opt_parse::<usize>("pilots")? {
         base.adaptive_pilots = p;
     }
+    if let Some(s) = args.opt("coherence") {
+        base.coherence = Coherence::parse(s).ok_or_else(|| format!("bad --coherence `{s}`"))?;
+    }
+    if let Some(p) = args.opt_parse::<f64>("ge-p-g2b")? {
+        base.ge_p_g2b = p;
+    }
+    if let Some(p) = args.opt_parse::<f64>("ge-p-b2g")? {
+        base.ge_p_b2g = p;
+    }
     base.validate()?;
 
     let schemes = [Scheme::Ecrt, Scheme::Proposed, Scheme::Adaptive];
     println!(
         "adaptive link study: {} floats x {} payloads per cell; enter {} dB / exit {} dB, \
-         {} pilots\n",
-        floats, payloads, base.adaptive_enter_db, base.adaptive_exit_db, base.adaptive_pilots
+         {} pilots, coherence {}\n",
+        floats,
+        payloads,
+        base.adaptive_enter_db,
+        base.adaptive_exit_db,
+        base.adaptive_pilots,
+        base.coherence.name()
     );
     println!(
         "{:<16} {:>6} {:<9} {:>11} {:>11} {:>8} {:>8} {:>9}",

@@ -15,7 +15,7 @@
 mod harness;
 
 use awc_fl::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
-use awc_fl::channel::{Channel, ChannelConfig, ChannelScratch, Fading};
+use awc_fl::channel::{Channel, ChannelConfig, ChannelScratch, ChannelState, Fading};
 use awc_fl::config::ExperimentConfig;
 use awc_fl::fec::LdpcCode;
 use awc_fl::math::Complex;
@@ -139,6 +139,29 @@ fn main() {
         black_box(&eq);
     });
     let tp = report_throughput("channel jakes (symbols)", syms.len() as f64, &s);
+    sink.push(name, &s, Some(tp));
+
+    // Stateful coherent leg: one persistent Gilbert–Elliott process
+    // evolved across iterations (the `coherence = round` hot path —
+    // gains from the state's private RNG, noise from the caller's).
+    let ch_ge = Channel::new(ChannelConfig {
+        fading: Fading::GilbertElliott,
+        rng_version: RngVersion::V2Batched,
+        ..Default::default()
+    });
+    let mut ge_state = ChannelState::new(rng.substream("fade", 0, 0));
+    let name = "channel: stateful GE evolve (1 model)";
+    let s = bench(name, 2, 20, || {
+        ch_ge.transmit_stateful_into(
+            black_box(&syms),
+            &mut ge_state,
+            &mut rng,
+            &mut chan_scratch,
+            &mut eq,
+        );
+        black_box(&eq);
+    });
+    let tp = report_throughput("channel stateful ge (symbols)", syms.len() as f64, &s);
     sink.push(name, &s, Some(tp));
 
     // Interleaver.

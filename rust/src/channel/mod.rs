@@ -55,6 +55,30 @@
 //! [`Channel::transmit_into`] dispatches on `ChannelConfig::rng_version`:
 //! `V1` reproduces the seed bitstream bit-exactly through the legacy
 //! scalar loops (golden-pinned), `V2Batched` takes the block engine.
+//!
+//! # Temporal coherence ([`Coherence`] / [`ChannelState`])
+//!
+//! The paths above are *stateless*: every call draws a fresh fading
+//! realization, so two transmissions — or a pilot and the payload right
+//! behind it — see independent channels. [`ChannelState`] is the
+//! persistent alternative: it owns the fading *process* (Jakes
+//! oscillator phases, the Gilbert–Elliott Markov state, the Block
+//! residual gain) plus a private process RNG, so consecutive bursts
+//! continue one realization and the temporal structure the scenarios
+//! promise (Clarke autocorrelation, geometric burst sojourns) extends
+//! across call boundaries. [`ChannelState::advance`] fast-forwards the
+//! process over inter-transmission gaps without generating gains.
+//!
+//! The stateful legs ([`Channel::transmit_stateful_into`],
+//! [`Channel::transmit_csi_stateful_into`]) split responsibilities:
+//! **gains come from the state's process RNG, noise comes from the
+//! caller's stream** (version-respecting draws), so pilot/payload noise
+//! substreams are untouched by coherence and the stateless paths above
+//! remain bit-exact — [`Coherence::Stateless`] (the default) never
+//! constructs a state at all. `Coherence::Link` shares one state between
+//! a transmission's pilot and payload; `Coherence::Round` additionally
+//! persists it across a client's transmissions (the transport and
+//! coordinator own that threading; see `transport::policy`).
 
 use crate::math::{db_to_lin, Complex};
 use crate::rng::{Rng, RngVersion};
@@ -115,6 +139,47 @@ impl Fading {
     }
 }
 
+/// How far one fading realization persists in time — the scope of a
+/// [`ChannelState`]. Selected by the `coherence` config key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coherence {
+    /// Every transmission (and every pilot) draws an independent fading
+    /// realization from the caller's stream — the legacy behavior,
+    /// bit-exact with pre-coherence builds for both `RngVersion`s.
+    Stateless,
+    /// Pilot and payload of one transmission share a fading process: the
+    /// estimate predicts the burst the payload actually hits. State is
+    /// created fresh per transmission (no cross-transmission memory).
+    Link,
+    /// `Link`, plus the process persists across a client's transmissions
+    /// (the coordinator keeps one [`ChannelState`] per client and folds
+    /// it forward in consumer order) — hysteresis sees real temporal
+    /// correlation.
+    Round,
+}
+
+impl Coherence {
+    pub const ALL: [Coherence; 3] =
+        [Coherence::Stateless, Coherence::Link, Coherence::Round];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Coherence::Stateless => "stateless",
+            Coherence::Link => "link",
+            Coherence::Round => "round",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Coherence> {
+        match s.to_ascii_lowercase().as_str() {
+            "stateless" | "iid" | "off" => Some(Coherence::Stateless),
+            "link" | "burst" => Some(Coherence::Link),
+            "round" | "persistent" => Some(Coherence::Round),
+            _ => None,
+        }
+    }
+}
+
 /// Number of sinusoids in the Jakes sum-of-sinusoids generator. M = 8
 /// keeps per-symbol cost at 16 plane rotations while the ensemble
 /// autocorrelation already matches J0 to ~1e-2 per realization.
@@ -152,6 +217,10 @@ pub struct ChannelConfig {
     /// Gaussian sampler version: `V1` = bit-exact seed streams through
     /// the scalar path, `V2Batched` = the batched ziggurat engine.
     pub rng_version: RngVersion,
+    /// Temporal persistence of the fading realization: `Stateless`
+    /// (default, bit-exact legacy), `Link` (pilot + payload share one
+    /// process), or `Round` (process persists per client).
+    pub coherence: Coherence,
 }
 
 impl Default for ChannelConfig {
@@ -169,6 +238,7 @@ impl Default for ChannelConfig {
             ge_p_b2g: 0.2,
             ge_bad_db: -10.0,
             rng_version: RngVersion::V1,
+            coherence: Coherence::Stateless,
         }
     }
 }
@@ -523,6 +593,13 @@ impl Channel {
     /// summary the CSI-adaptive transport policy thresholds against —
     /// one source of truth so trace rows, the policy, and the study
     /// example all report the same number.
+    ///
+    /// An **empty** CSI report yields exactly `-inf` dB (mean 0 via the
+    /// `max(1)` divisor guard, `lin_to_db(0) = -inf`) — the conservative
+    /// "no information" answer. The sign matters: `-inf` fails every
+    /// finite enter threshold, so the adaptive policy resolves missing
+    /// CSI to the reliable fallback arm, never to forced-approx (`+inf`
+    /// would do the opposite). Pinned here and in `transport::policy`.
     pub fn csi_effective_snr_db(&self, csi: &[f64]) -> f64 {
         let mean = csi.iter().sum::<f64>() / csi.len().max(1) as f64;
         crate::math::lin_to_db(mean / self.sigma2)
@@ -575,66 +652,404 @@ impl Channel {
             }
             Fading::Jakes => self.jakes_gains_into(n, rng, out),
             Fading::GilbertElliott => {
-                let pg = self.cfg.ge_p_g2b.clamp(0.0, 1.0);
-                let pb = self.cfg.ge_p_b2g.clamp(f64::MIN_POSITIVE, 1.0);
-                let g_bad = db_to_lin(self.cfg.ge_bad_db).sqrt();
-                let pi_bad = pg / (pg + pb);
-                // Normalize so the stationary average power is 1 and the
-                // configured gamma stays the *average* receiver SNR.
-                let norm = ((1.0 - pi_bad) + pi_bad * g_bad * g_bad).sqrt().recip();
-                let (a_good, a_bad) = (norm, norm * g_bad);
-                let mut bad = rng.f64() < pi_bad;
+                let p = self.ge_params();
+                let mut bad = rng.f64() < p.pi_bad;
                 for _ in 0..n {
-                    out.push(Complex::new(if bad { a_bad } else { a_good }, 0.0));
+                    out.push(Complex::new(if bad { p.a_bad } else { p.a_good }, 0.0));
                     let u = rng.f64();
-                    bad = if bad { u >= pb } else { u < pg };
+                    bad = if bad { u >= p.p_b2g } else { u < p.p_g2b };
                 }
             }
         }
     }
 
+    /// Derived Gilbert–Elliott chain parameters, shared by the stateless
+    /// generator above and the stateful walk in [`ChannelState`]. The
+    /// clamps are defense-in-depth only: `ExperimentConfig::validate`
+    /// rejects out-of-range probabilities up front with a clear error,
+    /// so a hand-built `ChannelConfig` cannot silently divide by zero or
+    /// trap the chain in the Bad state here.
+    fn ge_params(&self) -> GeParams {
+        let p_g2b = self.cfg.ge_p_g2b.clamp(0.0, 1.0);
+        let p_b2g = self.cfg.ge_p_b2g.clamp(f64::MIN_POSITIVE, 1.0);
+        let g_bad = db_to_lin(self.cfg.ge_bad_db).sqrt();
+        let pi_bad = p_g2b / (p_g2b + p_b2g);
+        // Normalize so the stationary average power is 1 and the
+        // configured gamma stays the *average* receiver SNR.
+        let norm = ((1.0 - pi_bad) + pi_bad * g_bad * g_bad).sqrt().recip();
+        GeParams { p_g2b, p_b2g, pi_bad, a_good: norm, a_bad: norm * g_bad }
+    }
+
     /// Zheng–Xiao sum-of-sinusoids Clarke-spectrum generator. Random
     /// arrival-angle offset theta and per-sinusoid phases phi/psi are
     /// drawn once per transmission; the M oscillators then advance by
-    /// precomputed plane rotations (no per-symbol trig).
+    /// precomputed plane rotations (no per-symbol trig). A fresh
+    /// [`JakesOsc`] per call keeps this leg stateless and bit-exact with
+    /// the seed stream; [`ChannelState`] holds one bank persistently.
     fn jakes_gains_into(&self, n: usize, rng: &mut Rng, out: &mut Vec<Complex>) {
+        let mut osc = JakesOsc::new(self.cfg.doppler_norm.max(0.0), rng);
+        for _ in 0..n {
+            out.push(osc.next());
+        }
+    }
+
+    /// Generate `n` fading gains by *continuing* the process held in
+    /// `state` (initializing it lazily on first use). Scenario draw
+    /// orders match the stateless generator exactly, except the draws
+    /// come from the state's private process RNG — the caller's
+    /// payload/pilot noise streams are never touched.
+    pub fn stateful_gains_into(
+        &self,
+        state: &mut ChannelState,
+        n: usize,
+        out: &mut Vec<Complex>,
+    ) {
+        state.ensure_started(self);
+        out.clear();
+        out.reserve(n);
+        let v = self.cfg.rng_version;
+        match self.cfg.fading {
+            Fading::None => {
+                for _ in 0..n {
+                    out.push(Complex::new(1.0, 0.0));
+                }
+            }
+            Fading::Fast => {
+                for _ in 0..n {
+                    out.push(state.rng.cn_v(v, 1.0));
+                }
+            }
+            Fading::Rician => {
+                let k = self.cfg.rician_k.max(0.0);
+                let los = (k / (k + 1.0)).sqrt();
+                let sh = (0.5 / (k + 1.0)).sqrt();
+                for _ in 0..n {
+                    let re = los + sh * state.rng.normal_v(v);
+                    let im = sh * state.rng.normal_v(v);
+                    out.push(Complex::new(re, im));
+                }
+            }
+            Fading::Block => {
+                let bl = self.cfg.block_len.max(1);
+                for _ in 0..n {
+                    if state.block_pos == bl {
+                        state.block_h = state.rng.cn_v(v, 1.0);
+                        state.block_pos = 0;
+                    }
+                    out.push(state.block_h);
+                    state.block_pos += 1;
+                }
+            }
+            Fading::Jakes => {
+                let osc = state.jakes.as_mut().expect("started above");
+                for _ in 0..n {
+                    out.push(osc.next());
+                }
+            }
+            Fading::GilbertElliott => {
+                let p = self.ge_params();
+                for _ in 0..n {
+                    out.push(Complex::new(
+                        if state.bad { p.a_bad } else { p.a_good },
+                        0.0,
+                    ));
+                    let u = state.rng.f64();
+                    state.bad = if state.bad { u >= p.p_b2g } else { u < p.p_g2b };
+                }
+            }
+        }
+    }
+
+    /// Stateful payload leg: fade with the *continuing* process in
+    /// `state`, perturb with noise drawn from the caller's `rng`
+    /// (version-respecting: one batched `fill_normal` pass under
+    /// `V2Batched`, per-symbol `cn` under `V1`), equalize algebraically.
+    pub fn transmit_stateful_into(
+        &self,
+        symbols: &[Complex],
+        state: &mut ChannelState,
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut Vec<Complex>,
+    ) {
+        self.stateful_leg(symbols, state, rng, scratch, out, None);
+    }
+
+    /// Stateful CSI leg ([`Channel::transmit_csi_into`]'s coherent
+    /// sibling): same gain/noise split as
+    /// [`Channel::transmit_stateful_into`], plus the per-symbol `|c|^2`
+    /// report. Running this for the pilot and the payload against one
+    /// [`ChannelState`] is what makes the estimate predict the burst the
+    /// payload actually hits.
+    pub fn transmit_csi_stateful_into(
+        &self,
+        symbols: &[Complex],
+        state: &mut ChannelState,
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut Vec<Complex>,
+        csi: &mut Vec<f64>,
+    ) {
+        self.stateful_leg(symbols, state, rng, scratch, out, Some(csi));
+    }
+
+    fn stateful_leg(
+        &self,
+        symbols: &[Complex],
+        state: &mut ChannelState,
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut Vec<Complex>,
+        mut csi: Option<&mut Vec<f64>>,
+    ) {
+        let n = symbols.len();
+        out.clear();
+        out.reserve(n);
+        if let Some(c) = csi.as_deref_mut() {
+            c.clear();
+            c.reserve(n);
+        }
+        self.stateful_gains_into(state, n, &mut scratch.gains);
+        match self.cfg.rng_version {
+            RngVersion::V2Batched => {
+                scratch.z.resize(2 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                let ns = (self.sigma2 * 0.5).sqrt();
+                for (i, &s) in symbols.iter().enumerate() {
+                    let h = scratch.gains[i];
+                    let d = self.amp * h.norm_sq();
+                    let (nr, ni) = (ns * scratch.z[2 * i], ns * scratch.z[2 * i + 1]);
+                    out.push(Complex::new(
+                        s.re + (nr * h.re + ni * h.im) / d,
+                        s.im + (ni * h.re - nr * h.im) / d,
+                    ));
+                    if let Some(c) = csi.as_deref_mut() {
+                        c.push(self.amp * d); // amp^2 |h|^2 = |c|^2
+                    }
+                }
+            }
+            RngVersion::V1 => {
+                for (i, &s) in symbols.iter().enumerate() {
+                    let c = scratch.gains[i].scale(self.amp);
+                    let nz = rng.cn_v(RngVersion::V1, self.sigma2);
+                    out.push((c * s + nz).div(c));
+                    if let Some(cs) = csi.as_deref_mut() {
+                        cs.push(c.norm_sq());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Derived Gilbert–Elliott chain constants (see [`Channel::ge_params`]).
+struct GeParams {
+    p_g2b: f64,
+    p_b2g: f64,
+    pi_bad: f64,
+    a_good: f64,
+    a_bad: f64,
+}
+
+/// Persistent Zheng–Xiao oscillator bank: M in-phase/quadrature phasors
+/// plus their per-symbol rotation tables. The stateless generator builds
+/// a fresh bank per transmission; [`ChannelState`] keeps one alive so the
+/// Clarke autocorrelation continues across pilot/payload/round
+/// boundaries.
+#[derive(Clone, Debug)]
+struct JakesOsc {
+    ci: [f64; JAKES_M],
+    si: [f64; JAKES_M],
+    cq: [f64; JAKES_M],
+    sq: [f64; JAKES_M],
+    ric: [f64; JAKES_M],
+    ris: [f64; JAKES_M],
+    rqc: [f64; JAKES_M],
+    rqs: [f64; JAKES_M],
+    norm: f64,
+}
+
+impl JakesOsc {
+    /// Draw order (theta, then the in-phase and quadrature phase per
+    /// sinusoid) is exactly the pre-refactor generator's stream — the
+    /// Jakes golden pins depend on it.
+    fn new(fd: f64, rng: &mut Rng) -> Self {
         use std::f64::consts::PI;
-        let fd = self.cfg.doppler_norm.max(0.0);
         let theta = rng.uniform(-PI, PI);
-        let norm = (1.0 / JAKES_M as f64).sqrt();
-        let (mut ci, mut si) = ([0.0; JAKES_M], [0.0; JAKES_M]);
-        let (mut cq, mut sq) = ([0.0; JAKES_M], [0.0; JAKES_M]);
-        let (mut ric, mut ris) = ([0.0; JAKES_M], [0.0; JAKES_M]);
-        let (mut rqc, mut rqs) = ([0.0; JAKES_M], [0.0; JAKES_M]);
+        let mut o = JakesOsc {
+            ci: [0.0; JAKES_M],
+            si: [0.0; JAKES_M],
+            cq: [0.0; JAKES_M],
+            sq: [0.0; JAKES_M],
+            ric: [0.0; JAKES_M],
+            ris: [0.0; JAKES_M],
+            rqc: [0.0; JAKES_M],
+            rqs: [0.0; JAKES_M],
+            norm: (1.0 / JAKES_M as f64).sqrt(),
+        };
         for m in 0..JAKES_M {
             let alpha = (2.0 * PI * (m as f64 + 1.0) - PI + theta) / (4.0 * JAKES_M as f64);
             let (wi, wq) = (2.0 * PI * fd * alpha.cos(), 2.0 * PI * fd * alpha.sin());
             let (s0, c0) = rng.uniform(-PI, PI).sin_cos();
-            ci[m] = c0;
-            si[m] = s0;
+            o.ci[m] = c0;
+            o.si[m] = s0;
             let (s1, c1) = rng.uniform(-PI, PI).sin_cos();
-            cq[m] = c1;
-            sq[m] = s1;
+            o.cq[m] = c1;
+            o.sq[m] = s1;
             let (sw, cw) = wi.sin_cos();
-            ric[m] = cw;
-            ris[m] = sw;
+            o.ric[m] = cw;
+            o.ris[m] = sw;
             let (sw, cw) = wq.sin_cos();
-            rqc[m] = cw;
-            rqs[m] = sw;
+            o.rqc[m] = cw;
+            o.rqs[m] = sw;
         }
-        for _ in 0..n {
-            let (mut hi, mut hq) = (0.0, 0.0);
-            for m in 0..JAKES_M {
-                hi += ci[m];
-                hq += cq[m];
-                let (c, s) = (ci[m], si[m]);
-                ci[m] = c * ric[m] - s * ris[m];
-                si[m] = s * ric[m] + c * ris[m];
-                let (c, s) = (cq[m], sq[m]);
-                cq[m] = c * rqc[m] - s * rqs[m];
-                sq[m] = s * rqc[m] + c * rqs[m];
+        o
+    }
+
+    /// Emit the gain at the current symbol time, then rotate every
+    /// oscillator one symbol forward. The sum-before-rotate order is the
+    /// pre-refactor per-symbol loop's, bit for bit.
+    #[inline]
+    fn next(&mut self) -> Complex {
+        let (mut hi, mut hq) = (0.0, 0.0);
+        for m in 0..JAKES_M {
+            hi += self.ci[m];
+            hq += self.cq[m];
+            let (c, s) = (self.ci[m], self.si[m]);
+            self.ci[m] = c * self.ric[m] - s * self.ris[m];
+            self.si[m] = s * self.ric[m] + c * self.ris[m];
+            let (c, s) = (self.cq[m], self.sq[m]);
+            self.cq[m] = c * self.rqc[m] - s * self.rqs[m];
+            self.sq[m] = s * self.rqc[m] + c * self.rqs[m];
+        }
+        Complex::new(self.norm * hi, self.norm * hq)
+    }
+
+    /// Rotate one symbol forward without emitting — the fast-forward
+    /// behind [`ChannelState::advance`]. The sum in [`JakesOsc::next`]
+    /// only reads state, so skipping it is bit-exact.
+    #[inline]
+    fn step(&mut self) {
+        for m in 0..JAKES_M {
+            let (c, s) = (self.ci[m], self.si[m]);
+            self.ci[m] = c * self.ric[m] - s * self.ris[m];
+            self.si[m] = s * self.ric[m] + c * self.ris[m];
+            let (c, s) = (self.cq[m], self.sq[m]);
+            self.cq[m] = c * self.rqc[m] - s * self.rqs[m];
+            self.sq[m] = s * self.rqc[m] + c * self.rqs[m];
+        }
+    }
+}
+
+/// Persistent per-client fading process — the coherence handle behind
+/// `coherence = link|round`. Owns every piece of cross-call channel
+/// memory (Jakes oscillator phases, the Gilbert–Elliott Markov state,
+/// the Block residual gain) plus a **private process RNG**: fading
+/// evolution draws from it and never from the payload/pilot noise
+/// streams, so enabling coherence perturbs the fading realization only.
+///
+/// Determinism: a state is advanced exclusively by the calls made
+/// against it, in order — the coordinator threads one per client through
+/// the consumer side of the delivery ring (exactly like `PolicyState`),
+/// so traces stay bit-identical under any worker/shard count.
+#[derive(Clone, Debug)]
+pub struct ChannelState {
+    /// Private process RNG (seed it from a dedicated substream, e.g.
+    /// `rng.substream("fade", client, 0)`).
+    rng: Rng,
+    /// Lazily initialized on first use against a [`Channel`] (initial
+    /// draws depend on the scenario config).
+    started: bool,
+    jakes: Option<JakesOsc>,
+    /// Gilbert–Elliott Markov state (`true` = Bad).
+    bad: bool,
+    /// Block-fading residual gain and the symbols already spent in it.
+    block_h: Complex,
+    block_pos: usize,
+}
+
+impl ChannelState {
+    pub fn new(process_rng: Rng) -> Self {
+        ChannelState {
+            rng: process_rng,
+            started: false,
+            jakes: None,
+            bad: false,
+            block_h: Complex::new(1.0, 0.0),
+            block_pos: 0,
+        }
+    }
+
+    /// First-use initialization: the scenario's per-realization draws
+    /// (Jakes angles/phases, the GE stationary initial state, the first
+    /// Block gain), identical to the stateless generator's prologue but
+    /// consumed from the process RNG.
+    fn ensure_started(&mut self, ch: &Channel) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        match ch.cfg.fading {
+            Fading::Jakes => {
+                self.jakes =
+                    Some(JakesOsc::new(ch.cfg.doppler_norm.max(0.0), &mut self.rng));
             }
-            out.push(Complex::new(norm * hi, norm * hq));
+            Fading::GilbertElliott => {
+                self.bad = self.rng.f64() < ch.ge_params().pi_bad;
+            }
+            Fading::Block => {
+                self.block_h = self.rng.cn_v(ch.cfg.rng_version, 1.0);
+                self.block_pos = 0;
+            }
+            Fading::Fast | Fading::Rician | Fading::None => {}
+        }
+    }
+
+    /// Fast-forward the fading process by `symbols` symbol periods
+    /// without generating gains — inter-transmission gaps (e.g. the
+    /// airtime of a reliable-arm burst whose coded leg stays stateless).
+    /// Consumes the process RNG exactly as generating those gains would,
+    /// so `advance(k)` then fading `n` symbols is bit-identical to
+    /// fading `k + n` and keeping the tail (pinned in the unit tests).
+    pub fn advance(&mut self, ch: &Channel, symbols: usize) {
+        self.ensure_started(ch);
+        let v = ch.cfg.rng_version;
+        match ch.cfg.fading {
+            Fading::None => {}
+            Fading::Fast => {
+                for _ in 0..symbols {
+                    self.rng.cn_v(v, 1.0);
+                }
+            }
+            Fading::Rician => {
+                for _ in 0..symbols {
+                    self.rng.normal_v(v);
+                    self.rng.normal_v(v);
+                }
+            }
+            Fading::Block => {
+                let bl = ch.cfg.block_len.max(1);
+                for _ in 0..symbols {
+                    if self.block_pos == bl {
+                        self.block_h = self.rng.cn_v(v, 1.0);
+                        self.block_pos = 0;
+                    }
+                    self.block_pos += 1;
+                }
+            }
+            Fading::Jakes => {
+                let osc = self.jakes.as_mut().expect("started above");
+                for _ in 0..symbols {
+                    osc.step();
+                }
+            }
+            Fading::GilbertElliott => {
+                let p = ch.ge_params();
+                for _ in 0..symbols {
+                    let u = self.rng.f64();
+                    self.bad = if self.bad { u >= p.p_b2g } else { u < p.p_g2b };
+                }
+            }
         }
     }
 }
@@ -906,9 +1321,13 @@ mod tests {
             let est_db = lin_to_db(est / trials as f64);
             assert!((est_db - 10.0).abs() < 0.5, "{fading:?}: {est_db} dB");
         }
-        // Degenerate input: empty CSI must not divide by zero.
+        // Degenerate input: empty CSI must not divide by zero, and the
+        // sign is load-bearing — it must be NEGATIVE infinity ("no
+        // information" => below every finite enter threshold => the
+        // policy falls back to the reliable arm). `is_infinite()` alone
+        // would also pass for +inf, i.e. the opposite arm decision.
         let ch = Channel::new(ChannelConfig::with_snr(10.0));
-        assert!(ch.csi_effective_snr_db(&[]).is_infinite());
+        assert_eq!(ch.csi_effective_snr_db(&[]), f64::NEG_INFINITY);
     }
 
     #[test]
@@ -938,6 +1357,145 @@ mod tests {
             / eq.len() as f64;
         let expect = cfg.noise_power() / c2;
         assert!((var / expect - 1.0).abs() < 0.02, "{var} vs {expect}");
+    }
+
+    #[test]
+    fn stateful_gains_continue_one_process_across_calls() {
+        // Splitting a realization across calls must be invisible: one
+        // state generating k then n gains equals a twin state generating
+        // k + n in one call, bit for bit — for every scenario and both
+        // RNG versions. This is the coherence property itself: the
+        // pilot (first call) and payload (second call) share a process.
+        let root = Rng::new(301);
+        for version in RngVersion::ALL {
+            for fading in Fading::ALL {
+                let cfg = ChannelConfig {
+                    fading,
+                    block_len: 48,
+                    rng_version: version,
+                    ..ChannelConfig::with_snr(10.0)
+                };
+                let ch = Channel::new(cfg);
+                let seed = root.substream("coh", fading as u64, 0);
+                let mut a = ChannelState::new(seed.clone());
+                let mut b = ChannelState::new(seed);
+                let (mut ga, mut gb, mut tail) = (Vec::new(), Vec::new(), Vec::new());
+                ch.stateful_gains_into(&mut a, 100, &mut ga);
+                ch.stateful_gains_into(&mut a, 150, &mut tail);
+                ga.extend_from_slice(&tail);
+                ch.stateful_gains_into(&mut b, 250, &mut gb);
+                assert_eq!(ga.len(), gb.len());
+                for (i, (x, y)) in ga.iter().zip(&gb).enumerate() {
+                    assert_eq!(x.re.to_bits(), y.re.to_bits(), "{fading:?} {version:?} {i}");
+                    assert_eq!(x.im.to_bits(), y.im.to_bits(), "{fading:?} {version:?} {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_is_bit_exact_fast_forward() {
+        // advance(k) then n gains == k + n gains keeping the tail.
+        let root = Rng::new(302);
+        for version in RngVersion::ALL {
+            for fading in Fading::ALL {
+                let cfg = ChannelConfig {
+                    fading,
+                    block_len: 48,
+                    rng_version: version,
+                    ..ChannelConfig::with_snr(10.0)
+                };
+                let ch = Channel::new(cfg);
+                let seed = root.substream("coh", fading as u64, 1);
+                let mut a = ChannelState::new(seed.clone());
+                let mut b = ChannelState::new(seed);
+                let (k, n) = (137, 200);
+                let (mut full, mut tail) = (Vec::new(), Vec::new());
+                ch.stateful_gains_into(&mut a, k + n, &mut full);
+                b.advance(&ch, k);
+                ch.stateful_gains_into(&mut b, n, &mut tail);
+                for (i, (x, y)) in full[k..].iter().zip(&tail).enumerate() {
+                    assert_eq!(x.re.to_bits(), y.re.to_bits(), "{fading:?} {version:?} {i}");
+                    assert_eq!(x.im.to_bits(), y.im.to_bits(), "{fading:?} {version:?} {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stateful_leg_noise_comes_from_caller_stream_only() {
+        // The coherence contract: the stateful legs draw fading from the
+        // state's process RNG and noise from the caller's stream. Two
+        // transmissions with identical caller RNGs but different process
+        // seeds must consume the caller stream identically, and the CSI
+        // report must be untouched by the noise (pure |c|^2).
+        let cfg = ChannelConfig {
+            fading: Fading::GilbertElliott,
+            rng_version: RngVersion::V2Batched,
+            ..ChannelConfig::with_snr(10.0)
+        };
+        let ch = Channel::new(cfg);
+        let syms = vec![Complex::new(1.0, 0.0); 500];
+        let root = Rng::new(303);
+        let (mut eq, mut csi) = (Vec::new(), Vec::new());
+        let mut ends = Vec::new();
+        for ps in 0..2u64 {
+            let mut state = ChannelState::new(root.substream("fade", ps, 0));
+            let mut nrng = root.substream("noise", 0, 0);
+            let mut scratch = ChannelScratch::new();
+            ch.transmit_csi_stateful_into(&syms, &mut state, &mut nrng, &mut scratch, &mut eq, &mut csi);
+            assert_eq!(csi.len(), syms.len());
+            // GE gains are real: csi is amp^2 * a^2, one of two levels.
+            ends.push(nrng.next_u64());
+        }
+        assert_eq!(ends[0], ends[1], "noise stream position must not depend on the process seed");
+        // And a stateless transmission never touches a process RNG at
+        // all: default coherence is Stateless.
+        assert_eq!(ChannelConfig::default().coherence, Coherence::Stateless);
+        assert_eq!(Coherence::parse("link"), Some(Coherence::Link));
+        assert_eq!(Coherence::parse("round"), Some(Coherence::Round));
+        assert_eq!(Coherence::parse("stateless"), Some(Coherence::Stateless));
+        assert_eq!(Coherence::parse("bogus"), None);
+        for c in Coherence::ALL {
+            assert_eq!(Coherence::parse(c.name()), Some(c));
+        }
+    }
+
+    #[test]
+    fn stateful_jakes_matches_stateless_draws_and_ge_walk_continues() {
+        // Seeding a state with the same stream the stateless generator
+        // would consume must reproduce its gains exactly (the bank and
+        // the one-shot generator share JakesOsc), and a slow GE chain
+        // must keep its state across calls (sojourn >> call length).
+        let cfg = ChannelConfig { fading: Fading::Jakes, ..ChannelConfig::with_snr(10.0) };
+        let ch = Channel::new(cfg);
+        let mut r1 = Rng::new(304);
+        let mut stateless = Vec::new();
+        ch.fading_gains_into(300, &mut r1, RngVersion::V1, &mut stateless);
+        let mut state = ChannelState::new(Rng::new(304));
+        let mut stateful = Vec::new();
+        ch.stateful_gains_into(&mut state, 300, &mut stateful);
+        for (x, y) in stateless.iter().zip(&stateful) {
+            assert_eq!(x.re.to_bits(), y.re.to_bits());
+            assert_eq!(x.im.to_bits(), y.im.to_bits());
+        }
+        // Slow GE: with p_g2b = p_b2g = 1e-6, 3 calls x 200 symbols stay
+        // in the initial state with overwhelming probability.
+        let slow = ChannelConfig {
+            fading: Fading::GilbertElliott,
+            ge_p_g2b: 1e-6,
+            ge_p_b2g: 1e-6,
+            ..ChannelConfig::with_snr(10.0)
+        };
+        let chs = Channel::new(slow);
+        let mut st = ChannelState::new(Rng::new(305));
+        let mut first = Vec::new();
+        chs.stateful_gains_into(&mut st, 200, &mut first);
+        for _ in 0..2 {
+            let mut again = Vec::new();
+            chs.stateful_gains_into(&mut st, 200, &mut again);
+            assert_eq!(again[0].re.to_bits(), first[0].re.to_bits());
+        }
     }
 
     #[test]

@@ -25,7 +25,8 @@ const VALUE_FLAGS: &[&str] = &[
     "out", "config", "set", "snr", "snr-list", "rounds", "clients", "mode",
     "scheme", "modulation", "seed", "bits", "points", "target", "lr",
     "eval-every", "participants", "artifacts", "data-dir", "batch", "depth",
-    "fading", "rician-k", "doppler", "rng-version", "agg-shards",
+    "fading", "rician-k", "doppler", "rng-version", "coherence",
+    "ge-p-g2b", "ge-p-b2g", "agg-shards",
     "pipeline-depth", "parallel-clients", "adaptive-enter", "adaptive-exit",
     "pilots", "payloads", "floats", "max-retx", "deadline", "fault-dropout",
     "fault-straggle", "fault-straggle-max", "fault-corrupt",
@@ -140,6 +141,15 @@ mod tests {
         assert_eq!(a.opt_parse::<f64>("adaptive-enter").unwrap(), Some(11.0));
         assert_eq!(a.opt_parse::<f64>("adaptive-exit").unwrap(), Some(8.0));
         assert_eq!(a.opt_parse::<usize>("pilots").unwrap(), Some(32));
+    }
+
+    #[test]
+    fn channel_flags_take_values() {
+        let a = parse("run --fading ge --coherence link --ge-p-g2b 0.001 --ge-p-b2g 0.05");
+        assert_eq!(a.opt("fading"), Some("ge"));
+        assert_eq!(a.opt("coherence"), Some("link"));
+        assert_eq!(a.opt_parse::<f64>("ge-p-g2b").unwrap(), Some(0.001));
+        assert_eq!(a.opt_parse::<f64>("ge-p-b2g").unwrap(), Some(0.05));
     }
 
     #[test]

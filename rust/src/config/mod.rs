@@ -6,7 +6,7 @@
 
 pub mod parser;
 
-use crate::channel::{ChannelConfig, Fading};
+use crate::channel::{ChannelConfig, Coherence, Fading};
 use crate::faults::{FaultConfig, QuarantinePolicy};
 use crate::fec::{ArqConfig, DecoderKind};
 use crate::modem::Modulation;
@@ -57,6 +57,13 @@ pub struct ExperimentConfig {
     pub ge_p_b2g: f64,
     /// Gilbert–Elliott bad-state power gain in dB (negative = deep fade).
     pub ge_bad_db: f64,
+    /// Temporal fading coherence: `stateless` (default — every
+    /// transmission and pilot draws an independent realization, bit-exact
+    /// with pre-coherence builds), `link` (pilot and payload of one
+    /// transmission share a fading process), or `round` (the process
+    /// additionally persists across a client's rounds — the coordinator
+    /// threads one [`crate::channel::ChannelState`] per client).
+    pub coherence: Coherence,
     /// Gaussian sampler version: `v1` replays the seed bitstream
     /// bit-exactly (the published figures were generated on it),
     /// `v2_batched` (default) is the fast batched ziggurat engine
@@ -172,6 +179,7 @@ impl Default for ExperimentConfig {
             ge_p_g2b: ch.ge_p_g2b,
             ge_p_b2g: ch.ge_p_b2g,
             ge_bad_db: ch.ge_bad_db,
+            coherence: ch.coherence,
             // Experiments default to the batched engine (ROADMAP
             // follow-on, flipped after PR 3); `ChannelConfig::default`
             // deliberately stays `v1` so the low-level golden pins and
@@ -292,6 +300,12 @@ impl ExperimentConfig {
             }
             "ge_bad_db" | "channel.ge_bad_db" => {
                 self.ge_bad_db = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "coherence" | "channel.coherence" => {
+                self.coherence = v
+                    .as_str()
+                    .and_then(Coherence::parse)
+                    .ok_or_else(|| bad(key, v))?
             }
             "rng_version" | "rng.version" | "channel.rng_version" => {
                 self.rng_version = v
@@ -423,10 +437,22 @@ impl ExperimentConfig {
                 self.doppler_norm
             )));
         }
-        for (name, p) in [("ge_p_g2b", self.ge_p_g2b), ("ge_p_b2g", self.ge_p_b2g)] {
-            if !(0.0..=1.0).contains(&p) || (name == "ge_p_b2g" && p == 0.0) {
-                return Err(Error::Config(format!("{name} {p} must be a probability")));
-            }
+        // GE probabilities are validated here, loudly, instead of being
+        // silently repaired in the per-symbol hot path (the hot-path
+        // clamps in `channel::Channel::ge_params` remain as
+        // defense-in-depth for configs built programmatically).
+        if !(0.0..=1.0).contains(&self.ge_p_g2b) {
+            return Err(Error::Config(format!(
+                "ge_p_g2b {} must be a probability in [0, 1]",
+                self.ge_p_g2b
+            )));
+        }
+        if !(self.ge_p_b2g > 0.0 && self.ge_p_b2g <= 1.0) {
+            return Err(Error::Config(format!(
+                "ge_p_b2g {} must be a probability in (0, 1] — 0 would trap the \
+                 chain in the Bad state forever",
+                self.ge_p_b2g
+            )));
         }
         if self.max_attempts == 0 {
             return Err(Error::Config(
@@ -498,6 +524,7 @@ impl ExperimentConfig {
             ge_p_b2g: self.ge_p_b2g,
             ge_bad_db: self.ge_bad_db,
             rng_version: self.rng_version,
+            coherence: self.coherence,
             ..Default::default()
         }
     }
@@ -663,6 +690,55 @@ mod tests {
             let o = vec![(k.to_string(), v.to_string())];
             assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
         }
+    }
+
+    #[test]
+    fn coherence_key_parses_and_defaults_to_stateless() {
+        // Default is the bit-exact legacy behavior and flows into the
+        // derived channel config.
+        let c = ExperimentConfig::default();
+        assert_eq!(c.coherence, Coherence::Stateless);
+        assert_eq!(c.channel().coherence, Coherence::Stateless);
+        // Bare and section-qualified spellings, plus aliases.
+        for (k, v, want) in [
+            ("coherence", "link", Coherence::Link),
+            ("coherence", "round", Coherence::Round),
+            ("coherence", "persistent", Coherence::Round),
+            ("coherence", "iid", Coherence::Stateless),
+            ("channel.coherence", "burst", Coherence::Link),
+        ] {
+            let o = vec![(k.to_string(), v.to_string())];
+            let c = ExperimentConfig::load(None, &o).unwrap();
+            assert_eq!(c.coherence, want, "{k}={v}");
+            assert_eq!(c.channel().coherence, want, "{k}={v}");
+        }
+        // Unknown modes are rejected loudly.
+        let o = vec![("coherence".to_string(), "psychic".to_string())];
+        assert!(ExperimentConfig::load(None, &o).is_err());
+    }
+
+    #[test]
+    fn ge_probability_validation_is_per_key_and_explains_itself() {
+        // Satellite: range checking lives in validate(), not a silent
+        // hot-path clamp. Each key gets its own one-line error.
+        for (k, v, needle) in [
+            ("ge_p_g2b", "1.5", "ge_p_g2b"),
+            ("ge_p_g2b", "-0.1", "[0, 1]"),
+            ("ge_p_b2g", "0", "Bad state forever"),
+            ("ge_p_b2g", "-1", "(0, 1]"),
+            ("ge_p_b2g", "1.01", "(0, 1]"),
+        ] {
+            let o = vec![(k.to_string(), v.to_string())];
+            let err = ExperimentConfig::load(None, &o).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "{k}={v}: {msg}");
+        }
+        // Boundary values inside the legal ranges still pass.
+        let o = vec![
+            ("ge_p_g2b".to_string(), "0".to_string()),
+            ("ge_p_b2g".to_string(), "1".to_string()),
+        ];
+        assert!(ExperimentConfig::load(None, &o).is_ok());
     }
 
     #[test]

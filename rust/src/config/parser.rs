@@ -18,6 +18,11 @@
 //!   to ECRT; must be `<= adaptive_enter_db` (hysteresis dead band;
 //!   both `+inf` forces fallback);
 //! * `adaptive_pilots`   — pilot symbols sounded per transmission.
+//!
+//! The `[channel]` section gained `coherence = "stateless" | "link" |
+//! "round"` (PR 7): how far one fading realization persists — see
+//! [`crate::channel::Coherence`]. Like every section key it rides the
+//! generic flattening below; no parser logic is coherence-specific.
 
 use crate::{Error, Result};
 
@@ -184,6 +189,22 @@ mod tests {
                 ("fl.agg_shards".into(), Value::Int(16)),
                 ("fl.pipeline_depth".into(), Value::Int(2)),
                 ("fl.parallel_clients".into(), Value::Int(0)),
+            ]
+        );
+    }
+
+    #[test]
+    fn channel_coherence_key_flattens() {
+        // `[channel] coherence` arrives as the dotted key
+        // `channel.coherence` for `ExperimentConfig::apply` — the string
+        // scalar is parsed by `Coherence::parse` at apply time.
+        let doc = "[channel]\nfading = \"ge\"\ncoherence = \"link\"\n";
+        let kv = parse(doc).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("channel.fading".into(), Value::Str("ge".into())),
+                ("channel.coherence".into(), Value::Str("link".into())),
             ]
         );
     }

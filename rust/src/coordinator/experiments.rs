@@ -2,7 +2,7 @@
 //! (see DESIGN.md §3 for the index). Shared by the CLI, the examples,
 //! and the benches so every entry point produces identical numbers.
 
-use crate::channel::Fading;
+use crate::channel::{ChannelState, Coherence, Fading};
 use crate::config::ExperimentConfig;
 use crate::metrics::{self, Trace};
 use crate::modem::{analysis, Modulation};
@@ -190,8 +190,11 @@ pub struct AdaptiveRow {
 /// `floats`-sized gradients through one [`Transport`] while threading
 /// the per-sequence [`PolicyState`] (so the adaptive hysteresis sees a
 /// burst *trace*, not isolated sends), and report damage, airtime, and
-/// the policy observables. Shared by `examples/adaptive_study.rs` and
-/// the CI adaptive-smoke step.
+/// the policy observables. Under `coherence = round` a per-cell
+/// [`ChannelState`] (seeded from `root.substream("coh", cell, 0)`) is
+/// additionally threaded through the delivery sequence, so consecutive
+/// payloads ride one evolving fading process. Shared by
+/// `examples/adaptive_study.rs` and the CI adaptive-smoke step.
 pub fn adaptive_link_sweep(
     base: &ExperimentConfig,
     fadings: &[Fading],
@@ -211,6 +214,11 @@ pub fn adaptive_link_sweep(
                 let t = Transport::new(cfg.transport());
                 let combo = (fi * snrs.len() + si) as u64;
                 let mut state = PolicyState::default();
+                // The cell's persistent fading process (`coherence =
+                // round` only): one per delivery sequence, mirroring the
+                // coordinator's per-client threading.
+                let mut coh = (t.cfg.channel.coherence == Coherence::Round)
+                    .then(|| ChannelState::new(root.substream("coh", combo, 0)));
                 let (mut sse, mut count) = (0.0f64, 0usize);
                 let mut seconds = 0.0f64;
                 let (mut approx, mut est_sum, mut est_n) = (0usize, 0.0f64, 0usize);
@@ -220,8 +228,14 @@ pub fn adaptive_link_sweep(
                         .map(|_| grng.normal_scaled(0.0, 0.05) as f32)
                         .collect();
                     let mut crng = root.substream("chan", combo, p as u64);
-                    let rep =
-                        t.send_adaptive_into(&grads, &mut crng, state.arm, &mut scratch, &mut rx);
+                    let rep = t.send_coherent_into(
+                        &grads,
+                        &mut crng,
+                        state.arm,
+                        coh.as_mut(),
+                        &mut scratch,
+                        &mut rx,
+                    );
                     seconds += rep.seconds;
                     for (a, b) in rx.iter().zip(&grads) {
                         let d = (a - b) as f64;

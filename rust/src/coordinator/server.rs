@@ -56,6 +56,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::channel::{ChannelState, Coherence};
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::{
     resolve_shards, Contribution, ShardedAggregator, SkipReason,
@@ -139,6 +140,11 @@ struct PassSlot {
     fault: ClientFault,
     /// Floats flagged by the quarantine screen over `rx`.
     quarantined: usize,
+    /// The client's persistent fading process *after* this pass
+    /// (`coherence = round` only): the worker clones the client's state,
+    /// the transmission evolves the clone, and the consumer folds it
+    /// back in selection order. `None` when stateless/link or dropped.
+    coh: Option<ChannelState>,
 }
 
 /// Bounded in-order delivery ring between the client-pass workers and
@@ -300,6 +306,16 @@ pub struct FlServer<'e> {
     /// Reusable (selection index -> policy outcome) buffer for that
     /// fold-back.
     policy_updates: Vec<(usize, PolicyReport)>,
+    /// Per-client persistent fading process (`coherence = round` only;
+    /// empty otherwise). Threaded exactly like `policy`: workers clone a
+    /// client's state (immutable read of `self`), the transmission
+    /// evolves the clone, and the consumer folds evolved states back in
+    /// selection order — so stateful traces stay bit-deterministic under
+    /// any `parallel_clients` / `agg_shards`. Seeded per client from
+    /// `root.substream("coh", client, 0)`, never from payload streams.
+    coh: Vec<ChannelState>,
+    /// Reusable (client -> evolved state) buffer for that fold-back.
+    coh_updates: Vec<(usize, ChannelState)>,
 }
 
 impl<'e> FlServer<'e> {
@@ -315,6 +331,15 @@ impl<'e> FlServer<'e> {
         let params = engine.init_params(&mut init_rng);
         let transport = Transport::new(cfg.transport());
         let policy = vec![PolicyState::default(); clients.len()];
+        // Round coherence: one persistent fading process per client, on a
+        // dedicated substream (stateless/link configs never derive it).
+        let coh = if transport.cfg.channel.coherence == Coherence::Round {
+            (0..clients.len())
+                .map(|ci| ChannelState::new(root_rng.substream("coh", ci as u64, 0)))
+                .collect()
+        } else {
+            Vec::new()
+        };
         Ok(FlServer {
             cfg,
             engine,
@@ -330,6 +355,8 @@ impl<'e> FlServer<'e> {
             shard_stats: Vec::new(),
             policy,
             policy_updates: Vec::new(),
+            coh,
+            coh_updates: Vec::new(),
         })
     }
 
@@ -396,6 +423,7 @@ impl<'e> FlServer<'e> {
         // it, and the zero-fault default never derives it.
         slot.fault = self.cfg.faults().draw(&self.root_rng, ci, round);
         slot.quarantined = 0;
+        slot.coh = None;
         if slot.fault.dropout {
             // Dropped clients never compute or transmit; the consumer
             // skips them without touching the ledger or the policy.
@@ -438,11 +466,15 @@ impl<'e> FlServer<'e> {
         // The client's previous policy arm is the hysteresis memory the
         // adaptive transport thresholds against; `self.policy` is
         // read-only for the whole fan-out, so this is a safe concurrent
-        // read (updates land after the workers join).
-        slot.report = self.transport.send_adaptive_into(
+        // read (updates land after the workers join). The persistent
+        // fading process (`coherence = round`) rides the same pattern:
+        // clone the client's state, evolve the clone, fold back later.
+        slot.coh = (!self.coh.is_empty()).then(|| self.coh[ci].clone());
+        slot.report = self.transport.send_coherent_into(
             &slot.flat,
             &mut crng,
             self.policy[ci].arm,
+            slot.coh.as_mut(),
             scratch,
             &mut slot.rx,
         );
@@ -470,6 +502,7 @@ impl<'e> FlServer<'e> {
         agg: &mut ShardedAggregator,
         ledger: &mut Ledger,
         updates: &mut Vec<(usize, PolicyReport)>,
+        coh_updates: &mut Vec<(usize, ChannelState)>,
         deadline_used: &mut f64,
         sel_idx: usize,
         ci: usize,
@@ -478,6 +511,12 @@ impl<'e> FlServer<'e> {
     ) -> Result<()> {
         if slot.fault.dropout {
             return agg.skip(sel_idx, SkipReason::Dropout);
+        }
+        // Everything below transmitted — the client's persistent fading
+        // process (if any) evolved whether or not the pass survives the
+        // gates, so the fold-back happens here, unconditionally.
+        if let Some(coh) = &slot.coh {
+            coh_updates.push((ci, coh.clone()));
         }
         // Straggler inflation through the timing ledger: ×1.0 on the
         // zero-fault plan is bit-exact, so the default path is unchanged.
@@ -491,6 +530,17 @@ impl<'e> FlServer<'e> {
                 Multiplexing::Fdma => secs > deadline,
             };
             if missed {
+                // The straggler still occupied the shared channel: under
+                // TDMA its airtime counts against the round budget even
+                // though it arrived too late (otherwise later clients
+                // would be judged against a budget that pretends this
+                // transmission never happened and could jump the queue —
+                // once the budget is blown, every later client misses).
+                // The ledger stays uncharged: wall-clock round time is
+                // capped by the deadline, not extended by stragglers.
+                if self.cfg.mux == Multiplexing::Tdma {
+                    *deadline_used += secs;
+                }
                 agg.skip(sel_idx, SkipReason::Deadline)?;
                 if let Some(p) = slot.report.policy {
                     updates.push((ci, p));
@@ -543,6 +593,8 @@ impl<'e> FlServer<'e> {
         }
         let mut updates = std::mem::take(&mut self.policy_updates);
         updates.clear();
+        let mut coh_updates = std::mem::take(&mut self.coh_updates);
+        coh_updates.clear();
         let mut slots = std::mem::take(&mut self.slot_pool);
         // Two in-flight passes per worker: enough slack that workers
         // rarely stall on the in-order feeder, still O(workers) memory.
@@ -569,6 +621,7 @@ impl<'e> FlServer<'e> {
                         &mut agg,
                         &mut ledger,
                         &mut updates,
+                        &mut coh_updates,
                         &mut deadline_used,
                         i,
                         ci,
@@ -617,6 +670,7 @@ impl<'e> FlServer<'e> {
                             &mut agg,
                             &mut ledger,
                             &mut updates,
+                            &mut coh_updates,
                             &mut deadline_used,
                             i,
                             selected_ref[i],
@@ -648,6 +702,12 @@ impl<'e> FlServer<'e> {
             self.policy[ci].observe(&rep);
         }
         self.policy_updates = updates;
+        // Fold evolved fading processes forward the same way (`coherence
+        // = round`): each transmitting client's state, in selection order.
+        for (ci, state) in coh_updates.drain(..) {
+            self.coh[ci] = state;
+        }
+        self.coh_updates = coh_updates;
         run_res?;
 
         // Combine shards in shard order (fixed shape) and apply the

@@ -54,6 +54,9 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("parallel-clients", "parallel_clients"),
         ("fading", "fading"),
         ("rng-version", "rng_version"),
+        ("coherence", "coherence"),
+        ("ge-p-g2b", "ge_p_g2b"),
+        ("ge-p-b2g", "ge_p_b2g"),
         ("adaptive-enter", "adaptive_enter_db"),
         ("adaptive-exit", "adaptive_exit_db"),
         ("pilots", "adaptive_pilots"),

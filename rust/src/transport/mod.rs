@@ -50,7 +50,14 @@
 //! The adaptive policy's pilot sounding draws only from a derived
 //! substream and its per-client hysteresis memory is owned by the caller
 //! ([`policy::PolicyState`]), so the contract extends to
-//! `Scheme::Adaptive` unchanged.
+//! `Scheme::Adaptive` unchanged. Temporal fading coherence
+//! ([`crate::channel::Coherence`]) keeps the contract too: `stateless`
+//! (default) never constructs a [`ChannelState`] and is bit-exact with
+//! pre-coherence builds; `link` derives the per-transmission fading
+//! process from the caller's stream (`rng.substream("fade", ..)`); and
+//! `round` takes a caller-owned state via [`Transport::send_coherent_into`]
+//! — mutated only through `&mut`, so the coordinator can fold it forward
+//! in consumer order exactly like [`policy::PolicyState`].
 
 pub mod compress;
 pub mod mapping;
@@ -58,7 +65,7 @@ pub mod pipeline;
 pub mod policy;
 
 use crate::bits::{BitProtection, BitVec, BlockInterleaver};
-use crate::channel::{Channel, ChannelConfig, ChannelScratch};
+use crate::channel::{Channel, ChannelConfig, ChannelScratch, ChannelState, Coherence};
 use crate::fec::{ArqConfig, ArqScratch, CRC_BITS};
 use crate::math::Complex;
 use crate::modem::{Constellation, Modulation};
@@ -309,13 +316,79 @@ impl Transport {
         scratch: &mut TxScratch,
         out: &mut Vec<f32>,
     ) -> TxReport {
+        self.send_coherent_into(grads, rng, prev_arm, None, scratch, out)
+    }
+
+    /// [`Self::send_adaptive_into`] with the client's persistent fading
+    /// process (the `coherence = round` memory, owned by the caller — the
+    /// FL coordinator keeps one [`ChannelState`] per client and folds it
+    /// forward in consumer order, exactly like [`PolicyState`]). How the
+    /// argument is used depends on `ChannelConfig::coherence`:
+    ///
+    /// * `Stateless` — ignored; no state is ever constructed and every
+    ///   leg is bit-exact with pre-coherence builds.
+    /// * `Link` — ignored; a fresh process seeded from
+    ///   `rng.substream("fade", ..)` spans this transmission's pilot and
+    ///   payload, then is dropped.
+    /// * `Round` — `coh` carries the process across transmissions
+    ///   (`None` degrades to per-transmission `Link` semantics).
+    ///
+    /// The reliable (ECRT) composition stays stateless in every mode; a
+    /// persistent process is fast-forwarded past the coded burst via
+    /// [`ChannelState::advance`] over the frame's retransmission-free
+    /// symbol floor (derived from config + payload size only, so every
+    /// worker agrees).
+    pub fn send_coherent_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        prev_arm: Option<LinkArm>,
+        coh: Option<&mut ChannelState>,
+        scratch: &mut TxScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
+        let mut local;
+        let state: Option<&mut ChannelState> = match self.cfg.channel.coherence {
+            Coherence::Stateless => None,
+            Coherence::Link => {
+                local = ChannelState::new(rng.substream("fade", 0, 0));
+                Some(&mut local)
+            }
+            Coherence::Round => match coh {
+                Some(s) => Some(s),
+                None => {
+                    local = ChannelState::new(rng.substream("fade", 0, 0));
+                    Some(&mut local)
+                }
+            },
+        };
         match self.cfg.scheme {
             Scheme::Perfect => self.perfect_link().send_into(grads, out),
-            Scheme::Ecrt => self.reliable_link().send_into(grads, rng, &mut scratch.arq, out),
-            Scheme::Naive => self.naive_link().send_into(grads, rng, scratch, out),
-            Scheme::Proposed => self.proposed_link().send_into(grads, rng, scratch, out),
-            Scheme::Adaptive => self.send_policy_into(grads, rng, prev_arm, scratch, out),
+            Scheme::Ecrt => {
+                let report = self.reliable_link().send_into(grads, rng, &mut scratch.arq, out);
+                if let Some(s) = state {
+                    s.advance(&self.channel, self.coded_floor_symbols(grads.len()));
+                }
+                report
+            }
+            Scheme::Naive => self.naive_link().send_stateful_into(grads, rng, state, scratch, out),
+            Scheme::Proposed => {
+                self.proposed_link().send_stateful_into(grads, rng, state, scratch, out)
+            }
+            Scheme::Adaptive => self.send_policy_into(grads, rng, prev_arm, state, scratch, out),
         }
+    }
+
+    /// Retransmission-free symbol count of this frame's coded delivery —
+    /// the deterministic airtime floor a persistent fading process is
+    /// fast-forwarded by when the exact (stateless) leg carries the
+    /// payload.
+    fn coded_floor_symbols(&self, floats: usize) -> usize {
+        crate::fec::FecStats::one_shot(
+            floats * 32 + CRC_BITS,
+            self.cfg.modulation.bits_per_symbol(),
+        )
+        .symbols_sent
     }
 
     /// The `Scheme::Adaptive` delivery: sound the channel (unless the
@@ -329,6 +402,7 @@ impl Transport {
         grads: &[f32],
         rng: &mut Rng,
         prev_arm: Option<LinkArm>,
+        mut state: Option<&mut ChannelState>,
         scratch: &mut TxScratch,
         out: &mut Vec<f32>,
     ) -> TxReport {
@@ -350,11 +424,17 @@ impl Transport {
             match pol.forced_arm(prev_arm) {
                 Some(arm) => (arm, None, 0.0),
                 None => {
-                    let est = policy::estimate_effective_snr_db(
+                    // With a fading state present the pilot sounds the
+                    // *same* process the payload will then continue —
+                    // the estimate finally predicts the burst, not just
+                    // the scenario. Noise draws stay on the derived
+                    // pilot substream either way.
+                    let est = policy::estimate_effective_snr_db_coherent(
                         &self.con,
                         &self.channel,
                         pol.pilot_symbols,
                         rng,
+                        state.as_deref_mut(),
                         scratch,
                     );
                     (
@@ -366,9 +446,18 @@ impl Transport {
             }
         };
         let mut report = match arm {
-            LinkArm::Approx => self.proposed_link().send_into(grads, rng, scratch, out),
+            LinkArm::Approx => {
+                self.proposed_link().send_stateful_into(grads, rng, state, scratch, out)
+            }
             LinkArm::Fallback => {
-                self.reliable_link().send_into(grads, rng, &mut scratch.arq, out)
+                let report =
+                    self.reliable_link().send_into(grads, rng, &mut scratch.arq, out);
+                // The coded leg is stateless by design; keep a persistent
+                // process moving past the burst it carried.
+                if let Some(s) = state {
+                    s.advance(&self.channel, self.coded_floor_symbols(grads.len()));
+                }
+                report
             }
         };
         report.seconds += pilot_seconds;
@@ -779,6 +868,103 @@ mod tests {
         let (_, rep2) = Transport::new(c2).send(&g, &mut rng);
         assert_eq!(rep2.policy.unwrap().arm, LinkArm::Fallback);
         assert!(rep2.policy.unwrap().est_snr_db.is_some());
+    }
+
+    #[test]
+    fn stateless_coherence_ignores_a_passed_state_bit_exactly() {
+        // Under the default `coherence = stateless` a caller-supplied
+        // ChannelState must be structurally inert: never started, never
+        // advanced, and the delivery bit-identical to plain send_into.
+        use crate::rng::RngVersion;
+        let root = Rng::new(202);
+        let g = grads(&mut root.substream("g", 0, 0), 1500);
+        for version in RngVersion::ALL {
+            for scheme in Scheme::ALL {
+                let mut c = cfg(scheme, 10.0);
+                c.channel.fading = Fading::GilbertElliott;
+                c.channel.rng_version = version;
+                assert_eq!(c.channel.coherence, Coherence::Stateless);
+                let t = Transport::new(c);
+                let mut r1 = root.substream("chan", 0, 0);
+                let mut r2 = r1.clone();
+                let mut s1 = TxScratch::new();
+                let mut s2 = TxScratch::new();
+                let (mut o1, mut o2) = (Vec::new(), Vec::new());
+                let mut coh = ChannelState::new(root.substream("fade", 9, 9));
+                let rep1 = t.send_into(&g, &mut r1, &mut s1, &mut o1);
+                let rep2 =
+                    t.send_coherent_into(&g, &mut r2, None, Some(&mut coh), &mut s2, &mut o2);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&o1), bits(&o2), "{scheme:?} {version:?}");
+                assert_eq!(rep1.bit_errors, rep2.bit_errors);
+                assert_eq!(rep1.seconds, rep2.seconds);
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{scheme:?} {version:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn link_coherence_is_deterministic_and_bounded() {
+        // `coherence = link` derives its fading process from the caller's
+        // stream, so two identical calls agree bitwise; the protected
+        // composition's output stays bounded as ever.
+        let root = Rng::new(203);
+        let g = grads(&mut root.substream("g", 0, 0), 2000);
+        for scheme in [Scheme::Proposed, Scheme::Adaptive] {
+            let mut c = cfg(scheme, 10.0);
+            c.channel.fading = Fading::GilbertElliott;
+            c.channel.coherence = Coherence::Link;
+            let t = Transport::new(c);
+            let mut r1 = root.substream("chan", 1, 0);
+            let mut r2 = r1.clone();
+            let mut s1 = TxScratch::new();
+            let mut s2 = TxScratch::new();
+            let (mut o1, mut o2) = (Vec::new(), Vec::new());
+            let rep1 = t.send_coherent_into(&g, &mut r1, None, None, &mut s1, &mut o1);
+            let rep2 = t.send_coherent_into(&g, &mut r2, None, None, &mut s2, &mut o2);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&o1), bits(&o2), "{scheme:?}");
+            assert_eq!(rep1.bit_errors, rep2.bit_errors);
+            assert!(o1.iter().all(|x| x.is_finite() && x.abs() <= 1.0));
+        }
+    }
+
+    #[test]
+    fn round_coherence_state_advances_across_sends() {
+        // A caller-owned state under `coherence = round` must be consumed
+        // by each transmission: replaying the same payload with the same
+        // caller RNG but the evolved state yields a different channel
+        // realization than the first send saw.
+        let root = Rng::new(204);
+        let g = grads(&mut root.substream("g", 0, 0), 2000);
+        let mut c = cfg(Scheme::Proposed, 8.0);
+        c.channel.fading = Fading::GilbertElliott;
+        c.channel.coherence = Coherence::Round;
+        // Slow chain: state persists across whole transmissions.
+        c.channel.ge_p_g2b = 0.001;
+        c.channel.ge_p_b2g = 0.001;
+        let t = Transport::new(c);
+        let mut coh = ChannelState::new(root.substream("fade", 0, 0));
+        let mut fresh = coh.clone();
+        let mut scratch = TxScratch::new();
+        let (mut o1, mut o2, mut o3) = (Vec::new(), Vec::new(), Vec::new());
+        let mut r1 = root.substream("chan", 0, 0);
+        let mut r2 = r1.clone();
+        let rep1 = t.send_coherent_into(&g, &mut r1, None, Some(&mut coh), &mut scratch, &mut o1);
+        // Evolved state, identical caller stream: a different realization.
+        let _ = t.send_coherent_into(&g, &mut r2, None, Some(&mut coh), &mut scratch, &mut o2);
+        // Un-evolved clone, identical caller stream: the first send again.
+        let mut r3 = root.substream("chan", 0, 0);
+        let rep3 =
+            t.send_coherent_into(&g, &mut r3, None, Some(&mut fresh), &mut scratch, &mut o3);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&o1), bits(&o3), "replay from cloned state must agree bitwise");
+        assert_eq!(rep1.bit_errors, rep3.bit_errors);
+        assert_ne!(
+            bits(&o1),
+            bits(&o2),
+            "evolved state should see a different channel realization"
+        );
     }
 
     #[test]

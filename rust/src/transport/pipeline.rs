@@ -33,7 +33,7 @@ use crate::bits::{
     pack_f32s, pack_f32s_into, unpack_f32s_into, BitProtection, BitVec,
     BlockInterleaver, EXP_MASK_U64, FRAC_MASK_U64, SIGN_MASK_U64,
 };
-use crate::channel::Channel;
+use crate::channel::{Channel, ChannelState};
 use crate::fec::{self, ArqConfig, ArqScratch};
 use crate::modem::Constellation;
 use crate::rng::Rng;
@@ -179,6 +179,21 @@ impl ErroneousLink<'_> {
         s: &mut TxScratch,
         out: &mut Vec<f32>,
     ) -> TxReport {
+        self.send_stateful_into(grads, rng, None, s, out)
+    }
+
+    /// [`ErroneousLink::send_into`] with an optional persistent fading
+    /// process: `Some(state)` swaps the channel leg for the stateful one
+    /// (gains continue `state`'s realization, noise still comes from the
+    /// caller's `rng`); `None` is the bit-exact stateless leg.
+    pub fn send_stateful_into(
+        &self,
+        grads: &[f32],
+        rng: &mut Rng,
+        state: Option<&mut ChannelState>,
+        s: &mut TxScratch,
+        out: &mut Vec<f32>,
+    ) -> TxReport {
         // Stage: frame/pack.
         pack_f32s_into(grads, &mut s.tx_bits);
         let n = s.tx_bits.len();
@@ -205,8 +220,14 @@ impl ErroneousLink<'_> {
 
         // Stage: channel leg. Version dispatch lives in the channel:
         // V1 = seed-compatible scalar loop, V2Batched = the block
-        // channel-noise engine (see `crate::channel`).
-        self.channel.transmit_into(&s.symbols, rng, &mut s.chan, &mut s.eq);
+        // channel-noise engine (see `crate::channel`). A persistent
+        // state reroutes only the fading source, never the noise stream.
+        match state {
+            None => self.channel.transmit_into(&s.symbols, rng, &mut s.chan, &mut s.eq),
+            Some(st) => {
+                self.channel.transmit_stateful_into(&s.symbols, st, rng, &mut s.chan, &mut s.eq)
+            }
+        }
 
         // Stage: hard demod (the soft LLR variant of this stage lives on
         // the reliable link's min-sum decoder).

@@ -31,14 +31,30 @@
 //! the pilot entirely, so a forced-approx adaptive transmission consumes
 //! the RNG stream — and produces outputs — **bit-identically** to
 //! `Scheme::Proposed`, and forced-fallback to `Scheme::Ecrt` (pinned by
-//! `tests/adaptive_it.rs`). When the pilot does run, it draws from a
-//! *derived* substream (`rng.substream("pilot", ..)`), never from the
-//! payload stream, so the payload leg's realization is unaffected by the
-//! sounding. Pilot and payload therefore see independent channel
-//! realizations — the pilot slot precedes the payload burst and fading
-//! coherence across that boundary is not modeled.
+//! `tests/adaptive_it.rs`). When the pilot does run, its *noise* draws
+//! come from a derived substream (`rng.substream("pilot", ..)`), never
+//! from the payload stream.
+//!
+//! # Pilot/payload coherence
+//!
+//! What the pilot and payload *fading* share is set by the `coherence`
+//! config key ([`crate::channel::Coherence`]). Under the default
+//! `stateless` they are independent realizations — the estimate
+//! predicts the scenario, not the burst the payload actually hits.
+//! Under `link` the transport seeds one [`ChannelState`] per
+//! transmission (`rng.substream("fade", ..)`) and runs both the pilot's
+//! CSI leg and the payload's channel leg against it, so the estimate is
+//! genuinely predictive of the imminent burst; `round` additionally
+//! persists the state across a client's transmissions (the coordinator
+//! owns it, folded forward in consumer order like [`PolicyState`]), so
+//! the hysteresis dead band finally has real temporal correlation to
+//! exploit. The reliable (ECRT) leg's coded pipeline stays stateless in
+//! every mode — a persistent process is instead fast-forwarded past that
+//! burst via [`ChannelState::advance`]. An estimate of `-inf` dB (empty
+//! CSI) always resolves to the fallback arm: see
+//! [`Channel::csi_effective_snr_db`] and the invariant test below.
 
-use crate::channel::Channel;
+use crate::channel::{Channel, ChannelState};
 use crate::modem::Constellation;
 use crate::rng::Rng;
 pub use crate::timing::LinkArm;
@@ -210,16 +226,41 @@ pub fn estimate_effective_snr_db(
     rng: &Rng,
     s: &mut TxScratch,
 ) -> f64 {
+    estimate_effective_snr_db_coherent(con, channel, pilots, rng, None, s)
+}
+
+/// [`estimate_effective_snr_db`] with an optional persistent fading
+/// process: `Some(state)` sounds the *same* realization the payload will
+/// hit (the gains advance `state`; noise still comes from the derived
+/// pilot substream), `None` is the bit-exact stateless sounding.
+pub fn estimate_effective_snr_db_coherent(
+    con: &Constellation,
+    channel: &Channel,
+    pilots: usize,
+    rng: &Rng,
+    state: Option<&mut ChannelState>,
+    s: &mut TxScratch,
+) -> f64 {
     let mut prng = rng.substream("pilot", pilots as u64, 0);
     s.pilot_syms.clear();
     s.pilot_syms.resize(pilots, con.pilot_symbol());
-    channel.transmit_csi_into(
-        &s.pilot_syms,
-        &mut prng,
-        &mut s.chan,
-        &mut s.pilot_eq,
-        &mut s.pilot_csi,
-    );
+    match state {
+        None => channel.transmit_csi_into(
+            &s.pilot_syms,
+            &mut prng,
+            &mut s.chan,
+            &mut s.pilot_eq,
+            &mut s.pilot_csi,
+        ),
+        Some(st) => channel.transmit_csi_stateful_into(
+            &s.pilot_syms,
+            st,
+            &mut prng,
+            &mut s.chan,
+            &mut s.pilot_eq,
+            &mut s.pilot_csi,
+        ),
+    }
     channel.csi_effective_snr_db(&s.pilot_csi)
 }
 
@@ -286,6 +327,22 @@ mod tests {
         assert!(nan_d.validate().is_err());
         let ok = AdaptiveConfig { deadline_slice_s: 0.25, ..Default::default() };
         assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn neg_inf_estimate_always_resolves_to_fallback() {
+        // `Channel::csi_effective_snr_db(&[])` is pinned to exactly -inf
+        // (never +inf); the policy invariant that makes that sign
+        // load-bearing: an unsoundable channel must take the exact arm,
+        // from every previous state — including a client already on
+        // approx (the -inf estimate is below any finite exit threshold).
+        let p = AdaptiveConfig::default();
+        for prev in [None, Some(LinkArm::Approx), Some(LinkArm::Fallback)] {
+            assert_eq!(p.decide(prev, f64::NEG_INFINITY), LinkArm::Fallback);
+        }
+        // The opposite sign would flip the decision for fresh/fallback
+        // clients — the ambiguity the empty-CSI test used to permit.
+        assert_eq!(p.decide(None, f64::INFINITY), LinkArm::Approx);
     }
 
     #[test]

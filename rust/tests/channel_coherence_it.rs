@@ -1,0 +1,283 @@
+//! Acceptance tests for the stateful coherent channel (`coherence =
+//! stateless | link | round`):
+//!
+//! * `stateless` (the default) is pinned **bit-exact** against the
+//!   pre-coherence delivery path for every `Scheme` x `RngVersion`, even
+//!   when a live [`ChannelState`] is offered — the state must be
+//!   ignored, never started, and the caller's RNG cursor untouched.
+//! * `link` makes the pilot sound the very fading process the payload
+//!   then rides: on Gilbert–Elliott bursts the pilot's effective-SNR
+//!   estimate becomes statistically *predictive* of payload BER
+//!   (strong negative correlation), while `stateless` pilots — an
+//!   independent realization — predict nothing (correlation ~ 0).
+//! * the Jakes sum-of-sinusoids process *continues* across the
+//!   pilot/payload boundary: the ensemble autocorrelation of a
+//!   continued state tracks Clarke's J0(2 pi f_D tau) straight through
+//!   the boundary, where restarting the process decorrelates it.
+//! * `round` carries the process across transmissions (payload-BER
+//!   burst memory from one send to the next), which `link` by design
+//!   does not.
+
+use awc_fl::channel::{Channel, ChannelConfig, ChannelState, Coherence, Fading};
+use awc_fl::config::ExperimentConfig;
+use awc_fl::math::{bessel_j0, Complex};
+use awc_fl::rng::{Rng, RngVersion};
+use awc_fl::transport::{LinkArm, Scheme, Transport, TxReport, TxScratch};
+
+fn grads(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(0.0, 0.05) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let (mx, my) = (xs.iter().sum::<f64>() / n, ys.iter().sum::<f64>() / n);
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    cov / (vx * vy).sqrt().max(1e-300)
+}
+
+fn assert_reports_equal(a: &TxReport, b: &TxReport, label: &str) {
+    assert_eq!(a.seconds.to_bits(), b.seconds.to_bits(), "{label} seconds");
+    assert_eq!(a.payload_bits, b.payload_bits, "{label} payload_bits");
+    assert_eq!(a.symbols_sent, b.symbols_sent, "{label} symbols");
+    assert_eq!(a.bit_errors, b.bit_errors, "{label} bit_errors");
+    assert_eq!(a.errors_sign, b.errors_sign, "{label} errors_sign");
+    assert_eq!(a.errors_exp, b.errors_exp, "{label} errors_exp");
+    assert_eq!(a.errors_frac, b.errors_frac, "{label} errors_frac");
+    assert_eq!(a.corrupted_floats, b.corrupted_floats, "{label} corrupted");
+    assert_eq!(a.retransmissions, b.retransmissions, "{label} retx");
+}
+
+/// Transport config derived the way the coordinator derives it, so the
+/// pins cover the real `ExperimentConfig -> TransportConfig` plumbing.
+fn tcfg(
+    scheme: Scheme,
+    fading: Fading,
+    version: RngVersion,
+    coherence: Coherence,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        scheme,
+        fading,
+        snr_db: 14.0,
+        rng_version: version,
+        fade_block_symbols: 324,
+        max_attempts: 8,
+        coherence,
+        ..ExperimentConfig::default()
+    }
+}
+
+#[test]
+fn stateless_coherence_is_bit_identical_to_the_legacy_path() {
+    // The tentpole's zero-regression pin: with `coherence = stateless`
+    // (explicitly set, as the config key would) the full delivery — for
+    // every scheme, fading family of interest, and both RNG engines —
+    // is bit-identical to the legacy `send_into` path even when a live
+    // ChannelState is passed in, and the caller's RNG stream ends at
+    // the same cursor (no draw was ever routed through the state).
+    let root = Rng::new(0xC0_4E7);
+    let g = grads(&mut root.substream("g", 0, 0), 600);
+    for (fi, fading) in [Fading::GilbertElliott, Fading::Jakes, Fading::Block]
+        .into_iter()
+        .enumerate()
+    {
+        for (vi, version) in RngVersion::ALL.into_iter().enumerate() {
+            for scheme in Scheme::ALL {
+                let label = format!("{scheme:?} {fading:?} {version:?}");
+                let cfg = tcfg(scheme, fading, version, Coherence::Stateless);
+                let t = Transport::new(cfg.transport());
+                let mut r1 = root.substream("chan", (fi * 8 + vi) as u64, 0);
+                let mut r2 = r1.clone();
+                let mut state = ChannelState::new(root.substream("fade", 7, 7));
+                let (mut s1, mut s2) = (TxScratch::new(), TxScratch::new());
+                let (mut o1, mut o2) = (Vec::new(), Vec::new());
+                let ra = t.send_into(&g, &mut r1, &mut s1, &mut o1);
+                let rb =
+                    t.send_coherent_into(&g, &mut r2, None, Some(&mut state), &mut s2, &mut o2);
+                assert_eq!(bits(&o1), bits(&o2), "{label} floats diverged");
+                assert_reports_equal(&ra, &rb, &label);
+                assert_eq!(r1.next_u64(), r2.next_u64(), "{label} stream diverged");
+            }
+        }
+    }
+}
+
+/// Slow, strongly bimodal Gilbert–Elliott bursts: mean dwell 5000
+/// symbols (vs ~1000 symbols per pilot+payload), bad state 14 dB below
+/// good. The thresholds are dropped far below any reachable estimate so
+/// the policy *sounds every pass yet always picks the approximate arm* —
+/// isolating estimate quality from arm selection.
+fn predictive_cfg(coherence: Coherence) -> ExperimentConfig {
+    ExperimentConfig {
+        scheme: Scheme::Adaptive,
+        fading: Fading::GilbertElliott,
+        snr_db: 10.0,
+        ge_p_g2b: 2e-4,
+        ge_p_b2g: 2e-4,
+        ge_bad_db: -14.0,
+        adaptive_enter_db: -60.0,
+        adaptive_exit_db: -80.0,
+        adaptive_pilots: 32,
+        coherence,
+        ..ExperimentConfig::default()
+    }
+}
+
+fn pilot_vs_payload(coherence: Coherence, sends: u64) -> (Vec<f64>, Vec<f64>) {
+    let t = Transport::new(predictive_cfg(coherence).transport());
+    let root = Rng::new(0xBEE_F);
+    let g = grads(&mut root.substream("g", 0, 0), 60);
+    let mut scratch = TxScratch::new();
+    let mut rx = Vec::new();
+    let (mut ests, mut bers) = (Vec::new(), Vec::new());
+    for i in 0..sends {
+        let mut rng = root.substream("chan", i, coherence as u64);
+        let rep = t.send_into(&g, &mut rng, &mut scratch, &mut rx);
+        let pol = rep.policy.expect("adaptive reports policy");
+        assert_eq!(pol.arm, LinkArm::Approx, "thresholds force approx");
+        ests.push(pol.est_snr_db.expect("finite thresholds must sound"));
+        bers.push(rep.ber());
+    }
+    (ests, bers)
+}
+
+#[test]
+fn link_coherence_makes_the_pilot_predict_payload_ber_on_ge_bursts() {
+    // With `link` coherence the 32-symbol pilot rides the same GE chain
+    // as the 960-symbol payload: a low estimate means the payload is in
+    // (or entering) the deep burst, so estimate and BER are strongly
+    // anti-correlated. With `stateless` the pilot observes an
+    // *independent* chain realization and predicts nothing — the old
+    // behavior this PR exists to fix (kept available as the default for
+    // reproducibility).
+    let (est_l, ber_l) = pilot_vs_payload(Coherence::Link, 240);
+    let (est_s, ber_s) = pilot_vs_payload(Coherence::Stateless, 240);
+    // Both regimes visit both states (the estimates are bimodal).
+    for (label, ests) in [("link", &est_l), ("stateless", &est_s)] {
+        let lo = ests.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = ests.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(hi - lo > 6.0, "{label}: estimates not bimodal ({lo}..{hi})");
+    }
+    let c_link = pearson(&est_l, &ber_l);
+    let c_stateless = pearson(&est_s, &ber_s);
+    assert!(
+        c_link < -0.5,
+        "link pilot must predict payload damage: corr {c_link}"
+    );
+    assert!(
+        c_stateless.abs() < 0.25,
+        "stateless pilot must stay uninformative: corr {c_stateless}"
+    );
+}
+
+#[test]
+fn jakes_process_continues_across_the_pilot_payload_boundary() {
+    // Ensemble autocorrelation across the boundary between two
+    // *continued* stateful generations must still track Clarke's
+    // spectrum, E[h(t) h*(t+tau)] = J0(2 pi f_D tau), exactly as if the
+    // gains had been drawn in one run — while restarting the process at
+    // the boundary (what `stateless` effectively does between pilot and
+    // payload) decorrelates the segments.
+    let fd = 0.02;
+    let c = ChannelConfig {
+        fading: Fading::Jakes,
+        snr_db: 10.0,
+        doppler_norm: fd,
+        rng_version: RngVersion::V2Batched,
+        ..Default::default()
+    };
+    let ch = Channel::new(c);
+    let root = Rng::new(0x1A_0E5);
+    let (reals, pilot, payload) = (256usize, 64usize, 512usize);
+    let lags = [10usize, 20, 40];
+    let mut acc = [0.0f64; 3];
+    let mut cnt = [0usize; 3];
+    let (mut restart_acc, mut restart_cnt) = (0.0f64, 0usize);
+    let mut power = 0.0f64;
+    let (mut g1, mut g2, mut gr) = (Vec::new(), Vec::new(), Vec::new());
+    for r in 0..reals {
+        let mut st = ChannelState::new(root.substream("fade", r as u64, 0));
+        ch.stateful_gains_into(&mut st, pilot, &mut g1);
+        ch.stateful_gains_into(&mut st, payload, &mut g2);
+        // Control: a *fresh* process for the second segment.
+        let mut st2 = ChannelState::new(root.substream("fade", r as u64, 1));
+        ch.stateful_gains_into(&mut st2, payload, &mut gr);
+        let all: Vec<Complex> = g1.iter().chain(g2.iter()).cloned().collect();
+        power += all.iter().map(|h| h.norm_sq()).sum::<f64>() / all.len() as f64;
+        for (k, &lag) in lags.iter().enumerate() {
+            // Only pairs that straddle the boundary: t < pilot <= t+lag.
+            for t in pilot.saturating_sub(lag)..pilot {
+                let (a, b) = (all[t], all[t + lag]);
+                acc[k] += a.re * b.re + a.im * b.im; // Re(a * conj(b))
+                cnt[k] += 1;
+            }
+        }
+        let lag = lags[0];
+        for t in pilot - lag..pilot {
+            let (a, b) = (g1[t], gr[t + lag - pilot]);
+            restart_acc += a.re * b.re + a.im * b.im;
+            restart_cnt += 1;
+        }
+    }
+    power /= reals as f64;
+    assert!((power - 1.0).abs() < 0.05, "E|h|^2 = {power}");
+    for (k, &lag) in lags.iter().enumerate() {
+        let emp = acc[k] / cnt[k] as f64 / power;
+        let theo = bessel_j0(2.0 * std::f64::consts::PI * fd * lag as f64);
+        assert!(
+            (emp - theo).abs() < 0.12,
+            "boundary lag {lag}: empirical {emp} vs J0 {theo}"
+        );
+    }
+    // Continuation is coherent where a restart is not.
+    let cont = acc[0] / cnt[0] as f64 / power;
+    let restart = restart_acc / restart_cnt as f64 / power;
+    assert!(cont > 0.4, "continued process decorrelated: {cont}");
+    assert!(restart.abs() < 0.2, "fresh process spuriously coherent: {restart}");
+}
+
+#[test]
+fn round_coherence_carries_burst_memory_across_sends_link_does_not() {
+    // With `round` coherence one GE chain (mean dwell ~5 sends) spans
+    // consecutive transmissions, so per-send BER is positively
+    // autocorrelated at lag 1. With `link` each send draws a fresh
+    // chain — consecutive BERs are independent.
+    let mk = |coherence| ExperimentConfig {
+        scheme: Scheme::Proposed,
+        fading: Fading::GilbertElliott,
+        snr_db: 10.0,
+        ge_p_g2b: 2e-4,
+        ge_p_b2g: 2e-4,
+        ge_bad_db: -14.0,
+        coherence,
+        ..ExperimentConfig::default()
+    };
+    let root = Rng::new(0x0DD_5);
+    let g = grads(&mut root.substream("g", 0, 0), 60);
+    let ber_seq = |coherence: Coherence| -> Vec<f64> {
+        let t = Transport::new(mk(coherence).transport());
+        let mut coh = (coherence == Coherence::Round)
+            .then(|| ChannelState::new(root.substream("coh", 0, coherence as u64)));
+        let mut scratch = TxScratch::new();
+        let mut rx = Vec::new();
+        (0..200u64)
+            .map(|i| {
+                let mut rng = root.substream("chan", i, coherence as u64);
+                t.send_coherent_into(&g, &mut rng, None, coh.as_mut(), &mut scratch, &mut rx)
+                    .ber()
+            })
+            .collect()
+    };
+    let round = ber_seq(Coherence::Round);
+    let link = ber_seq(Coherence::Link);
+    let lag1 = |s: &[f64]| pearson(&s[..s.len() - 1], &s[1..]);
+    let (cr, cl) = (lag1(&round), lag1(&link));
+    assert!(cr > 0.3, "round coherence lost burst memory: lag-1 corr {cr}");
+    assert!(cl.abs() < 0.25, "link coherence leaked state across sends: {cl}");
+}

@@ -422,6 +422,120 @@ fn round_deadline_excludes_stragglers_per_plan() {
 }
 
 #[test]
+fn tdma_deadline_budget_blown_cascades_to_every_later_client() {
+    // TDMA deadline gate: clients share one serial channel, so the gate
+    // tracks cumulative airtime in selection order. A client that misses
+    // the deadline still *occupied the channel* — its airtime must be
+    // charged to the shared budget (the bug this PR fixes: uncharged
+    // misses let later clients queue-jump a blown budget). The pinned
+    // law: once the budget is blown, every later client misses, so
+    // deadline_skipped == clients - (first-miss index), and the schedule
+    // is recomputable straight from the fault plan.
+    let plan = FaultConfig { straggle_p: 0.6, straggle_max: 4.0, ..Default::default() };
+    let (clients, rounds) = (9usize, 3usize);
+    let engine = small_engine();
+    let s = awc_fl::timing::AirtimeModel::default()
+        .burst_time((engine.manifest.num_params() * 32).div_ceil(2));
+    // Straggle factors live in [1, 4], so client 0 (airtime <= 4s) always
+    // feeds and the 9-client sum (>= 9s) always blows the budget: every
+    // round has a first miss at some index in 1..=4 — no seed search.
+    let deadline = 4.5 * s;
+    let seed = 21;
+    let mk = |workers: usize| {
+        let mut c = cfg(Scheme::Proposed, workers);
+        c.seed = seed;
+        c.fault_straggle = plan.straggle_p;
+        c.fault_straggle_max = plan.straggle_max;
+        c.round_deadline_s = deadline;
+        c.mux = awc_fl::timing::Multiplexing::Tdma;
+        c
+    };
+    let mut server = FlServer::from_config(mk(4), &engine).unwrap();
+    let root = Rng::new(seed);
+    for round in 0..rounds {
+        let out = server.run_round(round).unwrap();
+        // Recompute the gate from the plan: cumulative airtime including
+        // missed clients (they transmitted; the channel was busy).
+        let mut used = 0.0f64;
+        let mut first_miss = clients;
+        for ci in 0..clients {
+            let secs = s * plan.draw(&root, ci, round).straggle;
+            if used + secs > deadline && first_miss == clients {
+                first_miss = ci;
+            }
+            used += secs;
+        }
+        assert!(
+            (1..clients).contains(&first_miss),
+            "round {round}: construction guarantees a mid-pack first miss"
+        );
+        // The cascade: once blown, every later client misses.
+        assert_eq!(
+            out.deadline_skipped,
+            clients - first_miss,
+            "round {round}: cascade broken (first miss at {first_miss})"
+        );
+        assert_eq!(out.survivors, first_miss, "round {round}");
+        assert_eq!(out.dropped, 0);
+    }
+    // The charged budget is part of the determinism contract too: the
+    // parallel consumer must gate exactly like the serial loop.
+    let (serial_trace, serial_params) = run_cfg(mk(1));
+    for workers in [4, 0] {
+        let (t, p) = run_cfg(mk(workers));
+        assert_traces_bit_identical(&serial_trace, &t, &format!("tdma workers={workers}"));
+        assert_eq!(serial_params, p, "tdma workers={workers}: global model diverged");
+    }
+}
+
+#[test]
+fn round_coherence_traces_are_worker_and_shard_invariant() {
+    // Tentpole contract: `coherence = round` threads one ChannelState
+    // per client through the round loop exactly like PolicyState —
+    // workers read a snapshot, the consumer folds updates back in
+    // selection order — so traces and the global model stay bit-identical
+    // under any worker count and shard layout.
+    use awc_fl::channel::{Coherence, Fading};
+    for scheme in [Scheme::Proposed, Scheme::Adaptive] {
+        let mk = |workers: usize, shards: usize, coherence: Coherence| {
+            let mut c = cfg(scheme, workers);
+            c.fading = Fading::GilbertElliott;
+            c.snr_db = 10.0;
+            c.ge_p_g2b = 0.02;
+            c.ge_p_b2g = 0.02;
+            c.ge_bad_db = -14.0;
+            c.adaptive_enter_db = 10.0;
+            c.adaptive_exit_db = 5.0;
+            c.adaptive_pilots = 32;
+            c.max_attempts = 4;
+            c.agg_shards = shards;
+            c.coherence = coherence;
+            run_cfg(c)
+        };
+        let (base_trace, base_params) = mk(1, 1, Coherence::Round);
+        for (workers, shards) in [(2, 1), (4, 1), (0, 1), (1, 3), (4, 3), (4, 0)] {
+            let (t, p) = mk(workers, shards, Coherence::Round);
+            assert_traces_bit_identical(
+                &base_trace,
+                &t,
+                &format!("{scheme:?} round-coherence workers={workers} shards={shards}"),
+            );
+            assert_eq!(
+                base_params, p,
+                "{scheme:?} round-coherence workers={workers} shards={shards}: model diverged"
+            );
+        }
+        // Sanity: the persistent state actually changes the physics —
+        // a stateless run of the same config diverges.
+        let (_, stateless_params) = mk(1, 1, Coherence::Stateless);
+        assert_ne!(
+            base_params, stateless_params,
+            "{scheme:?}: round coherence was a no-op"
+        );
+    }
+}
+
+#[test]
 fn different_seeds_still_differ_in_parallel() {
     let engine = small_engine();
     let mut c1 = cfg(Scheme::Proposed, 4);
