@@ -17,9 +17,9 @@ mod harness;
 use awc_fl::bits::{pack_f32s, unpack_f32s, BitProtection, BitVec, BlockInterleaver};
 use awc_fl::channel::{Channel, ChannelConfig, ChannelScratch, ChannelState, Fading};
 use awc_fl::config::ExperimentConfig;
-use awc_fl::fec::LdpcCode;
+use awc_fl::fec::{DecoderScratch, LdpcCode};
 use awc_fl::math::Complex;
-use awc_fl::modem::{Constellation, Modulation};
+use awc_fl::modem::{Constellation, Modulation, SymbolPlanes};
 use awc_fl::rng::{Rng, RngVersion};
 use awc_fl::transport::{Scheme, Transport, TxScratch};
 use harness::{bench, black_box, report_throughput, Sink};
@@ -93,6 +93,23 @@ fn main() {
         black_box(con256.demodulate(&m, MODEL_BITS));
     });
     let tp = report_throughput("modem 256 (symbols)", syms256.len() as f64 * 2.0, &s);
+    sink.push(name, &s, Some(tp));
+
+    // Symbol-plane block modem (PR 8): the SoA modulate -> slice kernel
+    // the stateless erroneous leg runs — 64-QAM so the gray bit-plane
+    // arithmetic covers 3 bits per axis.
+    let con64 = Constellation::new(Modulation::Qam64);
+    let mut tx_planes = SymbolPlanes::new();
+    let mut sliced = BitVec::new();
+    con64.modulate_block(&bits, &mut tx_planes);
+    let nsym64 = tx_planes.len();
+    let name = "modem: slice 64-QAM block (1 model)";
+    let s = bench(name, 2, 20, || {
+        con64.modulate_block(black_box(&bits), &mut tx_planes);
+        con64.slice_block(&tx_planes, MODEL_BITS, &mut sliced);
+        black_box(&sliced);
+    });
+    let tp = report_throughput("modem 64 block (symbols)", nsym64 as f64 * 2.0, &s);
     sink.push(name, &s, Some(tp));
 
     // Channel: the batched V2 engine owns the headline record (same name
@@ -174,6 +191,20 @@ fn main() {
     let tp = report_throughput("interleave (bits)", MODEL_BITS as f64 * 2.0, &s);
     sink.push(name, &s, Some(tp));
 
+    // Table-free strided word-shuffle path (PR 8): a power-of-two spread
+    // takes the perfect-shuffle bit networks instead of permutation
+    // tables; reused buffers keep the record allocation-free.
+    let il32 = BlockInterleaver::new(MODEL_BITS.div_ceil(32), 32);
+    let (mut il_air, mut il_rx) = (BitVec::new(), BitVec::new());
+    let name = "bits: interleave word-shuffle (1 model)";
+    let s = bench(name, 2, 20, || {
+        il32.interleave_into(black_box(&bits), &mut il_air);
+        il32.deinterleave_into(&il_air, MODEL_BITS, &mut il_rx);
+        black_box(&il_rx);
+    });
+    let tp = report_throughput("interleave shuffle (bits)", MODEL_BITS as f64 * 2.0, &s);
+    sink.push(name, &s, Some(tp));
+
     // Pack / unpack / protect.
     let name = "bits: pack+unpack+protect (1 model)";
     let s = bench(name, 2, 20, || {
@@ -211,6 +242,18 @@ fn main() {
         }
     });
     let tp = report_throughput("ldpc decode (coded bits)", (code.n * 10) as f64, &s);
+    sink.push(name, &s, Some(tp));
+
+    // Layered kernel over a reused scratch (PR 8): the zero-alloc decode
+    // the ECRT ARQ leg actually runs.
+    let mut dec = DecoderScratch::new();
+    let name = "fec: min-sum 648 layered decode x10";
+    let s = bench(name, 2, 10, || {
+        for _ in 0..10 {
+            black_box(code.decode_min_sum_into(black_box(&llr), 30, &mut dec));
+        }
+    });
+    let tp = report_throughput("ldpc layered (coded bits)", (code.n * 10) as f64, &s);
     sink.push(name, &s, Some(tp));
 
     // Transport end-to-end per scheme (thread-local scratch via `send`).

@@ -16,10 +16,17 @@
 //!
 //! Packing and interleaving are word-parallel: floats enter the stream as
 //! bit-reversed 32-bit halves of `u64` words (two floats per word) and
-//! the interleaver walks precomputed permutation tables, assembling each
-//! output word in a register instead of issuing per-bit `get`/`set`
-//! calls. The per-bit originals survive under `#[cfg(test)]` as
-//! reference oracles.
+//! the interleaver assembles each output word in a register instead of
+//! issuing per-bit `get`/`set` calls. For power-of-two spreads (`cols` a
+//! power of two `<= 64`) the interleaver is table-free: a rectangular
+//! transpose with word-width a multiple of the stride is a perfect
+//! shuffle, so each output word is built from `log2(cols)` stages of
+//! bit compress/spread networks over whole source words — no permutation
+//! tables to build, fill, or chase through the cache. Non-power-of-two
+//! spreads (including the transport default of 37) keep the precomputed
+//! permutation tables via [`BlockInterleaver::new_table`], which also
+//! serves as the reference oracle for the shuffle path. The per-bit
+//! originals survive under `#[cfg(test)]` as reference oracles.
 
 pub mod stream;
 
@@ -116,14 +123,19 @@ pub fn unpack_f32s_into(bv: &BitVec, out: &mut Vec<f32>) {
 /// puts every bit of an air-domain burst of length <= `rows` into a
 /// distinct float.
 ///
-/// Construction precomputes the forward and inverse permutation tables,
-/// so `interleave`/`deinterleave` are straight word-assembling gathers.
+/// For power-of-two `cols <= 64`, construction stores no tables at all:
+/// `interleave`/`deinterleave` run the strided word-shuffle networks
+/// directly. Otherwise construction precomputes the forward and inverse
+/// permutation tables and the calls are straight word-assembling gathers.
 /// Build one interleaver per payload shape and reuse it (the transport
 /// caches it in [`crate::transport::TxScratch`]).
 #[derive(Clone, Debug)]
 pub struct BlockInterleaver {
     rows: usize,
     cols: usize,
+    /// `Some(log2(cols))` when the table-free shuffle path applies; the
+    /// permutation tables below are then left empty.
+    shuffle_log: Option<u32>,
     /// `fwd[k]` = original-stream index feeding interleaved position `k`.
     fwd: Vec<u32>,
     /// `inv[j]` = interleaved position feeding original index `j`.
@@ -132,8 +144,29 @@ pub struct BlockInterleaver {
 
 impl BlockInterleaver {
     /// `cols` is the burst-spreading depth; `rows` is chosen per call from
-    /// the payload size.
+    /// the payload size. Power-of-two `cols <= 64` take the table-free
+    /// word-shuffle path; everything else falls back to
+    /// [`Self::new_table`].
     pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        if cols.is_power_of_two() && cols <= 64 {
+            let cap = rows * cols;
+            assert!(cap <= u32::MAX as usize, "interleaver capacity overflow");
+            return BlockInterleaver {
+                rows,
+                cols,
+                shuffle_log: Some(cols.trailing_zeros()),
+                fwd: Vec::new(),
+                inv: Vec::new(),
+            };
+        }
+        BlockInterleaver::new_table(rows, cols)
+    }
+
+    /// Table-backed construction, unconditionally — the fallback for
+    /// non-power-of-two spreads and the reference implementation the
+    /// shuffle path is pinned against.
+    pub fn new_table(rows: usize, cols: usize) -> Self {
         assert!(rows > 0 && cols > 0);
         let cap = rows * cols;
         assert!(cap <= u32::MAX as usize, "interleaver capacity overflow");
@@ -147,7 +180,7 @@ impl BlockInterleaver {
         for (k, &src) in fwd.iter().enumerate() {
             inv[src as usize] = k as u32;
         }
-        BlockInterleaver { rows, cols, fwd, inv }
+        BlockInterleaver { rows, cols, shuffle_log: None, fwd, inv }
     }
 
     /// Interleaver sized for `n` bits with spreading depth `spread`:
@@ -175,6 +208,30 @@ impl BlockInterleaver {
     pub fn interleave_into(&self, bits: &BitVec, out: &mut BitVec) {
         let n = bits.len();
         assert!(n <= self.capacity(), "payload {} > capacity {}", n, self.capacity());
+        if let Some(t) = self.shuffle_log {
+            // Column c of the transpose reads source positions
+            // r*cols + c, r = 0..rows — stride `cols` apart. One 64-bit
+            // source read covers 64 >> t of them (at in-word offsets
+            // 0, cols, 2*cols, ...); compress_stride packs those into
+            // consecutive bits. Source reads at or beyond `n` are zero
+            // (the pad), so tail garbage never reaches the output.
+            let q = 64usize >> t;
+            out.clear();
+            for c in 0..self.cols {
+                let mut r0 = 0usize;
+                while r0 < self.rows {
+                    let l = (self.rows - r0).min(64);
+                    let mut acc = 0u64;
+                    for i in 0..l.div_ceil(q) {
+                        let w = bits.get_bits_lsb((r0 + i * q) * self.cols + c, 64);
+                        acc |= compress_stride(w, t) << (i * q);
+                    }
+                    out.push_bits_lsb(acc, l);
+                    r0 += 64;
+                }
+            }
+            return;
+        }
         out.reset_zeros(self.capacity());
         gather(&self.fwd, bits, out, n);
     }
@@ -189,10 +246,80 @@ impl BlockInterleaver {
     /// De-interleave into an existing vector, reusing its allocation.
     pub fn deinterleave_into(&self, bits: &BitVec, orig_len: usize, out: &mut BitVec) {
         assert_eq!(bits.len(), self.capacity());
+        if let Some(t) = self.shuffle_log {
+            // Output word W holds original positions 64W..64W+63, i.e.
+            // rows r0..r0 + 64/cols (r0 = W * 64/cols) across all
+            // columns. Column c contributes 64/cols consecutive
+            // interleaved bits starting at c*rows + r0, spread to
+            // stride `cols` and anchored at offset c. Reads that run
+            // past row `rows` pick up the next column's bits, but those
+            // land only at original positions >= capacity, which the
+            // push length (and `truncate`) drop.
+            let q = 64usize >> t;
+            let cap = self.capacity();
+            out.clear();
+            for wi in 0..cap.div_ceil(64) {
+                let r0 = wi * q;
+                let mut word = 0u64;
+                for c in 0..self.cols {
+                    let src = bits.get_bits_lsb(c * self.rows + r0, q);
+                    word |= spread_stride(src, t) << c;
+                }
+                out.push_bits_lsb(word, (cap - wi * 64).min(64));
+            }
+            out.truncate(orig_len);
+            return;
+        }
         out.reset_zeros(self.capacity());
         gather(&self.inv, bits, out, bits.len());
         out.truncate(orig_len);
     }
+}
+
+/// One stage of the shuffle network: keep the even-indexed bits of `x`
+/// and pack them into the low 32 positions (bit `2i` -> bit `i`).
+#[inline]
+fn compress_even(mut x: u64) -> u64 {
+    x &= 0x5555_5555_5555_5555;
+    x = (x | (x >> 1)) & 0x3333_3333_3333_3333;
+    x = (x | (x >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x >> 4)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x >> 16)) & 0x0000_0000_FFFF_FFFF;
+    x
+}
+
+/// Inverse stage: spread the low 32 bits of `x` to even positions
+/// (bit `i` -> bit `2i`).
+#[inline]
+fn spread_even(mut x: u64) -> u64 {
+    x &= 0x0000_0000_FFFF_FFFF;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    x
+}
+
+/// Pack the bits of `x` at stride `1 << t` (positions `0, s, 2s, ...`)
+/// into consecutive low bits: `t` rounds of [`compress_even`].
+#[inline]
+fn compress_stride(mut x: u64, t: u32) -> u64 {
+    for _ in 0..t {
+        x = compress_even(x);
+    }
+    x
+}
+
+/// Inverse of [`compress_stride`]: spread the low `64 >> t` bits of `x`
+/// to stride `1 << t`.
+#[inline]
+fn spread_stride(mut x: u64, t: u32) -> u64 {
+    for _ in 0..t {
+        x = spread_even(x);
+    }
+    x
 }
 
 /// Word-assembling permutation gather: `out[k] = src[table[k]]`, with
@@ -471,6 +598,54 @@ mod tests {
                     "{rows}x{cols} n {n}"
                 );
                 assert_eq!(rx, bits);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_path_matches_table_path_bit_exactly() {
+        // The table-free word-shuffle path must be indistinguishable
+        // from the permutation-table gather for every power-of-two
+        // spread, including ragged payload lengths (pad region) and
+        // payloads smaller than one word.
+        let mut rng = crate::rng::Rng::new(0x5F1E);
+        for &spread in &[1usize, 2, 4, 8, 16, 32, 64] {
+            for &n in &[1usize, 5, 63, 64, 65, 640, 1000, 4096, 4099] {
+                let bits: BitVec = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+                let fast = BlockInterleaver::for_len(n, spread);
+                let slow = BlockInterleaver::new_table(fast.rows, fast.cols);
+                assert!(fast.shuffle_log.is_some(), "spread {spread} not on shuffle path");
+                let tx_f = fast.interleave(&bits);
+                let tx_s = slow.interleave(&bits);
+                assert_eq!(tx_f, tx_s, "interleave spread {spread} n {n}");
+                let rx_f = fast.deinterleave(&tx_f, n);
+                let rx_s = slow.deinterleave(&tx_s, n);
+                assert_eq!(rx_f, rx_s, "deinterleave spread {spread} n {n}");
+                assert_eq!(rx_f, bits, "roundtrip spread {spread} n {n}");
+            }
+        }
+        // The transport default spread (37, not a power of two) stays on
+        // the table fallback.
+        assert!(BlockInterleaver::for_len(1000, 37).shuffle_log.is_none());
+        assert!(BlockInterleaver::new(100, 128).shuffle_log.is_none()); // > 64
+    }
+
+    #[test]
+    fn stride_networks_roundtrip() {
+        let mut rng = crate::rng::Rng::new(0xC0DE);
+        for t in 0..=6u32 {
+            let lanes = 64usize >> t;
+            for _ in 0..50 {
+                let x = rng.next_u64();
+                let low = if lanes == 64 { x } else { x & ((1u64 << lanes) - 1) };
+                // spread then compress is the identity on the low lanes.
+                assert_eq!(compress_stride(spread_stride(low, t), t), low, "t {t}");
+                // spread places bit i at position i << t and nothing else.
+                let s = spread_stride(low, t);
+                for i in 0..lanes {
+                    assert_eq!((s >> (i << t)) & 1, (low >> i) & 1, "t {t} lane {i}");
+                }
+                assert_eq!(s.count_ones(), low.count_ones(), "t {t}");
             }
         }
     }

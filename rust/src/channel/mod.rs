@@ -81,6 +81,7 @@
 //! coordinator own that threading; see `transport::policy`).
 
 use crate::math::{db_to_lin, Complex};
+use crate::modem::SymbolPlanes;
 use crate::rng::{Rng, RngVersion};
 
 /// Fading dynamics across the symbols of one transmission. Scenario
@@ -328,42 +329,65 @@ impl Channel {
         rng: &mut Rng,
         version: RngVersion,
         gains: &mut Vec<Complex>,
-        mut sink: F,
+        sink: F,
     ) {
+        self.scalar_faded_src(symbols.len(), |i| symbols[i], rng, version, gains, sink)
+    }
+
+    /// Source-generic body of [`Channel::scalar_faded_into`]: symbols come
+    /// from an indexed closure so the symbol-plane leg can feed I/Q planes
+    /// without materializing an AoS copy. Arithmetic and draw order are
+    /// the seed repo's, per the doc above — only the source is abstract.
+    fn scalar_faded_src<S, F>(
+        &self,
+        n: usize,
+        src: S,
+        rng: &mut Rng,
+        version: RngVersion,
+        gains: &mut Vec<Complex>,
+        mut sink: F,
+    ) where
+        S: Fn(usize) -> Complex,
+        F: FnMut(Complex, Complex),
+    {
         match self.cfg.fading {
             Fading::Fast => {
-                for &s in symbols {
+                for i in 0..n {
+                    let s = src(i);
                     let h = rng.cn_v(version, 1.0);
                     let c = h.scale(self.amp);
-                    let n = rng.cn_v(version, self.sigma2);
-                    sink(c * s + n, c);
+                    let nz = rng.cn_v(version, self.sigma2);
+                    sink(c * s + nz, c);
                 }
             }
             Fading::Block => {
                 let bl = self.cfg.block_len.max(1);
                 let mut h = rng.cn_v(version, 1.0);
-                for (i, &s) in symbols.iter().enumerate() {
+                for i in 0..n {
+                    let s = src(i);
                     if i % bl == 0 && i != 0 {
                         h = rng.cn_v(version, 1.0);
                     }
                     let c = h.scale(self.amp);
-                    let n = rng.cn_v(version, self.sigma2);
-                    sink(c * s + n, c);
+                    let nz = rng.cn_v(version, self.sigma2);
+                    sink(c * s + nz, c);
                 }
             }
             Fading::None => {
                 let c = Complex::new(self.amp, 0.0);
-                for &s in symbols {
-                    let n = rng.cn_v(version, self.sigma2);
-                    sink(c * s + n, c);
+                for i in 0..n {
+                    let s = src(i);
+                    let nz = rng.cn_v(version, self.sigma2);
+                    sink(c * s + nz, c);
                 }
             }
             Fading::Rician | Fading::Jakes | Fading::GilbertElliott => {
-                self.fading_gains_into(symbols.len(), rng, version, gains);
-                for (&s, &h) in symbols.iter().zip(gains.iter()) {
-                    let c = h.scale(self.amp);
-                    let n = rng.cn_v(version, self.sigma2);
-                    sink(c * s + n, c);
+                self.fading_gains_into(n, rng, version, gains);
+                for i in 0..n {
+                    let s = src(i);
+                    let c = gains[i].scale(self.amp);
+                    let nz = rng.cn_v(version, self.sigma2);
+                    sink(c * s + nz, c);
                 }
             }
         }
@@ -526,6 +550,138 @@ impl Channel {
                         s.re + k * scratch.z[2 * i],
                         s.im + k * scratch.z[2 * i + 1],
                     ));
+                }
+            }
+        }
+    }
+
+    /// Symbol-plane sibling of [`Channel::transmit_into`]: fade +
+    /// perturb + equalize structure-of-arrays I/Q planes (the
+    /// [`crate::modem::Constellation::modulate_block`] output) without
+    /// ever materializing an AoS symbol vector, so the transport's
+    /// modulate→fade→equalize→slice chain stays in the block domain.
+    ///
+    /// Bit-exactness contract: for planes equal to the AoS symbols, the
+    /// output planes equal [`Channel::transmit_into`]'s output `to_bits`
+    /// for bit, for every `Fading` × `RngVersion`, and the RNG end state
+    /// matches (same draws, same order) — pinned by the unit tests below
+    /// and `tests/symbol_plane_it.rs`.
+    #[inline]
+    pub fn transmit_planes_into(
+        &self,
+        planes: &SymbolPlanes,
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut SymbolPlanes,
+    ) {
+        match self.cfg.rng_version {
+            RngVersion::V2Batched => self.transmit_block_planes(planes, rng, scratch, out),
+            RngVersion::V1 => {
+                let n = planes.len();
+                out.resize(n);
+                let mut i = 0usize;
+                self.scalar_faded_src(
+                    n,
+                    |j| Complex::new(planes.re[j], planes.im[j]),
+                    rng,
+                    RngVersion::V1,
+                    &mut scratch.gains,
+                    |r, c| {
+                        let e = r.div(c);
+                        out.re[i] = e.re;
+                        out.im[i] = e.im;
+                        i += 1;
+                    },
+                );
+            }
+        }
+    }
+
+    /// Plane-domain mirror of [`Channel::transmit_block`]: every scenario
+    /// arm repeats the block engine's expressions term for term (same
+    /// scratch fills, same draw order, same operation association), only
+    /// reading `planes.re/.im` instead of `Complex` fields — the
+    /// `V2Batched` stream and outputs are bit-identical.
+    pub fn transmit_block_planes(
+        &self,
+        planes: &SymbolPlanes,
+        rng: &mut Rng,
+        scratch: &mut ChannelScratch,
+        out: &mut SymbolPlanes,
+    ) {
+        let n = planes.len();
+        out.resize(n);
+        let ns = (self.sigma2 * 0.5).sqrt(); // per-axis noise std
+        match self.cfg.fading {
+            Fading::None => {
+                scratch.z.resize(2 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                let k = ns / self.amp;
+                for i in 0..n {
+                    let z = &scratch.z[2 * i..2 * i + 2];
+                    out.re[i] = planes.re[i] + k * z[0];
+                    out.im[i] = planes.im[i] + k * z[1];
+                }
+            }
+            Fading::Fast | Fading::Rician => {
+                let (los, sh) = if self.cfg.fading == Fading::Rician {
+                    let k = self.cfg.rician_k.max(0.0);
+                    ((k / (k + 1.0)).sqrt(), (0.5 / (k + 1.0)).sqrt())
+                } else {
+                    (0.0, std::f64::consts::FRAC_1_SQRT_2)
+                };
+                scratch.z.resize(4 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                for i in 0..n {
+                    let z = &scratch.z[4 * i..4 * i + 4];
+                    let (hr, hi) = (los + sh * z[0], sh * z[1]);
+                    let (nr, ni) = (ns * z[2], ns * z[3]);
+                    let d = self.amp * (hr * hr + hi * hi);
+                    out.re[i] = planes.re[i] + (nr * hr + ni * hi) / d;
+                    out.im[i] = planes.im[i] + (ni * hr - nr * hi) / d;
+                }
+            }
+            Fading::Block => {
+                let bl = self.cfg.block_len.max(1);
+                scratch.gains.clear();
+                for _ in 0..n.div_ceil(bl) {
+                    scratch.gains.push(rng.cn_v(RngVersion::V2Batched, 1.0));
+                }
+                scratch.z.resize(2 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                for b in 0..n.div_ceil(bl) {
+                    let h = scratch.gains[b];
+                    let d = self.amp * h.norm_sq();
+                    let w = Complex::new(h.re * ns / d, -h.im * ns / d);
+                    let base = 2 * b * bl;
+                    let start = b * bl;
+                    for j in 0..bl.min(n - start) {
+                        let (z0, z1) = (scratch.z[base + 2 * j], scratch.z[base + 2 * j + 1]);
+                        out.re[start + j] = planes.re[start + j] + z0 * w.re - z1 * w.im;
+                        out.im[start + j] = planes.im[start + j] + z0 * w.im + z1 * w.re;
+                    }
+                }
+            }
+            Fading::Jakes => {
+                self.fading_gains_into(n, rng, RngVersion::V2Batched, &mut scratch.gains);
+                scratch.z.resize(2 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                for i in 0..n {
+                    let h = scratch.gains[i];
+                    let (nr, ni) = (ns * scratch.z[2 * i], ns * scratch.z[2 * i + 1]);
+                    let d = self.amp * h.norm_sq();
+                    out.re[i] = planes.re[i] + (nr * h.re + ni * h.im) / d;
+                    out.im[i] = planes.im[i] + (ni * h.re - nr * h.im) / d;
+                }
+            }
+            Fading::GilbertElliott => {
+                self.fading_gains_into(n, rng, RngVersion::V2Batched, &mut scratch.gains);
+                scratch.z.resize(2 * n, 0.0);
+                rng.fill_normal(&mut scratch.z);
+                for i in 0..n {
+                    let k = ns / (self.amp * scratch.gains[i].re);
+                    out.re[i] = planes.re[i] + k * scratch.z[2 * i];
+                    out.im[i] = planes.im[i] + k * scratch.z[2 * i + 1];
                 }
             }
         }
@@ -1124,6 +1280,60 @@ mod tests {
             }
             p /= trials as f64;
             assert!((p - 1.0).abs() < 0.05, "{fading:?}: E|h|^2 = {p}");
+        }
+    }
+
+    #[test]
+    fn plane_legs_match_aos_paths_bit_exactly() {
+        // The symbol-plane legs must replay the AoS paths' draws and
+        // arithmetic exactly: same equalized values (to_bits), same RNG
+        // end state, for every Fading x RngVersion, including a ragged
+        // final fade block and a tiny payload.
+        use crate::modem::Constellation;
+        let con = Constellation::new(Modulation::Qam16);
+        let mut seed_rng = Rng::new(0x9A7E);
+        for fading in Fading::ALL {
+            for version in RngVersion::ALL {
+                for nbits in [12usize, 2468] {
+                    let cfg = ChannelConfig {
+                        fading,
+                        block_len: 48,
+                        rng_version: version,
+                        ..ChannelConfig::with_snr(9.0)
+                    };
+                    let ch = Channel::new(cfg);
+                    let bits: crate::bits::BitVec =
+                        (0..nbits).map(|_| seed_rng.bernoulli(0.5)).collect();
+                    let syms = con.modulate(&bits);
+                    let mut planes = SymbolPlanes::new();
+                    con.modulate_block(&bits, &mut planes);
+                    let mut r1 = Rng::new(0xC4A1);
+                    let mut r2 = r1.clone();
+                    let (mut sc1, mut sc2) = (ChannelScratch::new(), ChannelScratch::new());
+                    let mut eq = Vec::new();
+                    ch.transmit_into(&syms, &mut r1, &mut sc1, &mut eq);
+                    let mut eq_planes = SymbolPlanes::new();
+                    ch.transmit_planes_into(&planes, &mut r2, &mut sc2, &mut eq_planes);
+                    assert_eq!(eq.len(), eq_planes.len());
+                    for i in 0..eq.len() {
+                        assert_eq!(
+                            eq[i].re.to_bits(),
+                            eq_planes.re[i].to_bits(),
+                            "{fading:?} {version:?} n {nbits} re[{i}]"
+                        );
+                        assert_eq!(
+                            eq[i].im.to_bits(),
+                            eq_planes.im[i].to_bits(),
+                            "{fading:?} {version:?} n {nbits} im[{i}]"
+                        );
+                    }
+                    assert_eq!(
+                        r1.next_u64(),
+                        r2.next_u64(),
+                        "{fading:?} {version:?} n {nbits} rng end state"
+                    );
+                }
+            }
         }
     }
 

@@ -155,6 +155,8 @@ impl ShardAccumulator {
             s.quarantined += 1;
         }
         s.arq_exhausted += c.report.arq_exhausted;
+        s.decode_iterations += c.report.decode_iterations;
+        s.decode_converged += c.report.decode_converged;
         // Policy-layer observables (Scheme::Adaptive): arm census,
         // switch count, estimate sums, per-arm airtime.
         if let Some(p) = c.report.policy {
@@ -207,6 +209,9 @@ pub struct RoundTotals {
     pub deadline_skipped: usize,
     pub quarantined: usize,
     pub arq_exhausted: usize,
+    /// Min-sum decoder totals (zero for schemes that never decode).
+    pub decode_iterations: usize,
+    pub decode_converged: usize,
 }
 
 /// The round-level engine: a [`ShardPlan`] plus one live
@@ -308,6 +313,8 @@ impl ShardedAggregator {
             totals.deadline_skipped += s.deadline_skipped;
             totals.quarantined += s.quarantined;
             totals.arq_exhausted += s.arq_exhausted;
+            totals.decode_iterations += s.decode_iterations;
+            totals.decode_converged += s.decode_converged;
             totals.loss_sum += s.loss_sum;
             totals.ber_sum += s.ber_sum;
             totals.corrupted_sum += s.corrupted_sum;
@@ -636,7 +643,12 @@ mod tests {
                 agg.skip(i, SkipReason::Quarantine).unwrap();
                 continue;
             }
-            let report = TxReport { arq_exhausted: i + 1, ..Default::default() };
+            let report = TxReport {
+                arq_exhausted: i + 1,
+                decode_iterations: 10 * (i + 1),
+                decode_converged: i + 1,
+                ..Default::default()
+            };
             agg.feed(
                 i,
                 &Contribution {
@@ -655,6 +667,9 @@ mod tests {
         // Client 0 was clamp-quarantined and fed; client 2 rejected.
         assert_eq!(totals.quarantined, 2);
         assert_eq!(totals.arq_exhausted, 3); // 1 + 2
+        assert_eq!(totals.decode_iterations, 30); // 10 + 20
+        assert_eq!(totals.decode_converged, 3);
+        assert_eq!(stats[0].decode_iterations, 30);
         assert_eq!(stats[0].quarantined, 2);
         assert_eq!(totals.clients, 2);
     }

@@ -110,6 +110,11 @@ pub struct RoundOutcome {
     /// ECRT codewords delivered best-effort after exhausting the ARQ
     /// retry budget, summed across the round's passes.
     pub arq_exhausted: usize,
+    /// Min-sum decoder iterations summed across the round's decode
+    /// attempts (zero when the scheme never runs the iterative decoder).
+    pub decode_iterations: usize,
+    /// Decode attempts that terminated early on a clean syndrome.
+    pub decode_converged: usize,
     /// Clients whose contributions were actually aggregated (== the
     /// selection size under the zero-fault plan).
     pub survivors: usize,
@@ -740,6 +745,8 @@ impl<'e> FlServer<'e> {
             deadline_skipped: totals.deadline_skipped,
             quarantined: totals.quarantined,
             arq_exhausted: totals.arq_exhausted,
+            decode_iterations: totals.decode_iterations,
+            decode_converged: totals.decode_converged,
             survivors: totals.clients,
             survivor_weight: totals.weight_sum,
             agg_shards: self.shard_stats.len(),
@@ -871,5 +878,6 @@ fn emit_round(
         deadline_skipped: out.deadline_skipped,
         quarantined: out.quarantined,
         arq_exhausted: out.arq_exhausted,
+        decode_iterations: out.decode_iterations,
     });
 }

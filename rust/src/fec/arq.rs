@@ -18,7 +18,7 @@
 
 use crate::bits::BitVec;
 use crate::channel::{Channel, ChannelScratch, FadedSymbol};
-use crate::fec::ldpc::LdpcCode;
+use crate::fec::ldpc::{DecoderScratch, LdpcCode};
 use crate::math::Complex;
 use crate::modem::Constellation;
 use crate::rng::Rng;
@@ -69,6 +69,12 @@ pub struct FecStats {
     /// airtime model charges one preamble + block-ACK per burst (802.11
     /// A-MPDU aggregation), not per codeword.
     pub bursts: usize,
+    /// Min-sum iterations summed over every decode attempt of this
+    /// delivery (0 whenever the bounded-distance model decodes).
+    pub decode_iterations: usize,
+    /// Decode attempts whose syndrome converged to zero (the early
+    /// terminations; 0 for the bounded-distance model).
+    pub decode_converged: usize,
 }
 
 impl FecStats {
@@ -89,6 +95,8 @@ impl FecStats {
             symbols_sent: codewords * symbols_per_cw,
             exhausted: 0,
             bursts: 1,
+            decode_iterations: 0,
+            decode_converged: 0,
         }
     }
 
@@ -156,6 +164,9 @@ pub struct ArqScratch {
     eq: Vec<Complex>,
     csi: Vec<f64>,
     llrs: Vec<f32>,
+    /// Layered min-sum workspace — with it, the MinSum receiver's decode
+    /// stage makes zero steady-state allocations per attempt.
+    dec: DecoderScratch,
 }
 
 impl ArqScratch {
@@ -205,7 +216,7 @@ pub fn transmit_reliable_with(
     // observations (`transmit_into`); the min-sum receiver additionally
     // takes the per-symbol |c|^2 for its LLR weights
     // (`transmit_csi_into`).
-    let ArqScratch { chan: chan_scratch, eq, csi, llrs } = scratch;
+    let ArqScratch { chan: chan_scratch, eq, csi, llrs, dec } = scratch;
 
     for b in 0..nblocks {
         // Zero-padded info block.
@@ -246,12 +257,14 @@ pub fn transmit_reliable_with(
                     while llrs.len() < code.n {
                         llrs.push(0.0);
                     }
-                    let (dec, ok) = code.decode_min_sum(&llrs[..], max_iter);
-                    last_hard = dec.clone();
-                    if ok {
-                        decoded = Some(dec);
+                    let rep = code.decode_min_sum_into(&llrs[..], max_iter, dec);
+                    stats.decode_iterations += rep.iterations;
+                    if rep.converged {
+                        stats.decode_converged += 1;
+                        decoded = Some(dec.hard().clone());
                         break;
                     }
+                    last_hard.clone_from(dec.hard());
                 }
             }
         }
@@ -305,6 +318,8 @@ mod tests {
         assert_eq!(stats.exhausted, 0);
         assert_eq!(stats.codewords, 16); // ceil(5000/324)
         assert!(stats.transmissions >= stats.codewords);
+        // The protocol-level model never runs min-sum.
+        assert_eq!((stats.decode_iterations, stats.decode_converged), (0, 0));
     }
 
     #[test]
@@ -316,6 +331,12 @@ mod tests {
         let (got, stats) = transmit_reliable(&p, &qpsk(), &ch, &mut rng, &cfg);
         assert_eq!(got, p);
         assert_eq!(stats.exhausted, 0);
+        // Every codeword's final attempt converged; every attempt ran at
+        // least one sweep, non-converging attempts ran all 40.
+        assert_eq!(stats.decode_converged, stats.codewords);
+        assert!(stats.decode_iterations >= stats.transmissions);
+        let failed = stats.transmissions - stats.codewords;
+        assert!(stats.decode_iterations >= 40 * failed + stats.codewords);
     }
 
     #[test]
@@ -359,6 +380,8 @@ mod tests {
                 assert_eq!(fresh, reused, "{decoder:?} n={n}");
                 assert_eq!(s1.transmissions, s2.transmissions);
                 assert_eq!(s1.symbols_sent, s2.symbols_sent);
+                assert_eq!(s1.decode_iterations, s2.decode_iterations);
+                assert_eq!(s1.decode_converged, s2.decode_converged);
                 assert_eq!(r1.next_u64(), r2.next_u64(), "{decoder:?} stream diverged");
             }
         }

@@ -12,8 +12,24 @@
 //!   half), info bits the free columns. Encoding is then 324 word-wise
 //!   AND+popcount dot products.
 //! * Decoders:
-//!   - [`LdpcCode::decode_min_sum`]: normalized min-sum belief
-//!     propagation over soft LLRs (the real receiver);
+//!   - [`LdpcCode::decode_min_sum_into`]: normalized min-sum belief
+//!     propagation over soft LLRs (the real receiver) on a **layered
+//!     QC schedule**: each base-matrix row is one layer of `Z`
+//!     structurally identical checks whose variable sets are disjoint
+//!     (one variable per non-null circulant, circulants bijective per
+//!     lane), so the `Z` lanes run as flat two-pass sweeps —
+//!     two-minimum + sign tracking, then extrinsic write-back — with
+//!     the per-lane circulant shift resolved by a split loop instead
+//!     of a modulo. Hard decisions pack 64 at a time straight into
+//!     [`BitVec`] words and the early-termination syndrome is one
+//!     rotate-XOR per circulant over those words. All buffers live in
+//!     a caller-owned [`DecoderScratch`] — zero steady-state
+//!     allocation per decode. The schedule is **bit-exact** with the
+//!     retained serial flooding reference (same incremental posterior
+//!     update, same f32 rounding sequence), pinned by the unit tests
+//!     below and `tests/symbol_plane_it.rs`;
+//!   - [`LdpcCode::decode_min_sum`]: convenience wrapper over a fresh
+//!     scratch (same bits, allocating);
 //!   - [`LdpcCode::decode_bounded_distance`]: the paper's abstraction —
 //!     success iff at most `t = 7` hard bit errors; used by the fast
 //!     protocol-level ECRT model in the FL sweeps.
@@ -46,6 +62,59 @@ pub const PAPER_T: usize = 7;
 const WORDS_N: usize = 11; // ceil(648 / 64)
 const WORDS_K: usize = 6; // ceil(324 / 64)
 
+/// One layer of the layered min-sum schedule = one base-matrix row:
+/// `Z` consecutive checks with identical slot structure whose variable
+/// sets are mutually disjoint within the layer. `slots` holds the
+/// non-null base columns as `(block index, circulant shift)` in
+/// ascending block order — exactly the order the sorted `check_vars`
+/// edge arrays use, so edge `(lane r, slot j)` lives at
+/// `edge_base + r * slots.len() + j`.
+struct Layer {
+    /// First edge index of this layer in the check-major edge arrays.
+    edge_base: usize,
+    slots: Vec<(u32, u32)>,
+}
+
+/// Outcome of one [`LdpcCode::decode_min_sum_into`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeReport {
+    /// Syndrome reached zero within the iteration budget.
+    pub converged: bool,
+    /// Min-sum iterations run: iterations-to-converge on success,
+    /// `max_iter` otherwise.
+    pub iterations: usize,
+}
+
+/// Reusable min-sum workspace: edge messages, posteriors, the per-lane
+/// two-minimum trackers, and the hard-decision words. Hot loops (the
+/// ECRT ARQ leg) hold one and pay zero steady-state allocation per
+/// decode; contents never influence results.
+#[derive(Default)]
+pub struct DecoderScratch {
+    /// Check -> var messages, check-major edge order.
+    r_msg: Vec<f32>,
+    /// Posterior LLR per variable.
+    post: Vec<f32>,
+    /// Per-lane two-minimum / sign trackers (length Z).
+    min1: Vec<f32>,
+    min2: Vec<f32>,
+    sign: Vec<f32>,
+    min_j: Vec<u32>,
+    /// Word-packed hard decision of the last decode.
+    hard: BitVec,
+}
+
+impl DecoderScratch {
+    pub fn new() -> Self {
+        DecoderScratch::default()
+    }
+
+    /// Hard decision of the most recent decode through this scratch.
+    pub fn hard(&self) -> &BitVec {
+        &self.hard
+    }
+}
+
 /// An expanded QC-LDPC code with precomputed encoder and Tanner graph.
 pub struct LdpcCode {
     /// Codeword length n (648).
@@ -66,6 +135,10 @@ pub struct LdpcCode {
     parity_gen: Vec<[u64; WORDS_K]>,
     /// Total Tanner edges (for the decoder workspace).
     edges: usize,
+    /// Lifting factor Z of the QC expansion.
+    z: usize,
+    /// Layered min-sum schedule, one entry per base-matrix row.
+    layers: Vec<Layer>,
 }
 
 impl LdpcCode {
@@ -102,7 +175,23 @@ impl LdpcCode {
         for cv in &mut check_vars {
             cv.sort_unstable();
         }
-        let edges = check_vars.iter().map(|v| v.len()).sum();
+        let edges: usize = check_vars.iter().map(|v| v.len()).sum();
+
+        // Layered schedule: one layer per base row, slots in ascending
+        // block order (matching the sorted edge arrays above).
+        let mut layers = Vec::with_capacity(base.len());
+        let mut edge_base = 0usize;
+        for row in base.iter() {
+            let slots: Vec<(u32, u32)> = row
+                .iter()
+                .enumerate()
+                .filter(|&(_, &s)| s >= 0)
+                .map(|(bj, &s)| (bj as u32, (s as usize % z) as u32))
+                .collect();
+            edge_base += slots.len() * z;
+            layers.push(Layer { edge_base: edge_base - slots.len() * z, slots });
+        }
+        debug_assert_eq!(edge_base, edges);
 
         // Dense copy of H for Gaussian elimination: m rows of n bits.
         let mut rows: Vec<[u64; WORDS_N]> = vec![[0u64; WORDS_N]; m];
@@ -158,7 +247,26 @@ impl LdpcCode {
             }
         }
 
-        LdpcCode { n, m, k, check_vars, var_checks, info_cols, parity_cols, parity_gen, edges }
+        LdpcCode {
+            n,
+            m,
+            k,
+            check_vars,
+            var_checks,
+            info_cols,
+            parity_cols,
+            parity_gen,
+            edges,
+            z,
+            layers,
+        }
+    }
+
+    /// Whether the layered QC min-sum schedule is active (true for every
+    /// code built by [`Self::from_base`]; the release decode smoke
+    /// asserts it on the paper's code).
+    pub fn layered(&self) -> bool {
+        !self.layers.is_empty()
     }
 
     /// Systematic encode: info bits land on `info_cols` (which are the
@@ -207,11 +315,160 @@ impl LdpcCode {
         })
     }
 
-    /// Normalized min-sum decoding (flooding schedule, factor 0.75).
-    ///
-    /// `llr[v] > 0` means bit v is more likely 0. Returns the hard
-    /// decision and whether the syndrome converged to zero.
+    /// Normalized min-sum decoding (factor 0.75), borrowing a fresh
+    /// [`DecoderScratch`] internally. `llr[v] > 0` means bit v is more
+    /// likely 0. Returns the hard decision and whether the syndrome
+    /// converged to zero. Hot loops should hold a scratch and call
+    /// [`Self::decode_min_sum_into`] instead — same bits, no per-call
+    /// allocation.
     pub fn decode_min_sum(&self, llr: &[f32], max_iter: usize) -> (BitVec, bool) {
+        let mut scratch = DecoderScratch::new();
+        let rep = self.decode_min_sum_into(llr, max_iter, &mut scratch);
+        (scratch.hard, rep.converged)
+    }
+
+    /// Layered normalized min-sum over a caller-owned scratch — the hot
+    /// kernel behind [`Self::decode_min_sum`] (bit-identical to the
+    /// serial flooding reference; see the module docs for why the
+    /// layer-disjointness of QC circulants makes the lane-transposed
+    /// sweeps exact). The hard decision is left in `scratch.hard()`.
+    pub fn decode_min_sum_into(
+        &self,
+        llr: &[f32],
+        max_iter: usize,
+        scratch: &mut DecoderScratch,
+    ) -> DecodeReport {
+        assert_eq!(llr.len(), self.n);
+        const ALPHA: f32 = 0.75;
+        let z = self.z;
+        let DecoderScratch { r_msg, post, min1, min2, sign, min_j, hard } = scratch;
+        r_msg.clear();
+        r_msg.resize(self.edges, 0.0);
+        post.clear();
+        post.extend_from_slice(llr);
+        min1.clear();
+        min1.resize(z, 0.0);
+        min2.clear();
+        min2.resize(z, 0.0);
+        sign.clear();
+        sign.resize(z, 0.0);
+        min_j.clear();
+        min_j.resize(z, 0);
+        hard.reset_zeros(self.n);
+
+        for iter in 0..max_iter {
+            for layer in &self.layers {
+                let deg = layer.slots.len();
+                // Pass 1: extrinsic Q = post - R per edge; track the two
+                // smallest magnitudes, the running sign product, and the
+                // argmin slot per lane. The circulant shift turns into
+                // two contiguous ranges instead of a per-lane modulo.
+                for r in 0..z {
+                    min1[r] = f32::INFINITY;
+                    min2[r] = f32::INFINITY;
+                    sign[r] = 1.0;
+                    min_j[r] = 0;
+                }
+                for (j, &(bj, sh)) in layer.slots.iter().enumerate() {
+                    let vb = bj as usize * z;
+                    let sh = sh as usize;
+                    let mut lane = |r: usize, v: usize| {
+                        let q = post[v] - r_msg[layer.edge_base + r * deg + j];
+                        let a = q.abs();
+                        if q < 0.0 {
+                            sign[r] = -sign[r];
+                        }
+                        if a < min1[r] {
+                            min2[r] = min1[r];
+                            min1[r] = a;
+                            min_j[r] = j as u32;
+                        } else if a < min2[r] {
+                            min2[r] = a;
+                        }
+                    };
+                    for r in 0..z - sh {
+                        lane(r, vb + sh + r);
+                    }
+                    for r in z - sh..z {
+                        lane(r, vb + r + sh - z);
+                    }
+                }
+                // Pass 2: recompute Q from the still-untouched edge state
+                // (bit-identical to pass 1's value) and replay the
+                // reference's exact posterior update sequence
+                // `post += new_r - old_r` — NOT `post = q + new_r`, which
+                // rounds differently in f32.
+                for (j, &(bj, sh)) in layer.slots.iter().enumerate() {
+                    let vb = bj as usize * z;
+                    let sh = sh as usize;
+                    let mut lane = |r: usize, v: usize| {
+                        let e = layer.edge_base + r * deg + j;
+                        let q = post[v] - r_msg[e];
+                        let mag = if j as u32 == min_j[r] { min2[r] } else { min1[r] };
+                        let s = sign[r] * if q < 0.0 { -1.0 } else { 1.0 };
+                        let new_r = ALPHA * s * mag;
+                        post[v] += new_r - r_msg[e];
+                        r_msg[e] = new_r;
+                    };
+                    for r in 0..z - sh {
+                        lane(r, vb + sh + r);
+                    }
+                    for r in z - sh..z {
+                        lane(r, vb + r + sh - z);
+                    }
+                }
+            }
+            // Word-packed hard decision straight into the BitVec words
+            // (tail bits of the last word stay zero), then the rotate-XOR
+            // syndrome for early termination.
+            let words = hard.words_mut();
+            for (wi, w) in words.iter_mut().enumerate() {
+                let base = wi * 64;
+                let nb = 64.min(self.n - base);
+                let mut acc = 0u64;
+                for b in 0..nb {
+                    acc |= ((post[base + b] < 0.0) as u64) << b;
+                }
+                *w = acc;
+            }
+            if self.syndrome_ok_words(hard) {
+                return DecodeReport { converged: true, iterations: iter + 1 };
+            }
+        }
+        DecodeReport { converged: false, iterations: max_iter }
+    }
+
+    /// Word-packed syndrome over the layered structure: per layer, XOR
+    /// the Z-bit circulant blocks of `hard` rotated by their shifts —
+    /// bit r of the accumulator is check `bi*Z + r`'s parity, so a zero
+    /// accumulator clears all Z checks at once. Falls back to the
+    /// per-bit [`Self::syndrome_ok`] for Z outside the single-word
+    /// range (never the case for the paper's Z = 27).
+    fn syndrome_ok_words(&self, hard: &BitVec) -> bool {
+        let z = self.z;
+        if z == 0 || z > 63 {
+            return self.syndrome_ok(hard);
+        }
+        let mask = (1u64 << z) - 1;
+        for layer in &self.layers {
+            let mut acc = 0u64;
+            for &(bj, sh) in &layer.slots {
+                let w = hard.get_bits_lsb(bj as usize * z, z);
+                let sh = sh as usize;
+                acc ^= ((w >> sh) | (w << (z - sh))) & mask;
+            }
+            if acc != 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// The retained serial flooding reference of the layered kernel —
+    /// the pre-layered `decode_min_sum` body, byte for byte. Unit tests
+    /// pin [`Self::decode_min_sum_into`] bit-exact against it.
+    #[cfg(test)]
+    fn decode_min_sum_reference(&self, llr: &[f32], max_iter: usize) -> (BitVec, bool) {
         assert_eq!(llr.len(), self.n);
         const ALPHA: f32 = 0.75;
         // Edge arrays in check-major order.
@@ -429,6 +686,77 @@ mod tests {
             .collect();
         let (_, ok) = c.decode_min_sum(&llr, 20);
         assert!(!ok);
+    }
+
+    #[test]
+    fn layered_kernel_matches_serial_reference_bit_exactly() {
+        // The tentpole pin: the layered lane-transposed schedule must
+        // reproduce the serial flooding reference bit-for-bit — hard
+        // decisions AND convergence flags — across clean, lightly and
+        // heavily corrupted, and non-converging LLR profiles, with one
+        // scratch reused across every decode.
+        let c = code();
+        assert!(c.layered());
+        let mut rng = Rng::new(0x1A7E);
+        let mut scratch = DecoderScratch::new();
+        for trial in 0..12 {
+            let cw = c.encode(&random_info(&mut rng, c.k));
+            let noise = 0.25 * (trial % 4) as f64;
+            let mut llr: Vec<f32> = (0..c.n)
+                .map(|i| {
+                    let s = if cw.get(i) { -1.0 } else { 1.0 };
+                    ((if trial < 4 { 4.0 } else { 1.0 }) * (s + noise * 3.0 * rng.normal()))
+                        as f32
+                })
+                .collect();
+            for pos in rng.choose_k(c.n, 5 * trial) {
+                llr[pos] = -llr[pos];
+            }
+            for max_iter in [1usize, 3, 30] {
+                let (ref_hard, ref_ok) = c.decode_min_sum_reference(&llr, max_iter);
+                let (hard, ok) = c.decode_min_sum(&llr, max_iter);
+                assert_eq!(hard, ref_hard, "trial {trial} max_iter {max_iter}");
+                assert_eq!(ok, ref_ok, "trial {trial} max_iter {max_iter}");
+                let rep = c.decode_min_sum_into(&llr, max_iter, &mut scratch);
+                assert_eq!(scratch.hard(), &ref_hard, "scratch trial {trial}");
+                assert_eq!(rep.converged, ref_ok, "scratch trial {trial}");
+                assert!(rep.iterations >= 1 && rep.iterations <= max_iter);
+                if !rep.converged {
+                    assert_eq!(rep.iterations, max_iter);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_report_counts_iterations_to_converge() {
+        let c = code();
+        let mut rng = Rng::new(0x17E2);
+        let cw = c.encode(&random_info(&mut rng, c.k));
+        let llr: Vec<f32> = (0..c.n).map(|i| if cw.get(i) { -8.0 } else { 8.0 }).collect();
+        let mut scratch = DecoderScratch::new();
+        let rep = c.decode_min_sum_into(&llr, 30, &mut scratch);
+        assert!(rep.converged);
+        assert_eq!(rep.iterations, 1, "clean LLRs settle on the first sweep");
+        assert_eq!(scratch.hard(), &cw);
+    }
+
+    #[test]
+    fn word_syndrome_matches_per_bit_syndrome() {
+        let c = code();
+        let mut rng = Rng::new(0x55D);
+        for flips in [0usize, 1, 2, 7, 50, 324] {
+            let mut v = c.encode(&random_info(&mut rng, c.k));
+            for pos in rng.choose_k(c.n, flips) {
+                v.flip(pos);
+            }
+            assert_eq!(c.syndrome_ok_words(&v), c.syndrome_ok(&v), "flips {flips}");
+        }
+        // Fully random (non-codeword) vectors too.
+        for _ in 0..20 {
+            let v: BitVec = (0..c.n).map(|_| rng.bernoulli(0.5)).collect();
+            assert_eq!(c.syndrome_ok_words(&v), c.syndrome_ok(&v));
+        }
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod ldpc;
 
 pub use arq::{ArqConfig, ArqScratch, DecoderKind, FecStats};
 pub use crc::CRC_BITS;
-pub use ldpc::{LdpcCode, PAPER_T};
+pub use ldpc::{DecodeReport, DecoderScratch, LdpcCode, PAPER_T};

@@ -47,6 +47,9 @@ pub struct RoundRecord {
     /// ECRT codewords delivered best-effort after exhausting the ARQ
     /// retry budget, summed across this round's passes.
     pub arq_exhausted: usize,
+    /// Min-sum decoder iterations summed across this round's passes
+    /// (0 whenever the scheme never runs the iterative decoder).
+    pub decode_iterations: usize,
 }
 
 /// A full experiment trace.
@@ -91,14 +94,15 @@ impl Trace {
     /// then the policy columns (approx fraction, switches, mean estimated
     /// SNR — empty when nothing sounded — and per-arm airtime), then the
     /// fault columns (dropouts, deadline exclusions, quarantined clients,
-    /// exhausted ARQ codewords).
+    /// exhausted ARQ codewords), then the decoder-work column (min-sum
+    /// iterations; 0 for schemes that never decode).
     pub fn csv_rows(&self) -> String {
         let mut s = String::new();
         for r in &self.rounds {
             let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
             let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
             s.push_str(&format!(
-                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{}\n",
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{},{}\n",
                 self.label,
                 r.round,
                 r.comm_time_s,
@@ -115,7 +119,8 @@ impl Trace {
                 r.dropped,
                 r.deadline_skipped,
                 r.quarantined,
-                r.arq_exhausted
+                r.arq_exhausted,
+                r.decode_iterations
             ));
         }
         s
@@ -126,7 +131,7 @@ impl Trace {
 pub const CSV_HEADER: &str = "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,\
      retransmissions,corrupted_frac,approx_frac,policy_switches,est_snr_db,\
      approx_time_s,fallback_time_s,dropped,deadline_skipped,quarantined,\
-     arq_exhausted\n";
+     arq_exhausted,decode_iters\n";
 
 /// Write traces to a CSV file (creating parent dirs).
 pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
@@ -187,6 +192,10 @@ pub struct ShardStats {
     pub quarantined: usize,
     /// ARQ retry-budget exhaustions summed over this shard's deliveries.
     pub arq_exhausted: usize,
+    /// Min-sum decoder iterations summed over this shard's deliveries.
+    pub decode_iterations: usize,
+    /// Decode attempts that early-terminated on a clean syndrome.
+    pub decode_converged: usize,
 }
 
 impl ShardStats {
@@ -311,7 +320,7 @@ mod tests {
         // Every row carries exactly the header's column count (the
         // policy columns included; unsounded rounds leave est_snr empty).
         let ncols = CSV_HEADER.trim().split(',').count();
-        assert_eq!(ncols, 17);
+        assert_eq!(ncols, 18);
         for line in csv.lines() {
             assert_eq!(line.split(',').count(), ncols, "{line}");
         }
@@ -331,12 +340,13 @@ mod tests {
             deadline_skipped: 1,
             quarantined: 4,
             arq_exhausted: 5,
+            decode_iterations: 6,
             ..Default::default()
         });
         let row = t.csv_rows();
         assert!(row.contains(",0.7500,3,10.25,1.500000,4.000000"), "{row}");
-        // The fault columns terminate the row.
-        assert!(row.trim_end().ends_with(",2,1,4,5"), "{row}");
+        // The fault columns then the decoder-work column terminate the row.
+        assert!(row.trim_end().ends_with(",2,1,4,5,6"), "{row}");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! QAM modem with gray coding (paper §II-B eq. 8 and §IV-A Fig. 2).
+//! QAM modem with gray coding (paper §II-B eq. 8 and §IV-A Fig. 2),
+//! structured around structure-of-arrays *symbol planes*.
 //!
 //! Square M-QAM constellations (QPSK = 4-QAM, 16/64/256-QAM) are built as
 //! two independent gray-coded PAM axes: for a k-bit symbol the first k/2
@@ -14,6 +15,30 @@
 //! receiver knowing the complex channel gain `c` (paper: "PS has the
 //! knowledge of the channel gain"), `argmin_s |r - c s|^2` equals
 //! per-axis nearest-level slicing of the equalized symbol `r / c`.
+//!
+//! # Symbol-plane kernels
+//!
+//! The hot path has two layouts:
+//!
+//! * the scalar AoS path ([`Constellation::modulate_into`] /
+//!   [`Constellation::demodulate_into`]) — per-symbol LUT walks over
+//!   `Vec<Complex>`, kept as the bit-exactness reference and the layout
+//!   the legacy channel legs consume;
+//! * the block SoA path ([`Constellation::modulate_block`] /
+//!   [`Constellation::slice_block`]) — contiguous I/Q planes
+//!   ([`SymbolPlanes`]) processed in [`PLANE_LANES`]-wide chunks of
+//!   branchless bit-plane arithmetic (no table in sight): gray
+//!   encode/decode is a prefix-parity network + bit reversal
+//!   (`gray_wire_to_level`), and the level→amplitude map recomputes the
+//!   exact constructor expression `(2l - (L-1)) * scale`, so the planes
+//!   are **bit-identical** to the LUT path for every `Modulation`
+//!   (pinned by the unit tests below and `tests/symbol_plane_it.rs`).
+//!
+//! The chunked loops are plain safe Rust sized for the target's vector
+//! width (16 lanes under AVX2, 8 on the NEON/scalar shared path) so the
+//! autovectorizer can keep the whole modulate→fade→equalize→slice chain
+//! in the block domain; lane width never affects output — symbols are
+//! independent.
 
 pub mod analysis;
 
@@ -75,6 +100,67 @@ impl Modulation {
     }
 }
 
+/// Lane width of the symbol-plane block kernels: the chunk size the
+/// plane loops are written in so the autovectorizer maps one chunk to
+/// one (or two) vector registers. 16 under AVX2, 8 on the NEON/scalar
+/// shared path. Purely a scheduling knob — symbols are independent, so
+/// lane width never affects output.
+#[cfg(target_feature = "avx2")]
+pub const PLANE_LANES: usize = 16;
+#[cfg(not(target_feature = "avx2"))]
+pub const PLANE_LANES: usize = 8;
+
+/// Structure-of-arrays symbol storage: contiguous I and Q `f64` planes.
+/// The block modem kernels ([`Constellation::modulate_block`] /
+/// [`Constellation::slice_block`]) and the channel's plane leg operate
+/// on these directly, so modulate → fade → equalize → slice never
+/// materializes an array-of-structs `Complex` stream.
+#[derive(Clone, Debug, Default)]
+pub struct SymbolPlanes {
+    /// In-phase (real) plane.
+    pub re: Vec<f64>,
+    /// Quadrature (imaginary) plane.
+    pub im: Vec<f64>,
+}
+
+impl SymbolPlanes {
+    pub fn new() -> Self {
+        SymbolPlanes::default()
+    }
+
+    /// Symbols stored (both planes always have equal length).
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Clear and resize both planes to `n` zeroed symbols, reusing the
+    /// allocations (the scratch-reuse contract of the block engine).
+    pub fn resize(&mut self, n: usize) {
+        self.re.clear();
+        self.re.resize(n, 0.0);
+        self.im.clear();
+        self.im.resize(n, 0.0);
+    }
+
+    /// Scatter an AoS symbol slice into the planes (cleared first).
+    pub fn copy_from_symbols(&mut self, symbols: &[Complex]) {
+        self.resize(symbols.len());
+        for (i, s) in symbols.iter().enumerate() {
+            self.re[i] = s.re;
+            self.im[i] = s.im;
+        }
+    }
+
+    /// Gather the planes back into an AoS vector (tests / interop).
+    pub fn to_vec(&self) -> Vec<Complex> {
+        self.re.iter().zip(&self.im).map(|(&re, &im)| Complex::new(re, im)).collect()
+    }
+}
+
 /// Binary-reflected gray code.
 #[inline]
 pub fn binary_to_gray(b: u32) -> u32 {
@@ -90,6 +176,21 @@ pub fn gray_to_binary(mut g: u32) -> u32 {
         mask >>= 1;
     }
     g
+}
+
+/// Branchless wire-field → level-index map of one PAM axis: for the
+/// LSB-first h-bit wire field `x` (h <= 4, i.e. up to 256-QAM) returns
+/// `gray_to_binary(bitrev_h(x))` as pure bit-plane arithmetic — a
+/// 2-stage prefix-parity network (`pp bit i = parity of x bits 0..=i`,
+/// valid for i <= 3) followed by one h-bit reversal. Level bit `t` is
+/// the parity of wire bits `0..=(h-1-t)`, which is exactly `pp` bit
+/// `h-1-t`.
+#[inline]
+fn gray_wire_to_level(x: u32, h: usize) -> usize {
+    let mut pp = x;
+    pp ^= pp << 1;
+    pp ^= pp << 2;
+    ((pp << (32 - h)).reverse_bits()) as usize
 }
 
 /// A gray-coded square-QAM constellation, amplitudes normalized to unit
@@ -110,6 +211,11 @@ pub struct Constellation {
     amps: Vec<f64>,
     /// 1 / (2 * scale) — precomputed for the slicer.
     inv_step: f64,
+    /// Per-axis amplitude step / 2 — the normalization the block kernels
+    /// recompute amplitudes from (`(2l - (L-1)) * scale`, the exact
+    /// `amps` constructor expression, so recomputation is bit-identical
+    /// to the table).
+    scale: f64,
     half_bits: usize,
     levels: usize,
     /// Constellation point per LSB-first raw k-bit field.
@@ -132,6 +238,7 @@ impl Constellation {
             modulation,
             amps,
             inv_step: 1.0 / (2.0 * scale),
+            scale,
             half_bits: modulation.bits_per_symbol() / 2,
             levels,
             point_lut: Vec::new(),
@@ -246,6 +353,73 @@ impl Constellation {
         out.truncate(nbits);
     }
 
+    /// Block modulate into structure-of-arrays symbol planes (resized to
+    /// the symbol count, zero-padding the tail to a whole symbol exactly
+    /// like [`Self::modulate_into`]). Table-free: each
+    /// [`PLANE_LANES`]-wide chunk extracts the raw k-bit wire fields,
+    /// maps both axes through the branchless gray prefix-parity network,
+    /// and recomputes amplitudes with the constructor expression — so
+    /// the planes are bit-identical to the LUT path's points.
+    pub fn modulate_block(&self, bits: &BitVec, planes: &mut SymbolPlanes) {
+        let k = self.modulation.bits_per_symbol();
+        let h = self.half_bits;
+        let nsym = bits.len().div_ceil(k);
+        planes.resize(nsym);
+        let mask_h = (1u32 << h) - 1;
+        let bias = self.levels as f64 - 1.0;
+        let scale = self.scale;
+        let mut raws = [0u32; PLANE_LANES];
+        let mut s = 0;
+        while s < nsym {
+            let lanes = PLANE_LANES.min(nsym - s);
+            for (l, r) in raws[..lanes].iter_mut().enumerate() {
+                *r = bits.get_bits_lsb((s + l) * k, k) as u32;
+            }
+            for (l, &raw) in raws[..lanes].iter().enumerate() {
+                let li = gray_wire_to_level(raw & mask_h, h);
+                let lq = gray_wire_to_level(raw >> h, h);
+                planes.re[s + l] = (2.0 * li as f64 - bias) * scale;
+                planes.im[s + l] = (2.0 * lq as f64 - bias) * scale;
+            }
+            s += lanes;
+        }
+    }
+
+    /// Block hard-slice equalized symbol planes back to `nbits` bits
+    /// (cleared first, modulation pad dropped) — the SoA counterpart of
+    /// [`Self::demodulate_into`], bit-identical to it. Per chunk: both
+    /// axes slice to level indices, gray-encode, and bit-reverse into
+    /// the LSB-first wire field via the `(r ^ (r << 1))` identity
+    /// (`bitrev_h(l ^ (l >> 1)) = bitrev_h(l) ^ (bitrev_h(l) << 1)`),
+    /// then the fields append word-at-a-time.
+    pub fn slice_block(&self, planes: &SymbolPlanes, nbits: usize, out: &mut BitVec) {
+        let k = self.modulation.bits_per_symbol();
+        let h = self.half_bits;
+        assert!(planes.len() * k >= nbits, "not enough symbols");
+        let nsym = nbits.div_ceil(k);
+        out.clear();
+        let mask_h = (1u32 << h) - 1;
+        let mut raws = [0u64; PLANE_LANES];
+        let mut s = 0;
+        while s < nsym {
+            let lanes = PLANE_LANES.min(nsym - s);
+            for l in 0..lanes {
+                let li = self.slice_axis(planes.re[s + l]) as u32;
+                let lq = self.slice_axis(planes.im[s + l]) as u32;
+                let rli = (li << (32 - h)).reverse_bits();
+                let rlq = (lq << (32 - h)).reverse_bits();
+                let lo = (rli ^ (rli << 1)) & mask_h;
+                let hi = (rlq ^ (rlq << 1)) & mask_h;
+                raws[l] = (lo | (hi << h)) as u64;
+            }
+            for &raw in &raws[..lanes] {
+                out.push_bits_lsb(raw, k);
+            }
+            s += lanes;
+        }
+        out.truncate(nbits);
+    }
+
     /// All M constellation points indexed by symbol bits.
     pub fn points(&self) -> Vec<Complex> {
         let m = 1usize << self.modulation.bits_per_symbol();
@@ -322,6 +496,70 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn block_planes_match_scalar_lut_paths_bit_exactly() {
+        // The tentpole pin: the table-free SoA kernels must reproduce
+        // the LUT paths bit-for-bit for every modulation, including
+        // partial final symbols and non-multiple-of-lane lengths.
+        let mut rng = Rng::new(0xB10C);
+        let mut planes = SymbolPlanes::new();
+        let mut sliced = BitVec::new();
+        for m in Modulation::ALL {
+            let con = Constellation::new(m);
+            let k = m.bits_per_symbol();
+            for &n in &[1usize, 31, 63, 64, 65, k * PLANE_LANES - 1, k * PLANE_LANES + 3, 2053] {
+                let bits: BitVec = (0..n).map(|_| rng.bernoulli(0.5)).collect();
+                let aos = con.modulate(&bits);
+                con.modulate_block(&bits, &mut planes);
+                assert_eq!(planes.len(), aos.len(), "{m:?} n {n}");
+                for (i, p) in aos.iter().enumerate() {
+                    assert_eq!(planes.re[i].to_bits(), p.re.to_bits(), "{m:?} n {n} sym {i}");
+                    assert_eq!(planes.im[i].to_bits(), p.im.to_bits(), "{m:?} n {n} sym {i}");
+                }
+                // Perturb so slicing does real work; slice_block must
+                // equal demodulate on the identical observations.
+                let noisy: Vec<Complex> = aos
+                    .iter()
+                    .map(|p| *p + Complex::new(rng.uniform(-0.4, 0.4), rng.uniform(-0.4, 0.4)))
+                    .collect();
+                planes.copy_from_symbols(&noisy);
+                con.slice_block(&planes, n, &mut sliced);
+                assert_eq!(sliced, con.demodulate(&noisy, n), "{m:?} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gray_wire_to_level_matches_table_composition() {
+        for m in Modulation::ALL {
+            let h = m.bits_per_symbol() / 2;
+            for x in 0..(1u32 << h) {
+                let rev = x.reverse_bits() >> (32 - h);
+                assert_eq!(
+                    gray_wire_to_level(x, h),
+                    gray_to_binary(rev) as usize,
+                    "{m:?} x {x:04b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn symbol_planes_roundtrip_and_resize() {
+        let syms = vec![Complex::new(1.5, -2.0), Complex::new(0.0, 3.25)];
+        let mut p = SymbolPlanes::new();
+        assert!(p.is_empty());
+        p.copy_from_symbols(&syms);
+        assert_eq!(p.len(), 2);
+        let back = p.to_vec();
+        assert_eq!((back[0].re, back[0].im), (1.5, -2.0));
+        assert_eq!((back[1].re, back[1].im), (0.0, 3.25));
+        p.resize(3);
+        assert_eq!(p.len(), 3);
+        assert!(p.re.iter().chain(&p.im).all(|&x| x == 0.0));
+        assert!(PLANE_LANES.is_power_of_two());
     }
 
     #[test]

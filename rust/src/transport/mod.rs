@@ -148,6 +148,11 @@ pub struct TxReport {
     /// were delivered best-effort, residual errors possible (0 for every
     /// non-coded scheme and in every paper configuration).
     pub arq_exhausted: usize,
+    /// Total min-sum iterations spent decoding this delivery (0 for every
+    /// scheme that never runs the iterative decoder).
+    pub decode_iterations: usize,
+    /// Decode attempts that terminated early on a clean syndrome.
+    pub decode_converged: usize,
     /// Policy-layer outcome (arm chosen, SNR estimate, switch flag,
     /// pilot airtime) — `Some` only for `Scheme::Adaptive`.
     pub policy: Option<PolicyReport>,
@@ -211,6 +216,10 @@ pub struct TxScratch {
     rx_bits: BitVec,
     symbols: Vec<Complex>,
     eq: Vec<Complex>,
+    /// Structure-of-arrays I/Q planes for the stateless erroneous leg
+    /// (modulate_block → transmit_planes_into → slice_block).
+    tx_planes: crate::modem::SymbolPlanes,
+    eq_planes: crate::modem::SymbolPlanes,
     /// Batched channel-noise engine workspace (normals + fade gains).
     chan: ChannelScratch,
     /// Interleaver cached per (payload bits, spread).

@@ -150,6 +150,8 @@ impl ReliableLink<'_> {
             bit_errors: rx_bits.hamming(&bits),
             retransmissions: stats.retransmissions(),
             arq_exhausted: stats.exhausted,
+            decode_iterations: stats.decode_iterations,
+            decode_converged: stats.decode_converged,
             ..Default::default()
         }
     }
@@ -215,23 +217,43 @@ impl ErroneousLink<'_> {
             wire_bits
         };
 
-        // Stage: modulate.
-        self.con.modulate_into(air_bits, &mut s.symbols);
-
-        // Stage: channel leg. Version dispatch lives in the channel:
-        // V1 = seed-compatible scalar loop, V2Batched = the block
-        // channel-noise engine (see `crate::channel`). A persistent
-        // state reroutes only the fading source, never the noise stream.
-        match state {
-            None => self.channel.transmit_into(&s.symbols, rng, &mut s.chan, &mut s.eq),
-            Some(st) => {
-                self.channel.transmit_stateful_into(&s.symbols, st, rng, &mut s.chan, &mut s.eq)
+        // Stages: modulate -> channel leg -> hard demod. The stateless
+        // leg runs entirely in the block domain: structure-of-arrays I/Q
+        // planes from `modulate_block`, faded/equalized in place by
+        // `transmit_planes_into`, sliced back to bits by `slice_block` —
+        // no AoS symbol vector is ever materialized, and every value is
+        // bit-identical to the scalar chain (pinned by the modem/channel
+        // equivalence tests and `tests/symbol_plane_it.rs`). The stateful
+        // leg keeps the AoS path (its channel leg reroutes the fading
+        // source through the persistent state). Version dispatch lives in
+        // the channel: V1 = seed-compatible scalar loop, V2Batched = the
+        // block channel-noise engine. (The soft LLR variant of the demod
+        // stage lives on the reliable link's min-sum decoder.)
+        let nsym = match state {
+            None => {
+                self.con.modulate_block(air_bits, &mut s.tx_planes);
+                self.channel.transmit_planes_into(
+                    &s.tx_planes,
+                    rng,
+                    &mut s.chan,
+                    &mut s.eq_planes,
+                );
+                self.con.slice_block(&s.eq_planes, air_bits.len(), &mut s.rx_air);
+                s.tx_planes.len()
             }
-        }
-
-        // Stage: hard demod (the soft LLR variant of this stage lives on
-        // the reliable link's min-sum decoder).
-        self.con.demodulate_into(&s.eq, air_bits.len(), &mut s.rx_air);
+            Some(st) => {
+                self.con.modulate_into(air_bits, &mut s.symbols);
+                self.channel.transmit_stateful_into(
+                    &s.symbols,
+                    st,
+                    rng,
+                    &mut s.chan,
+                    &mut s.eq,
+                );
+                self.con.demodulate_into(&s.eq, air_bits.len(), &mut s.rx_air);
+                s.symbols.len()
+            }
+        };
 
         // Stage: RX inverse mapping — deinterleave, then unmap.
         let rx_bits: &BitVec = if self.interleave_spread > 0 {
@@ -252,8 +274,8 @@ impl ErroneousLink<'_> {
         // Stage: error anatomy (pre-protection damage classification).
         let mut report = TxReport {
             payload_bits: n,
-            symbols_sent: s.symbols.len(),
-            seconds: self.airtime.burst_time(s.symbols.len()),
+            symbols_sent: nsym,
+            seconds: self.airtime.burst_time(nsym),
             ..Default::default()
         };
         error_anatomy(&s.tx_bits, rx_bits, &mut report);

@@ -1,0 +1,352 @@
+//! Equivalence and allocation contracts of the PR-8 symbol-plane
+//! kernels, pinned from outside the crate through public API only:
+//!
+//! * `modulate_block` / `slice_block` == the scalar LUT modem, for every
+//!   `Modulation` and for odd / non-lane-multiple lengths;
+//! * `transmit_planes_into` == the AoS `transmit_into` leg, for every
+//!   `Fading` x `RngVersion`, including the RNG end-state (same number
+//!   of draws in the same order);
+//! * the layered `decode_min_sum_into` over a reused scratch == the
+//!   allocating `decode_min_sum` wrapper, bit-for-bit, and makes **zero
+//!   steady-state heap allocations** (measured by a thread-local
+//!   allocation counter, so concurrently running tests cannot perturb
+//!   the reading);
+//! * the table-free word-shuffle `BlockInterleaver` == the permutation
+//!   table reference for power-of-two column counts.
+//!
+//! The `#[ignore]`d release smoke at the bottom drives a full ECRT
+//! delivery through the layered min-sum path (CI `minsum-decode-smoke`
+//! job): `cargo test --release --test symbol_plane_it -- --ignored`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use awc_fl::bits::{BitVec, BlockInterleaver};
+use awc_fl::channel::{Channel, ChannelConfig, ChannelScratch, Fading};
+use awc_fl::fec::{ArqConfig, DecoderKind, DecoderScratch, LdpcCode};
+use awc_fl::math::Complex;
+use awc_fl::modem::{Constellation, Modulation, SymbolPlanes, PLANE_LANES};
+use awc_fl::rng::{Rng, RngVersion};
+use awc_fl::transport::{Scheme, Transport, TransportConfig, TxScratch};
+
+/// Allocation-counting allocator with a **thread-local** counter: the
+/// zero-alloc pin below reads only its own thread's allocations, so the
+/// test stays exact while the rest of this binary runs in parallel.
+/// (Const-initialized `Cell<usize>` TLS has no destructor and no lazy
+/// init, so touching it inside `alloc` cannot recurse.)
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // TLS can be unavailable during thread teardown; losing those counts
+    // is fine — the pin only reads mid-thread.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> usize {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn random_bits(rng: &mut Rng, n: usize) -> BitVec {
+    (0..n).map(|_| rng.bernoulli(0.5)).collect()
+}
+
+/// Lengths that stress the lane epilogues: empty-adjacent, sub-lane,
+/// around one lane, around a multiple of the lane width, and a long odd
+/// stretch that is not a multiple of anything interesting.
+fn awkward_lengths() -> Vec<usize> {
+    vec![
+        1,
+        3,
+        PLANE_LANES - 1,
+        PLANE_LANES,
+        PLANE_LANES + 1,
+        4 * PLANE_LANES - 3,
+        4 * PLANE_LANES,
+        2053,
+    ]
+}
+
+#[test]
+fn block_modem_matches_scalar_lut_modem_for_every_modulation() {
+    let mut rng = Rng::new(0x51AB);
+    for m in Modulation::ALL {
+        let con = Constellation::new(m);
+        for nsym in awkward_lengths() {
+            let nbits = nsym * m.bits_per_symbol();
+            let bits = random_bits(&mut rng, nbits);
+
+            // Modulate: SoA planes vs the scalar LUT path, bit-for-bit.
+            let scalar = con.modulate(&bits);
+            let mut planes = SymbolPlanes::new();
+            con.modulate_block(&bits, &mut planes);
+            assert_eq!(planes.len(), scalar.len(), "{m:?} n={nsym}");
+            for (i, s) in scalar.iter().enumerate() {
+                assert_eq!(planes.re[i].to_bits(), s.re.to_bits(), "{m:?} n={nsym} re[{i}]");
+                assert_eq!(planes.im[i].to_bits(), s.im.to_bits(), "{m:?} n={nsym} im[{i}]");
+            }
+
+            // Slice: perturb the constellation points and compare the
+            // branchless plane slicer against the scalar decision path
+            // on the *same* noisy values (decision boundaries included).
+            let noisy: Vec<Complex> = scalar
+                .iter()
+                .map(|s| {
+                    Complex::new(
+                        s.re + rng.normal_scaled(0.0, 0.35),
+                        s.im + rng.normal_scaled(0.0, 0.35),
+                    )
+                })
+                .collect();
+            let mut noisy_planes = SymbolPlanes::new();
+            noisy_planes.copy_from_symbols(&noisy);
+            let reference = con.demodulate(&noisy, nbits);
+            let mut sliced = BitVec::new();
+            con.slice_block(&noisy_planes, nbits, &mut sliced);
+            assert_eq!(sliced.len(), reference.len(), "{m:?} n={nsym}");
+            assert_eq!(sliced.hamming(&reference), 0, "{m:?} n={nsym}: slicers disagree");
+        }
+    }
+}
+
+#[test]
+fn plane_channel_leg_matches_aos_leg_for_every_fading_and_rng_version() {
+    let con = Constellation::new(Modulation::Qam16);
+    let mut brng = Rng::new(0x9A7E);
+    for fading in Fading::ALL {
+        for version in RngVersion::ALL {
+            for nbits in [12usize, 4 * 613] {
+                let cfg = ChannelConfig {
+                    snr_db: 9.0,
+                    fading,
+                    block_len: 48,
+                    rng_version: version,
+                    ..Default::default()
+                };
+                let ch = Channel::new(cfg);
+                let bits = random_bits(&mut brng, nbits);
+                let symbols = con.modulate(&bits);
+                let mut planes = SymbolPlanes::new();
+                planes.copy_from_symbols(&symbols);
+
+                // Identical RNG streams through both legs.
+                let mut r_aos = Rng::new(0xC4A1);
+                let mut r_soa = r_aos.clone();
+                let mut sc_aos = ChannelScratch::new();
+                let mut sc_soa = ChannelScratch::new();
+                let mut eq = Vec::new();
+                let mut eq_planes = SymbolPlanes::new();
+                ch.transmit_into(&symbols, &mut r_aos, &mut sc_aos, &mut eq);
+                ch.transmit_planes_into(&planes, &mut r_soa, &mut sc_soa, &mut eq_planes);
+
+                let label = format!("{fading:?} {version:?} nbits={nbits}");
+                assert_eq!(eq_planes.len(), eq.len(), "{label}");
+                for (i, e) in eq.iter().enumerate() {
+                    assert_eq!(eq_planes.re[i].to_bits(), e.re.to_bits(), "{label} re[{i}]");
+                    assert_eq!(eq_planes.im[i].to_bits(), e.im.to_bits(), "{label} im[{i}]");
+                }
+                // Same draws, same order: the streams end in lockstep.
+                assert_eq!(r_aos.next_u64(), r_soa.next_u64(), "{label}: RNG diverged");
+            }
+        }
+    }
+}
+
+/// Noisy codeword LLRs for the 802.11n code: BPSK-map an encoded random
+/// info word and add Gaussian noise, mild enough that min-sum converges
+/// for most (not necessarily all) words.
+fn noisy_llrs(code: &LdpcCode, rng: &mut Rng) -> Vec<f32> {
+    let info = random_bits(rng, code.k);
+    let cw = code.encode(&info);
+    (0..code.n)
+        .map(|v| {
+            let sign = if cw.get(v) { -1.0 } else { 1.0 };
+            (2.8 * sign + rng.normal_scaled(0.0, 1.0)) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn scratch_decoder_matches_allocating_wrapper_bit_for_bit() {
+    let code = LdpcCode::ieee80211n_648_r12();
+    let mut rng = Rng::new(0xDEC0);
+    let mut scratch = DecoderScratch::new();
+    let mut converged = 0usize;
+    for word in 0..24 {
+        let llr = noisy_llrs(code, &mut rng);
+        let (hard_ref, ok_ref) = code.decode_min_sum(&llr, 30);
+        let rep = code.decode_min_sum_into(&llr, 30, &mut scratch);
+        assert_eq!(rep.converged, ok_ref, "word {word}");
+        assert_eq!(scratch.hard().len(), hard_ref.len(), "word {word}");
+        assert_eq!(
+            scratch.hard().hamming(&hard_ref),
+            0,
+            "word {word}: scratch and allocating paths decoded different bits"
+        );
+        converged += rep.converged as usize;
+        if rep.converged {
+            assert!(rep.iterations <= 30, "word {word}");
+            assert!(code.syndrome_ok(scratch.hard()), "word {word}");
+        }
+    }
+    assert!(converged > 0, "noise level too high for the equivalence corpus");
+}
+
+#[test]
+fn steady_state_decode_makes_zero_heap_allocations() {
+    let code = LdpcCode::ieee80211n_648_r12();
+    let mut rng = Rng::new(0xA110C);
+    let words: Vec<Vec<f32>> = (0..8).map(|_| noisy_llrs(code, &mut rng)).collect();
+    let mut scratch = DecoderScratch::new();
+    // Warm-up sizes every scratch buffer (and the code's lazy static).
+    code.decode_min_sum_into(&words[0], 30, &mut scratch);
+
+    let before = thread_allocs();
+    let mut iters = 0usize;
+    for _ in 0..4 {
+        for llr in &words {
+            iters += code.decode_min_sum_into(llr, 30, &mut scratch).iterations;
+        }
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(delta, 0, "steady-state decode allocated {delta} times");
+    assert!(iters > 0);
+}
+
+#[test]
+fn shuffle_interleaver_matches_table_reference() {
+    let mut rng = Rng::new(0x1EAF);
+    for cols in [1usize, 2, 8, 32, 64] {
+        for rows in [1usize, 5, 63, 64, 65, 129, 1000] {
+            let fast = BlockInterleaver::new(rows, cols);
+            let slow = BlockInterleaver::new_table(rows, cols);
+            let cap = rows * cols;
+            for n in [cap, cap - (cap / 3).min(cap - 1)] {
+                let bits = random_bits(&mut rng, n);
+                let (mut fa, mut sa) = (BitVec::new(), BitVec::new());
+                fast.interleave_into(&bits, &mut fa);
+                slow.interleave_into(&bits, &mut sa);
+                assert_eq!(fa.len(), sa.len(), "rows={rows} cols={cols} n={n}");
+                assert_eq!(fa.hamming(&sa), 0, "rows={rows} cols={cols} n={n}: tx");
+
+                let (mut fb, mut sb) = (BitVec::new(), BitVec::new());
+                fast.deinterleave_into(&fa, n, &mut fb);
+                slow.deinterleave_into(&sa, n, &mut sb);
+                assert_eq!(fb.hamming(&sb), 0, "rows={rows} cols={cols} n={n}: rx");
+                assert_eq!(fb.hamming(&bits), 0, "rows={rows} cols={cols} n={n}: roundtrip");
+            }
+        }
+    }
+}
+
+#[test]
+fn proposed_uplink_is_deterministic_across_scratches_for_both_versions() {
+    // End-to-end: the plane-domain stateless leg delivers identical
+    // floats and reports from fresh and reused scratches, for both RNG
+    // versions and for a power-of-two (word-shuffle) interleaver spread.
+    let grads: Vec<f32> = {
+        let mut r = Rng::new(7);
+        (0..700).map(|_| r.normal_scaled(0.0, 0.3) as f32).collect()
+    };
+    for version in RngVersion::ALL {
+        for spread in [32usize, 37] {
+            let mut cfg = TransportConfig::new(
+                Scheme::Proposed,
+                Modulation::Qam16,
+                ChannelConfig { rng_version: version, ..ChannelConfig::with_snr(10.0) },
+            );
+            cfg.interleave_spread = spread;
+            let tx = Transport::new(cfg);
+            let label = format!("{version:?} spread={spread}");
+
+            let mut r1 = Rng::new(0xE2E);
+            let mut r2 = r1.clone();
+            let mut reused = TxScratch::new();
+            let (mut o1, mut o2) = (Vec::new(), Vec::new());
+            // Shape change before the pinned send: reused scratch must
+            // resize cleanly and still match a fresh one bit-for-bit.
+            let mut warm_rng = Rng::new(1);
+            let mut warm = Vec::new();
+            tx.send_into(&grads[..33], &mut warm_rng, &mut reused, &mut warm);
+
+            let rep1 = tx.send_into(&grads, &mut r1, &mut reused, &mut o1);
+            let rep2 = tx.send_into(&grads, &mut r2, &mut TxScratch::new(), &mut o2);
+            assert_eq!(rep1.symbols_sent, rep2.symbols_sent, "{label}");
+            assert_eq!(rep1.bit_errors, rep2.bit_errors, "{label}");
+            assert_eq!(rep1.decode_iterations, 0, "{label}: uncoded leg decoded?");
+            let b1: Vec<u32> = o1.iter().map(|x| x.to_bits()).collect();
+            let b2: Vec<u32> = o2.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(b1, b2, "{label}: delivery depends on scratch history");
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{label}: RNG diverged");
+        }
+    }
+}
+
+/// Release-mode ECRT smoke over the layered min-sum path (CI
+/// `minsum-decode-smoke` job): the 802.11n code must take the layered
+/// schedule, the coded uplink must deliver exactly, and the decoder
+/// observability counters must reach the report.
+#[test]
+#[ignore = "release decode smoke; run via the minsum-decode-smoke CI job"]
+fn ecrt_minsum_release_smoke() {
+    assert!(
+        LdpcCode::ieee80211n_648_r12().layered(),
+        "802.11n QC code must build a layered schedule"
+    );
+    let grads: Vec<f32> = {
+        let mut r = Rng::new(11);
+        (0..4096).map(|_| r.normal_scaled(0.0, 0.5) as f32).collect()
+    };
+    for version in RngVersion::ALL {
+        let mut cfg = TransportConfig::new(
+            Scheme::Ecrt,
+            Modulation::Qpsk,
+            ChannelConfig { rng_version: version, ..ChannelConfig::with_snr(10.0) },
+        );
+        cfg.arq = ArqConfig { max_attempts: 64, decoder: DecoderKind::MinSum { max_iter: 30 } };
+        let tx = Transport::new(cfg);
+        let mut rng = Rng::new(0x5E0C);
+        let mut scratch = TxScratch::new();
+        let mut out = Vec::new();
+        let report = tx.send_into(&grads, &mut rng, &mut scratch, &mut out);
+
+        let label = format!("{version:?}");
+        assert_eq!(out.len(), grads.len(), "{label}");
+        let exact = out.iter().zip(&grads).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(exact, "{label}: ECRT delivery not exact");
+        assert_eq!(report.arq_exhausted, 0, "{label}");
+        assert!(report.decode_iterations > 0, "{label}: no min-sum iterations reported");
+        assert!(report.decode_converged > 0, "{label}: no converged decodes reported");
+        assert!(
+            report.decode_converged <= report.decode_iterations,
+            "{label}: converged attempts cannot exceed total iterations"
+        );
+    }
+}
