@@ -428,6 +428,36 @@ fn main() {
         });
         let tp = report_throughput("faults (client passes)", clients as f64, &s);
         sink.push(name, &s, Some(tp));
+
+        // Multi-process fan-out (PR 9): the same 1024-client round fanned
+        // out over 4 worker processes — spawn amortizes across the
+        // iterations (the fleet persists on the server), so the record
+        // tracks the steady-state frame/fold overhead per pass.
+        let dcfg = ExperimentConfig {
+            clients,
+            participants_per_round: clients,
+            train_n: 4096,
+            test_n: 128,
+            rounds: 1,
+            eval_every: 0,
+            batch: 8,
+            scheme: Scheme::Proposed,
+            rng_version: RngVersion::V2Batched,
+            agg_shards: 0,
+            worker_procs: 4,
+            dist_worker_exe: env!("CARGO_BIN_EXE_awc-fl").to_string(),
+            ..ExperimentConfig::default()
+        };
+        let mut server = FlServer::from_config(dcfg, &engine).unwrap();
+        let mut round = 0usize;
+        let name = "dist: round 1024-client x4 procs";
+        let s = bench(name, 1, 5, || {
+            let out = server.run_round(round).unwrap();
+            black_box((out.mean_ber, out.worker_lost));
+            round += 1;
+        });
+        let tp = report_throughput("dist (client passes)", clients as f64, &s);
+        sink.push(name, &s, Some(tp));
     }
 
     // PJRT round-trips (needs artifacts).

@@ -1161,6 +1161,108 @@ impl ChannelState {
         }
     }
 
+    /// Serialize the full process state (RNG words + spare, fading
+    /// memory, oscillator bank) into `out` for the multi-process
+    /// fan-out's job spec. Round-trips bit-exactly through
+    /// [`ChannelState::decode_wire`]: a state resumed in a worker
+    /// process evolves identically to one that never crossed the
+    /// process boundary.
+    pub fn encode_wire(&self, out: &mut Vec<u8>) {
+        let (s, spare) = self.rng.to_raw();
+        for w in s {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        match spare {
+            Some(v) => {
+                out.push(1);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+        out.push(self.started as u8);
+        out.push(self.bad as u8);
+        out.extend_from_slice(&self.block_h.re.to_le_bytes());
+        out.extend_from_slice(&self.block_h.im.to_le_bytes());
+        out.extend_from_slice(&(self.block_pos as u64).to_le_bytes());
+        match &self.jakes {
+            Some(o) => {
+                out.push(1);
+                for arr in [&o.ci, &o.si, &o.cq, &o.sq, &o.ric, &o.ris, &o.rqc, &o.rqs] {
+                    for v in arr {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                out.extend_from_slice(&o.norm.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+    }
+
+    /// Decode a state produced by [`ChannelState::encode_wire`],
+    /// consuming bytes from `buf` starting at `*pos`. Returns `None` on
+    /// truncated or malformed input.
+    pub fn decode_wire(buf: &[u8], pos: &mut usize) -> Option<ChannelState> {
+        fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+            let s = buf.get(*pos..*pos + n)?;
+            *pos += n;
+            Some(s)
+        }
+        fn u64_at(buf: &[u8], pos: &mut usize) -> Option<u64> {
+            Some(u64::from_le_bytes(take(buf, pos, 8)?.try_into().ok()?))
+        }
+        fn f64_at(buf: &[u8], pos: &mut usize) -> Option<f64> {
+            Some(f64::from_bits(u64_at(buf, pos)?))
+        }
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = u64_at(buf, pos)?;
+        }
+        let spare = match take(buf, pos, 1)?[0] {
+            0 => None,
+            1 => Some(f64_at(buf, pos)?),
+            _ => return None,
+        };
+        let started = take(buf, pos, 1)?[0] != 0;
+        let bad = take(buf, pos, 1)?[0] != 0;
+        let block_h = Complex::new(f64_at(buf, pos)?, f64_at(buf, pos)?);
+        let block_pos = u64_at(buf, pos)? as usize;
+        let jakes = match take(buf, pos, 1)?[0] {
+            0 => None,
+            1 => {
+                let mut o = JakesOsc {
+                    ci: [0.0; JAKES_M],
+                    si: [0.0; JAKES_M],
+                    cq: [0.0; JAKES_M],
+                    sq: [0.0; JAKES_M],
+                    ric: [0.0; JAKES_M],
+                    ris: [0.0; JAKES_M],
+                    rqc: [0.0; JAKES_M],
+                    rqs: [0.0; JAKES_M],
+                    norm: 0.0,
+                };
+                for arr in [
+                    &mut o.ci, &mut o.si, &mut o.cq, &mut o.sq, &mut o.ric, &mut o.ris,
+                    &mut o.rqc, &mut o.rqs,
+                ] {
+                    for v in arr.iter_mut() {
+                        *v = f64_at(buf, pos)?;
+                    }
+                }
+                o.norm = f64_at(buf, pos)?;
+                Some(o)
+            }
+            _ => return None,
+        };
+        Some(ChannelState {
+            rng: Rng::from_raw(s, spare),
+            started,
+            jakes,
+            bad,
+            block_h,
+            block_pos,
+        })
+    }
+
     /// Fast-forward the fading process by `symbols` symbol periods
     /// without generating gains — inter-transmission gaps (e.g. the
     /// airtime of a reliable-arm burst whose coded leg stays stateless).

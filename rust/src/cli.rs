@@ -31,6 +31,7 @@ const VALUE_FLAGS: &[&str] = &[
     "pilots", "payloads", "floats", "max-retx", "deadline", "fault-dropout",
     "fault-straggle", "fault-straggle-max", "fault-corrupt",
     "fault-corrupt-len", "fault-poison", "quarantine", "quarantine-bound",
+    "worker-procs", "dist-timeout-s",
 ];
 
 impl Args {
@@ -132,6 +133,13 @@ mod tests {
         assert_eq!(a.opt_parse::<usize>("agg-shards").unwrap(), Some(16));
         assert_eq!(a.opt_parse::<usize>("pipeline-depth").unwrap(), Some(2));
         assert_eq!(a.opt_parse::<usize>("parallel-clients").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn dist_flags_take_values() {
+        let a = parse("run --worker-procs 4 --dist-timeout-s 12.5");
+        assert_eq!(a.opt_parse::<usize>("worker-procs").unwrap(), Some(4));
+        assert_eq!(a.opt_parse::<f64>("dist-timeout-s").unwrap(), Some(12.5));
     }
 
     #[test]

@@ -149,6 +149,27 @@ pub struct ExperimentConfig {
     /// Magnitude bound the quarantine screens against (the paper's
     /// gradient encoding range).
     pub quarantine_bound: f32,
+    /// Worker *processes* for the client fan-out (`crate::dist`): 0
+    /// (default) = in-process threads only, N >= 1 = the selection is
+    /// partitioned by `ShardPlan` across N spawned worker processes.
+    /// Traces are bit-identical for any value at a fixed `agg_shards`
+    /// (same substream keying, same selection-order fold). Composes
+    /// with `pipeline_depth`: evaluation stays coordinator-side over
+    /// parameter snapshots, so pipelined eval overlaps the distributed
+    /// fan-out exactly as it overlaps the threaded one. Within a worker
+    /// the passes run serially; `parallel_clients` only shapes the
+    /// in-process path.
+    pub worker_procs: usize,
+    /// Per-round reply deadline in wall-clock seconds for each worker
+    /// process; on expiry the worker is respawned once, then its
+    /// remaining clients are folded through the dropout ladder as
+    /// `worker_lost`. Must be finite and > 0.
+    pub dist_timeout_s: f64,
+    /// Executable to spawn for `--dist-worker` processes. Empty
+    /// (default) = the coordinator's own executable
+    /// (`std::env::current_exe`); tests point it at the built test
+    /// binary's sibling `awc-fl`.
+    pub dist_worker_exe: String,
 }
 
 impl Default for ExperimentConfig {
@@ -210,6 +231,9 @@ impl Default for ExperimentConfig {
             round_deadline_s: 0.0,
             quarantine: QuarantinePolicy::Off,
             quarantine_bound: 1.0,
+            worker_procs: 0,
+            dist_timeout_s: 30.0,
+            dist_worker_exe: String::new(),
         }
     }
 }
@@ -402,6 +426,16 @@ impl ExperimentConfig {
             "quarantine_bound" | "faults.quarantine_bound" => {
                 self.quarantine_bound = v.as_f64().ok_or_else(|| bad(key, v))? as f32
             }
+            "worker_procs" | "dist.worker_procs" => {
+                self.worker_procs = v.as_u64().ok_or_else(|| bad(key, v))? as usize
+            }
+            "dist_timeout_s" | "dist.timeout_s" => {
+                self.dist_timeout_s = v.as_f64().ok_or_else(|| bad(key, v))?
+            }
+            "dist_worker_exe" | "dist.worker_exe" => {
+                self.dist_worker_exe =
+                    v.as_str().ok_or_else(|| bad(key, v))?.to_string()
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -471,9 +505,105 @@ impl ExperimentConfig {
                 self.quarantine_bound
             )));
         }
+        if !self.dist_timeout_s.is_finite() || self.dist_timeout_s <= 0.0 {
+            return Err(Error::Config(format!(
+                "dist_timeout_s {} must be finite and > 0",
+                self.dist_timeout_s
+            )));
+        }
+        if self.worker_procs > 1024 {
+            return Err(Error::Config(format!(
+                "worker_procs {} exceeds the spawn sanity cap of 1024",
+                self.worker_procs
+            )));
+        }
         self.faults().validate().map_err(Error::Config)?;
         self.adaptive().validate().map_err(Error::Config)?;
         Ok(())
+    }
+
+    /// Canonical flat `key = value` rendering of every field, re-parsable
+    /// through [`parser::parse`] + [`ExperimentConfig::apply`] — the form
+    /// the multi-process fan-out ships a coordinator's config to its
+    /// workers in. Floats use Rust's shortest round-trip formatting, so
+    /// the rebuilt config is value-identical. One caveat: `ecrt_decoder`
+    /// renders as its key-space spelling (`bounded` / `minsum`), so
+    /// decoder parameterizations unreachable from the key space do not
+    /// survive (the key space pins them to the paper's values).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let mut kv = |k: &str, v: String| {
+            let _ = writeln!(s, "{k} = {v}");
+        };
+        let quoted = |v: &str| format!("\"{v}\"");
+        kv("seed", self.seed.to_string());
+        kv("clients", self.clients.to_string());
+        kv("shards_per_client", self.shards_per_client.to_string());
+        kv("participants_per_round", self.participants_per_round.to_string());
+        kv("train_n", self.train_n.to_string());
+        kv("test_n", self.test_n.to_string());
+        kv("rounds", self.rounds.to_string());
+        kv("lr", self.lr.to_string());
+        kv("eval_every", self.eval_every.to_string());
+        kv("scheme", quoted(self.scheme.name()));
+        kv("modulation", quoted(self.modulation.name()));
+        kv("snr_db", self.snr_db.to_string());
+        kv("fading", quoted(self.fading.name()));
+        kv("fade_block_symbols", self.fade_block_symbols.to_string());
+        kv("rician_k", self.rician_k.to_string());
+        kv("doppler_norm", self.doppler_norm.to_string());
+        kv("ge_p_g2b", self.ge_p_g2b.to_string());
+        kv("ge_p_b2g", self.ge_p_b2g.to_string());
+        kv("ge_bad_db", self.ge_bad_db.to_string());
+        kv("coherence", quoted(self.coherence.name()));
+        kv("rng_version", quoted(self.rng_version.name()));
+        kv("interleave_spread", self.interleave_spread.to_string());
+        kv("adaptive_enter_db", self.adaptive_enter_db.to_string());
+        kv("adaptive_exit_db", self.adaptive_exit_db.to_string());
+        kv("adaptive_pilots", self.adaptive_pilots.to_string());
+        kv("value_clamp", self.value_clamp.to_string());
+        kv("force_exp_msb", self.force_exp_msb.to_string());
+        kv("importance_mapping", self.importance_mapping.to_string());
+        let decoder = match self.ecrt_decoder {
+            DecoderKind::BoundedDistance(_) => "bounded",
+            DecoderKind::MinSum { .. } => "minsum",
+        };
+        kv("ecrt_decoder", quoted(decoder));
+        kv("max_attempts", self.max_attempts.to_string());
+        let mux = match self.mux {
+            Multiplexing::Tdma => "tdma",
+            Multiplexing::Fdma => "fdma",
+        };
+        kv("mux", quoted(mux));
+        kv("artifacts_dir", quoted(&self.artifacts_dir));
+        kv("data_dir", quoted(&self.data_dir));
+        kv("batch", self.batch.to_string());
+        kv("parallel_clients", self.parallel_clients.to_string());
+        kv("agg_shards", self.agg_shards.to_string());
+        kv("pipeline_depth", self.pipeline_depth.to_string());
+        kv("fault_dropout", self.fault_dropout.to_string());
+        kv("fault_straggle", self.fault_straggle.to_string());
+        kv("fault_straggle_max", self.fault_straggle_max.to_string());
+        kv("fault_corrupt", self.fault_corrupt.to_string());
+        kv("fault_corrupt_len", self.fault_corrupt_len.to_string());
+        kv("fault_poison", self.fault_poison.to_string());
+        kv("round_deadline_s", self.round_deadline_s.to_string());
+        kv("quarantine", quoted(self.quarantine.name()));
+        kv("quarantine_bound", self.quarantine_bound.to_string());
+        kv("worker_procs", self.worker_procs.to_string());
+        kv("dist_timeout_s", self.dist_timeout_s.to_string());
+        kv("dist_worker_exe", quoted(&self.dist_worker_exe));
+        s
+    }
+
+    /// Rebuild a config from [`ExperimentConfig::to_text`] output.
+    pub fn from_text(text: &str) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        for (k, v) in &parser::parse(text)? {
+            cfg.apply(k, v)?;
+        }
+        Ok(cfg)
     }
 
     /// Derived fault-injection plan (zero-fault by default).
@@ -832,6 +962,80 @@ mod tests {
             let o = vec![(k.to_string(), v.to_string())];
             assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
         }
+    }
+
+    #[test]
+    fn dist_knobs_parse_and_validate() {
+        // Defaults: in-process fan-out, sane worker deadline.
+        let c = ExperimentConfig::default();
+        assert_eq!(c.worker_procs, 0);
+        assert_eq!(c.dist_timeout_s, 30.0);
+        assert!(c.dist_worker_exe.is_empty());
+        // Bare and section-qualified spellings.
+        let o = vec![
+            ("worker_procs".to_string(), "4".to_string()),
+            ("dist_timeout_s".to_string(), "2.5".to_string()),
+            ("dist_worker_exe".to_string(), "/tmp/awc-fl".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.worker_procs, 4);
+        assert_eq!(c.dist_timeout_s, 2.5);
+        assert_eq!(c.dist_worker_exe, "/tmp/awc-fl");
+        let o = vec![
+            ("dist.worker_procs".to_string(), "3".to_string()),
+            ("dist.timeout_s".to_string(), "10".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        assert_eq!(c.worker_procs, 3);
+        assert_eq!(c.dist_timeout_s, 10.0);
+        // Nonsense combos are rejected with one-line errors.
+        for (k, v) in [
+            ("dist_timeout_s", "0"),
+            ("dist_timeout_s", "-5"),
+            ("dist_timeout_s", "inf"),
+            ("worker_procs", "-1"),
+            ("worker_procs", "2048"),
+        ] {
+            let o = vec![(k.to_string(), v.to_string())];
+            assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
+        }
+    }
+
+    #[test]
+    fn to_text_round_trips_through_the_key_space() {
+        // The wire form the dist supervisor ships: every field must
+        // survive render -> parse -> render bit-for-bit, including
+        // infinite thresholds and quoted strings.
+        let o = vec![
+            ("scheme".to_string(), "adaptive".to_string()),
+            ("coherence".to_string(), "round".to_string()),
+            ("fading".to_string(), "ge".to_string()),
+            ("modulation".to_string(), "16qam".to_string()),
+            ("adaptive_enter_db".to_string(), "-inf".to_string()),
+            ("adaptive_exit_db".to_string(), "-inf".to_string()),
+            ("lr".to_string(), "0.05".to_string()),
+            ("snr_db".to_string(), "9.7".to_string()),
+            ("ecrt_decoder".to_string(), "minsum".to_string()),
+            ("mux".to_string(), "fdma".to_string()),
+            ("quarantine".to_string(), "reject".to_string()),
+            ("worker_procs".to_string(), "3".to_string()),
+            ("dist_timeout_s".to_string(), "7.25".to_string()),
+            ("data_dir".to_string(), "/tmp/some dir/mnist".to_string()),
+        ];
+        let c = ExperimentConfig::load(None, &o).unwrap();
+        let text = c.to_text();
+        let c2 = ExperimentConfig::from_text(&text).unwrap();
+        assert_eq!(c2.to_text(), text);
+        assert_eq!(c2.scheme, Scheme::Adaptive);
+        assert_eq!(c2.coherence, Coherence::Round);
+        assert_eq!(c2.adaptive_enter_db, f64::NEG_INFINITY);
+        assert_eq!(c2.lr, c.lr);
+        assert_eq!(c2.snr_db, 9.7);
+        assert_eq!(c2.data_dir, "/tmp/some dir/mnist");
+        assert_eq!(c2.worker_procs, 3);
+        // The default config round-trips too.
+        let d = ExperimentConfig::default();
+        assert_eq!(ExperimentConfig::from_text(&d.to_text()).unwrap().to_text(), d.to_text());
     }
 
     #[test]

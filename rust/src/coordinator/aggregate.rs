@@ -125,6 +125,10 @@ pub enum SkipReason {
     /// The delivered gradients tripped the quarantine screen under
     /// `QuarantinePolicy::Reject`.
     Quarantine,
+    /// The worker *process* running this client's pass died (or timed
+    /// out) and its one respawn died too — the multi-process fan-out's
+    /// leg of the dropout ladder (`crate::dist`).
+    WorkerLost,
 }
 
 /// Shard-local streaming accumulator: a weighted `axpy` target plus the
@@ -208,6 +212,8 @@ pub struct RoundTotals {
     pub dropped: usize,
     pub deadline_skipped: usize,
     pub quarantined: usize,
+    /// Clients lost to dead worker processes (`crate::dist`).
+    pub worker_lost: usize,
     pub arq_exhausted: usize,
     /// Min-sum decoder totals (zero for schemes that never decode).
     pub decode_iterations: usize,
@@ -287,6 +293,7 @@ impl ShardedAggregator {
             SkipReason::Dropout => s.dropped += 1,
             SkipReason::Deadline => s.deadline_skipped += 1,
             SkipReason::Quarantine => s.quarantined += 1,
+            SkipReason::WorkerLost => s.worker_lost += 1,
         }
         Ok(())
     }
@@ -312,6 +319,7 @@ impl ShardedAggregator {
             totals.dropped += s.dropped;
             totals.deadline_skipped += s.deadline_skipped;
             totals.quarantined += s.quarantined;
+            totals.worker_lost += s.worker_lost;
             totals.arq_exhausted += s.arq_exhausted;
             totals.decode_iterations += s.decode_iterations;
             totals.decode_converged += s.decode_converged;

@@ -52,6 +52,19 @@
 //! global model while round `r+1`'s client fan-out proceeds; trace rows
 //! are still emitted in round order, and results are bit-identical to
 //! the synchronous path because evaluation never mutates server state.
+//!
+//! # Multi-process fan-out
+//!
+//! With `ExperimentConfig::worker_procs > 0` the client fan-out leaves
+//! the process entirely: the round's selection is partitioned across
+//! `worker_procs` child processes (see [`crate::dist`]), each of which
+//! rebuilds the identical substrate from the shipped config and runs the
+//! same pass kernel ([`client_pass_core`]) the in-process engine runs.
+//! Replies are consumed strictly in selection order through the same
+//! [`FlServer::feed_pass`] ladder, so traces stay bit-identical to the
+//! in-process engine at the same `agg_shards`. A worker that dies twice
+//! in one round degrades its remaining clients through
+//! [`SkipReason::WorkerLost`] and the round completes.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -59,16 +72,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::channel::{ChannelState, Coherence};
 use crate::config::ExperimentConfig;
 use crate::coordinator::aggregate::{
-    resolve_shards, Contribution, ShardedAggregator, SkipReason,
+    resolve_shards, Contribution, ShardPlan, ShardedAggregator, SkipReason,
 };
 use crate::coordinator::ClientState;
 use crate::data::{partition_non_iid, Dataset, TrainTest};
+use crate::dist::{JobEntry, Supervisor};
 use crate::faults::{self, ClientFault, QuarantinePolicy};
 use crate::metrics::{RoundRecord, ShardStats, Trace};
 use crate::model::ParamSet;
 use crate::rng::Rng;
 use crate::runtime::Engine;
-use crate::timing::{Ledger, Multiplexing};
+use crate::timing::{Ledger, LinkArm, Multiplexing};
 use crate::transport::{PolicyReport, PolicyState, Transport, TxReport, TxScratch};
 use crate::Result;
 
@@ -107,6 +121,9 @@ pub struct RoundOutcome {
     /// Clients whose delivered gradients tripped the quarantine screen
     /// (clamped or rejected per `QuarantinePolicy`).
     pub quarantined: usize,
+    /// Selected clients lost to dead worker processes (multi-process
+    /// fan-out only: a worker died twice in one round; 0 in-process).
+    pub worker_lost: usize,
     /// ECRT codewords delivered best-effort after exhausting the ARQ
     /// retry budget, summed across the round's passes.
     pub arq_exhausted: usize,
@@ -132,24 +149,122 @@ pub struct RoundOutcome {
 /// Reusable buffers for one in-flight client pass: the flattened TX
 /// gradient, the received floats, and the pass observables. A bounded
 /// pool of these (the delivery window) replaces the seed's per-client
-/// `Vec` allocations.
+/// `Vec` allocations. `pub(crate)` so the `--dist-worker` event loop
+/// ([`crate::dist::worker`]) shares the exact pass kernel.
 #[derive(Default)]
-struct PassSlot {
-    flat: Vec<f32>,
-    rx: Vec<f32>,
-    loss: f32,
-    grad_max: f32,
-    grad_small_frac: f64,
-    report: TxReport,
+pub(crate) struct PassSlot {
+    pub(crate) flat: Vec<f32>,
+    pub(crate) rx: Vec<f32>,
+    pub(crate) loss: f32,
+    pub(crate) grad_max: f32,
+    pub(crate) grad_small_frac: f64,
+    pub(crate) report: TxReport,
     /// The deterministic fault drawn for this `(client, round)` pass.
-    fault: ClientFault,
+    pub(crate) fault: ClientFault,
     /// Floats flagged by the quarantine screen over `rx`.
-    quarantined: usize,
+    pub(crate) quarantined: usize,
     /// The client's persistent fading process *after* this pass
     /// (`coherence = round` only): the worker clones the client's state,
     /// the transmission evolves the clone, and the consumer folds it
     /// back in selection order. `None` when stateless/link or dropped.
+    pub(crate) coh: Option<ChannelState>,
+}
+
+/// The immutable inputs of one client pass — everything
+/// [`client_pass_core`] reads. Both fan-out engines build one:
+/// [`FlServer::client_pass`] borrows the server's own state, and the
+/// `--dist-worker` loop borrows the substrate it rebuilt from the
+/// shipped config. Sharing the kernel (not just the recipe) is what
+/// makes cross-process passes bit-identical *by construction*.
+pub(crate) struct PassCtx<'a> {
+    pub(crate) cfg: &'a ExperimentConfig,
+    pub(crate) engine: &'a Engine,
+    pub(crate) transport: &'a Transport,
+    pub(crate) train: &'a Dataset,
+    pub(crate) clients: &'a [ClientState],
+    pub(crate) params: &'a ParamSet,
+    pub(crate) root_rng: &'a Rng,
+}
+
+/// One client's full round contribution: minibatch gradient (eq. 4)
+/// plus the wireless uplink, computed into the pass slot's reusable
+/// buffers. Pure w.r.t. the context and deterministic given
+/// `(client, round, prev_arm, coh)` — all randomness comes from
+/// substreams keyed on `(client, round)`, so this is safe to run on any
+/// worker thread *or in any worker process*. The caller supplies the
+/// only non-rederivable state: the client's previous CSI-adaptive arm
+/// and (for `coherence = round`) a clone of its persistent fading
+/// process, which the transmission evolves into `slot.coh`.
+pub(crate) fn client_pass_core(
+    ctx: &PassCtx<'_>,
+    ci: usize,
+    round: usize,
+    prev_arm: Option<LinkArm>,
     coh: Option<ChannelState>,
+    scratch: &mut TxScratch,
+    slot: &mut PassSlot,
+) -> Result<()> {
+    // Deterministic fault plan, drawn from its own substream keyed on
+    // `(client, round)` — the batch/channel streams below never see
+    // it, and the zero-fault default never derives it.
+    slot.fault = ctx.cfg.faults().draw(ctx.root_rng, ci, round);
+    slot.quarantined = 0;
+    slot.coh = None;
+    if slot.fault.dropout {
+        // Dropped clients never compute or transmit; the consumer
+        // skips them without touching the ledger or the policy.
+        slot.report = TxReport::default();
+        slot.loss = 0.0;
+        return Ok(());
+    }
+    let client = &ctx.clients[ci];
+    // Local computation (eq. 4): one minibatch gradient.
+    let mut brng = ctx.root_rng.substream("batch", ci as u64, round as u64);
+    let (x, y) = client.gather(ctx.train, ctx.cfg.batch, ctx.engine.manifest.num_classes, &mut brng);
+    let (loss, grads) = ctx.engine.train_step(ctx.params, &x, &y)?;
+
+    // Uplink over the wireless substrate, into the slot's buffers.
+    // One fused sweep over the flattened gradient collects both
+    // diagnostics (max |g|, small-gradient fraction) instead of
+    // re-walking the model-sized tensors per statistic.
+    grads.flatten_into(&mut slot.flat);
+    let mut grad_max = 0f32;
+    let mut small = 0usize;
+    for &g in &slot.flat {
+        let a = g.abs();
+        grad_max = grad_max.max(a);
+        if a < GRAD_BOUND {
+            small += 1;
+        }
+    }
+    slot.grad_max = grad_max;
+    slot.grad_small_frac = if slot.flat.is_empty() {
+        1.0
+    } else {
+        small as f64 / slot.flat.len() as f64
+    };
+    let mut crng = ctx.root_rng.substream("channel", ci as u64, round as u64);
+    // `prev_arm` is the hysteresis memory the adaptive transport
+    // thresholds against; the persistent fading process (`coherence =
+    // round`) rides the same pattern: the caller hands in a clone, the
+    // transmission evolves it, the consumer folds it back later.
+    slot.coh = coh;
+    slot.report = ctx.transport.send_coherent_into(
+        &slot.flat,
+        &mut crng,
+        prev_arm,
+        slot.coh.as_mut(),
+        scratch,
+        &mut slot.rx,
+    );
+    // Post-channel fault stages: burst corruption of the delivered
+    // payload, then the quarantine screen against the encoding bound.
+    if let Some(spec) = slot.fault.corrupt {
+        spec.apply(&mut slot.rx);
+    }
+    slot.quarantined = faults::screen(&mut slot.rx, ctx.cfg.quarantine_bound, ctx.cfg.quarantine);
+    slot.loss = loss;
+    Ok(())
 }
 
 /// Bounded in-order delivery ring between the client-pass workers and
@@ -321,6 +436,10 @@ pub struct FlServer<'e> {
     coh: Vec<ChannelState>,
     /// Reusable (client -> evolved state) buffer for that fold-back.
     coh_updates: Vec<(usize, ChannelState)>,
+    /// The multi-process fan-out's worker fleet (`worker_procs > 0`
+    /// only), spawned lazily at the first round and persistent across
+    /// rounds so workers bootstrap their substrate exactly once.
+    dist: Option<Supervisor>,
 }
 
 impl<'e> FlServer<'e> {
@@ -362,6 +481,7 @@ impl<'e> FlServer<'e> {
             policy_updates: Vec::new(),
             coh,
             coh_updates: Vec::new(),
+            dist: None,
         })
     }
 
@@ -411,11 +531,24 @@ impl<'e> FlServer<'e> {
         cap.min(jobs).max(1)
     }
 
-    /// One client's full round contribution: minibatch gradient (eq. 4)
-    /// plus the wireless uplink, computed into the pass slot's reusable
-    /// buffers. Pure w.r.t. the server state (`&self`) and deterministic
-    /// given `(client, round)` — all randomness comes from substreams
-    /// keyed on those, so this is safe to run on any worker thread.
+    /// The immutable pass context over this server's own state (the
+    /// in-process engine's view; the dist worker builds its own).
+    fn pass_ctx(&self) -> PassCtx<'_> {
+        PassCtx {
+            cfg: &self.cfg,
+            engine: self.engine,
+            transport: &self.transport,
+            train: &self.train,
+            clients: &self.clients,
+            params: &self.params,
+            root_rng: &self.root_rng,
+        }
+    }
+
+    /// One client's full round contribution — [`client_pass_core`] over
+    /// this server's state. `self.policy` / `self.coh` are read-only for
+    /// the whole fan-out, so the reads here are safe on any worker
+    /// thread (updates land after the workers join, in selection order).
     fn client_pass(
         &self,
         ci: usize,
@@ -423,75 +556,15 @@ impl<'e> FlServer<'e> {
         scratch: &mut TxScratch,
         slot: &mut PassSlot,
     ) -> Result<()> {
-        // Deterministic fault plan, drawn from its own substream keyed on
-        // `(client, round)` — the batch/channel streams below never see
-        // it, and the zero-fault default never derives it.
-        slot.fault = self.cfg.faults().draw(&self.root_rng, ci, round);
-        slot.quarantined = 0;
-        slot.coh = None;
-        if slot.fault.dropout {
-            // Dropped clients never compute or transmit; the consumer
-            // skips them without touching the ledger or the policy.
-            slot.report = TxReport::default();
-            slot.loss = 0.0;
-            return Ok(());
-        }
-        let client = &self.clients[ci];
-        // Local computation (eq. 4): one minibatch gradient.
-        let mut brng = self.root_rng.substream("batch", ci as u64, round as u64);
-        let (x, y) = client.gather(
-            &self.train,
-            self.cfg.batch,
-            self.engine.manifest.num_classes,
-            &mut brng,
-        );
-        let (loss, grads) = self.engine.train_step(&self.params, &x, &y)?;
-
-        // Uplink over the wireless substrate, into the slot's buffers.
-        // One fused sweep over the flattened gradient collects both
-        // diagnostics (max |g|, small-gradient fraction) instead of
-        // re-walking the model-sized tensors per statistic.
-        grads.flatten_into(&mut slot.flat);
-        let mut grad_max = 0f32;
-        let mut small = 0usize;
-        for &g in &slot.flat {
-            let a = g.abs();
-            grad_max = grad_max.max(a);
-            if a < GRAD_BOUND {
-                small += 1;
-            }
-        }
-        slot.grad_max = grad_max;
-        slot.grad_small_frac = if slot.flat.is_empty() {
-            1.0
-        } else {
-            small as f64 / slot.flat.len() as f64
-        };
-        let mut crng = self.root_rng.substream("channel", ci as u64, round as u64);
-        // The client's previous policy arm is the hysteresis memory the
-        // adaptive transport thresholds against; `self.policy` is
-        // read-only for the whole fan-out, so this is a safe concurrent
-        // read (updates land after the workers join). The persistent
-        // fading process (`coherence = round`) rides the same pattern:
-        // clone the client's state, evolve the clone, fold back later.
-        slot.coh = (!self.coh.is_empty()).then(|| self.coh[ci].clone());
-        slot.report = self.transport.send_coherent_into(
-            &slot.flat,
-            &mut crng,
+        client_pass_core(
+            &self.pass_ctx(),
+            ci,
+            round,
             self.policy[ci].arm,
-            slot.coh.as_mut(),
+            (!self.coh.is_empty()).then(|| self.coh[ci].clone()),
             scratch,
-            &mut slot.rx,
-        );
-        // Post-channel fault stages: burst corruption of the delivered
-        // payload, then the quarantine screen against the encoding bound.
-        if let Some(spec) = slot.fault.corrupt {
-            spec.apply(&mut slot.rx);
-        }
-        slot.quarantined =
-            faults::screen(&mut slot.rx, self.cfg.quarantine_bound, self.cfg.quarantine);
-        slot.loss = loss;
-        Ok(())
+            slot,
+        )
     }
 
     /// Fold a completed pass into its shard (consumer side — always
@@ -614,7 +687,87 @@ impl<'e> FlServer<'e> {
         // basis of the deadline gate. Consumer-side only, so it is
         // independent of worker scheduling.
         let mut deadline_used = 0.0f64;
-        let run_res: Result<()> = if workers <= 1 {
+        let run_res: Result<()> = if self.cfg.worker_procs > 0 {
+            // Multi-process fan-out: partition the selection across the
+            // worker fleet by the aggregation's own shard geometry
+            // (`shard_of(i) % procs` — contiguous shard ranges deal out
+            // round-robin), ship each worker its slice plus the fresh
+            // global model, and consume replies strictly in selection
+            // order through the same feed ladder as the in-process
+            // engines. Workers reply in entry order, so the next reply
+            // from `owner(i)` is exactly selection index `i` — no
+            // reorder buffer, bit-identical reduction by construction.
+            peak_inflight = 1;
+            match self
+                .dist
+                .take()
+                .map(Ok)
+                .unwrap_or_else(|| Supervisor::spawn(&self.cfg, self.engine))
+            {
+                Err(e) => Err(e),
+                Ok(mut sup) => {
+                    let slot = &mut slots[0];
+                    let res = (|| -> Result<()> {
+                        let procs = sup.workers();
+                        let plan = ShardPlan::new(n, shards);
+                        let mut jobs: Vec<Vec<JobEntry>> = vec![Vec::new(); procs];
+                        for (i, &ci) in selected.iter().enumerate() {
+                            jobs[plan.shard_of(i) % procs].push(JobEntry {
+                                sel_idx: i as u32,
+                                client: ci as u32,
+                                prev_arm: self.policy[ci].arm,
+                                coh: (!self.coh.is_empty())
+                                    .then(|| self.coh[ci].clone()),
+                            });
+                        }
+                        sup.begin_round(round, self.params.flatten(), jobs)?;
+                        for (i, &ci) in selected.iter().enumerate() {
+                            let owner = plan.shard_of(i) % procs;
+                            match sup.next_pass(owner)? {
+                                Some(p) => {
+                                    debug_assert_eq!(p.sel_idx as usize, i);
+                                    slot.fault = ClientFault {
+                                        dropout: p.dropout,
+                                        straggle: p.straggle,
+                                        // Corruption was applied to `rx`
+                                        // worker-side; the spec itself
+                                        // never crosses the pipe.
+                                        corrupt: None,
+                                    };
+                                    slot.quarantined = p.quarantined as usize;
+                                    slot.loss = p.loss;
+                                    slot.grad_max = p.grad_max;
+                                    slot.grad_small_frac = p.grad_small_frac;
+                                    slot.report = p.report;
+                                    slot.coh = p.coh;
+                                    slot.rx = p.rx;
+                                    self.feed_pass(
+                                        &mut agg,
+                                        &mut ledger,
+                                        &mut updates,
+                                        &mut coh_updates,
+                                        &mut deadline_used,
+                                        i,
+                                        ci,
+                                        selected_data,
+                                        slot,
+                                    )?;
+                                }
+                                // Lost workers degrade gracefully: their
+                                // remaining clients fold through the
+                                // dropout ladder (no ledger charge, no
+                                // policy/coherence update — the passes
+                                // may never have happened).
+                                None => agg.skip(i, SkipReason::WorkerLost)?,
+                            }
+                        }
+                        sup.finish_round()
+                    })();
+                    self.dist = Some(sup);
+                    res
+                }
+            }
+        } else if workers <= 1 {
             // Serial: compute and feed in place — one resident pass.
             let scratch = &mut pool[0];
             let slot = &mut slots[0];
@@ -744,6 +897,7 @@ impl<'e> FlServer<'e> {
             dropped: totals.dropped,
             deadline_skipped: totals.deadline_skipped,
             quarantined: totals.quarantined,
+            worker_lost: totals.worker_lost,
             arq_exhausted: totals.arq_exhausted,
             decode_iterations: totals.decode_iterations,
             decode_converged: totals.decode_converged,
@@ -879,5 +1033,6 @@ fn emit_round(
         quarantined: out.quarantined,
         arq_exhausted: out.arq_exhausted,
         decode_iterations: out.decode_iterations,
+        worker_lost: out.worker_lost,
     });
 }

@@ -1,0 +1,33 @@
+//! Multi-process federation engine: distribute the sharded client
+//! fan-out across worker *processes* (PR 9).
+//!
+//! With `ExperimentConfig::worker_procs > 0`, the round loop in
+//! [`crate::coordinator::FlServer`] stops computing client passes
+//! in-process and instead partitions the round's selection across
+//! `worker_procs` child processes running this crate's hidden
+//! `--dist-worker` mode. Ownership is derived from the same
+//! [`ShardPlan`] geometry the aggregation uses
+//! (`shard_of(sel_idx) % worker_procs`), each worker computes its owned
+//! passes in selection order, and the coordinator folds the replies back
+//! through the untouched
+//! [`ShardedAggregator`] **strictly in selection order** — so for any
+//! `worker_procs ∈ {0 = in-process, 1, N}` the traces, CSVs, and global
+//! models are bit-identical at the same `agg_shards` (pinned by
+//! `tests/dist_it.rs`).
+//!
+//! Module map:
+//! * [`proto`] — framed wire protocol over the worker pipes;
+//! * [`worker`] — the `--dist-worker` event loop (substrate rebuild +
+//!   job serving), sharing the coordinator's pass kernel;
+//! * [`supervisor`] — spawn/health/timeout/respawn management and the
+//!   `worker_lost` degradation ladder.
+//!
+//! [`ShardPlan`]: crate::coordinator::ShardPlan
+//! [`ShardedAggregator`]: crate::coordinator::ShardedAggregator
+
+pub mod proto;
+pub mod supervisor;
+pub mod worker;
+
+pub use proto::{FromWorker, InitMsg, JobEntry, JobMsg, PassMsg, ToWorker};
+pub use supervisor::Supervisor;

@@ -1,0 +1,649 @@
+//! Wire protocol of the multi-process fan-out: length-prefixed frames
+//! over the worker's stdin/stdout pipes, hand-rolled little-endian
+//! encoding (no serde on the offline vendor set).
+//!
+//! Framing: `[u32 LE payload length][payload]`, `payload[0]` = message
+//! tag. The coordinator→worker direction carries [`ToWorker`] (substrate
+//! bootstrap, per-round job slices, shutdown); the reply direction
+//! carries [`FromWorker`] (one [`PassMsg`] per job entry *in entry
+//! order*, then a round-done marker). Entry-order replies are what lets
+//! the supervisor consume strictly in selection order without any
+//! reorder buffer — the determinism contract of
+//! [`crate::coordinator::server`] rides on it.
+//!
+//! Everything bit-exact crosses the pipe verbatim: RNG-free floats as
+//! raw IEEE-754 words, the persistent fading process via
+//! [`ChannelState::encode_wire`], and the experiment config as the
+//! `key = value` text of [`ExperimentConfig::to_text`] (see that method
+//! for the key-space caveat).
+//!
+//! [`ExperimentConfig::to_text`]: crate::config::ExperimentConfig::to_text
+
+use std::io::{Read, Write};
+
+use crate::channel::ChannelState;
+use crate::timing::LinkArm;
+use crate::transport::{PolicyReport, TxReport};
+use crate::{Error, Result};
+
+/// Upper bound on a single frame (a 10k-client job slice with per-entry
+/// fading state plus the model-sized parameter vector stays well under
+/// this; anything larger is stream corruption).
+pub const MAX_FRAME: usize = 1 << 30;
+
+const TAG_INIT: u8 = 1;
+const TAG_JOB: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+const TAG_PASS: u8 = 4;
+const TAG_ROUND_DONE: u8 = 5;
+const TAG_ERR: u8 = 6;
+
+/// Substrate bootstrap, sent once per worker process right after spawn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InitMsg {
+    /// The full experiment config as `key = value` text
+    /// ([`crate::config::ExperimentConfig::to_text`]).
+    pub cfg_text: String,
+    /// The model manifest as its own text grammar
+    /// ([`crate::model::Manifest::to_text`]).
+    pub manifest_text: String,
+    /// `Some(seed)` rebuilds the deterministic synthetic backend;
+    /// `None` loads the PJRT artifacts from the config's
+    /// `artifacts_dir`.
+    pub synthetic_seed: Option<u64>,
+    /// This worker's id in `0..worker_count`.
+    pub worker_id: u32,
+    pub worker_count: u32,
+}
+
+/// One selected client a worker owns this round.
+#[derive(Clone, Debug)]
+pub struct JobEntry {
+    /// Index into the round's selection order (the aggregation key).
+    pub sel_idx: u32,
+    /// Client id (index into the partition).
+    pub client: u32,
+    /// The client's previous CSI-adaptive arm (hysteresis memory).
+    pub prev_arm: Option<LinkArm>,
+    /// The client's persistent fading process (`coherence = round`
+    /// only) — the worker evolves it and ships it back in the pass.
+    pub coh: Option<ChannelState>,
+}
+
+/// A round's work for one worker: the fresh global model plus the
+/// worker's owned slice of the selection, in selection order.
+#[derive(Clone, Debug)]
+pub struct JobMsg {
+    pub round: u64,
+    /// Flattened global parameters (the paper's error-free downlink).
+    pub params: Vec<f32>,
+    pub entries: Vec<JobEntry>,
+}
+
+/// Coordinator → worker messages.
+#[derive(Clone, Debug)]
+pub enum ToWorker {
+    Init(InitMsg),
+    Job(JobMsg),
+    Shutdown,
+}
+
+/// One completed client pass — every observable
+/// [`crate::coordinator::server`]'s feed ladder reads, nothing else
+/// (the TX-side flat gradient and the corruption spec stay worker-side;
+/// corruption is applied before `rx` crosses the pipe).
+#[derive(Clone, Debug)]
+pub struct PassMsg {
+    pub sel_idx: u32,
+    pub client: u32,
+    /// The deterministic fault plan's verdicts for this pass.
+    pub dropout: bool,
+    pub straggle: f64,
+    /// Floats flagged by the quarantine screen over `rx`.
+    pub quarantined: u64,
+    pub loss: f32,
+    pub grad_max: f32,
+    pub grad_small_frac: f64,
+    pub report: TxReport,
+    /// The evolved fading process (`coherence = round` transmitters).
+    pub coh: Option<ChannelState>,
+    /// Received floats after channel + protection + injected corruption.
+    pub rx: Vec<f32>,
+}
+
+/// Worker → coordinator messages.
+#[derive(Clone, Debug)]
+pub enum FromWorker {
+    Pass(PassMsg),
+    RoundDone { round: u64 },
+    Err { message: String },
+}
+
+/// Write one `[u32 LE len][payload]` frame and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload (blocking). `Err` on EOF, short read, or an
+/// over-[`MAX_FRAME`] length prefix.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("dist frame length {len} exceeds cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+// ---- primitive put/get helpers -------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_f32(out, x);
+    }
+}
+
+fn malformed() -> Error {
+    Error::Runtime("dist: malformed frame".into())
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = pos.checked_add(n).filter(|&e| e <= buf.len()).ok_or_else(malformed)?;
+    let s = &buf[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    Ok(take(buf, pos, 1)?[0])
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(buf, pos, 4)?.try_into().unwrap()))
+}
+
+fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap()))
+}
+
+fn get_f32(buf: &[u8], pos: &mut usize) -> Result<f32> {
+    Ok(f32::from_le_bytes(take(buf, pos, 4)?.try_into().unwrap()))
+}
+
+fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    Ok(f64::from_le_bytes(take(buf, pos, 8)?.try_into().unwrap()))
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let n = get_u64(buf, pos)? as usize;
+    let s = take(buf, pos, n)?;
+    String::from_utf8(s.to_vec()).map_err(|_| malformed())
+}
+
+fn get_f32s(buf: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let n = get_u64(buf, pos)? as usize;
+    if n
+        .checked_mul(4)
+        .and_then(|b| pos.checked_add(b))
+        .filter(|&end| end <= buf.len())
+        .is_none()
+    {
+        return Err(malformed());
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(get_f32(buf, pos)?);
+    }
+    Ok(v)
+}
+
+// ---- composite helpers ---------------------------------------------
+
+fn put_opt_coh(out: &mut Vec<u8>, coh: &Option<ChannelState>) {
+    match coh {
+        None => put_u8(out, 0),
+        Some(c) => {
+            put_u8(out, 1);
+            c.encode_wire(out);
+        }
+    }
+}
+
+fn get_opt_coh(buf: &[u8], pos: &mut usize) -> Result<Option<ChannelState>> {
+    match get_u8(buf, pos)? {
+        0 => Ok(None),
+        1 => ChannelState::decode_wire(buf, pos).map(Some).ok_or_else(malformed),
+        _ => Err(malformed()),
+    }
+}
+
+fn put_opt_arm(out: &mut Vec<u8>, arm: Option<LinkArm>) {
+    put_u8(
+        out,
+        match arm {
+            None => 0,
+            Some(LinkArm::Approx) => 1,
+            Some(LinkArm::Fallback) => 2,
+        },
+    );
+}
+
+fn get_opt_arm(buf: &[u8], pos: &mut usize) -> Result<Option<LinkArm>> {
+    match get_u8(buf, pos)? {
+        0 => Ok(None),
+        1 => Ok(Some(LinkArm::Approx)),
+        2 => Ok(Some(LinkArm::Fallback)),
+        _ => Err(malformed()),
+    }
+}
+
+fn put_report(out: &mut Vec<u8>, r: &TxReport) {
+    put_f64(out, r.seconds);
+    for v in [
+        r.payload_bits,
+        r.symbols_sent,
+        r.bit_errors,
+        r.errors_sign,
+        r.errors_exp,
+        r.errors_frac,
+        r.corrupted_floats,
+        r.retransmissions,
+        r.arq_exhausted,
+        r.decode_iterations,
+        r.decode_converged,
+    ] {
+        put_u64(out, v as u64);
+    }
+    match &r.policy {
+        None => put_u8(out, 0),
+        Some(p) => {
+            put_u8(out, 1);
+            put_opt_arm(out, Some(p.arm));
+            match p.est_snr_db {
+                None => put_u8(out, 0),
+                Some(e) => {
+                    put_u8(out, 1);
+                    put_f64(out, e);
+                }
+            }
+            put_u8(out, p.switched as u8);
+            put_f64(out, p.pilot_seconds);
+        }
+    }
+}
+
+fn get_report(buf: &[u8], pos: &mut usize) -> Result<TxReport> {
+    let seconds = get_f64(buf, pos)?;
+    let mut us = [0usize; 11];
+    for v in &mut us {
+        *v = get_u64(buf, pos)? as usize;
+    }
+    let policy = match get_u8(buf, pos)? {
+        0 => None,
+        1 => {
+            let arm = get_opt_arm(buf, pos)?.ok_or_else(malformed)?;
+            let est_snr_db = match get_u8(buf, pos)? {
+                0 => None,
+                1 => Some(get_f64(buf, pos)?),
+                _ => return Err(malformed()),
+            };
+            let switched = get_u8(buf, pos)? != 0;
+            let pilot_seconds = get_f64(buf, pos)?;
+            Some(PolicyReport { arm, est_snr_db, switched, pilot_seconds })
+        }
+        _ => return Err(malformed()),
+    };
+    Ok(TxReport {
+        seconds,
+        payload_bits: us[0],
+        symbols_sent: us[1],
+        bit_errors: us[2],
+        errors_sign: us[3],
+        errors_exp: us[4],
+        errors_frac: us[5],
+        corrupted_floats: us[6],
+        retransmissions: us[7],
+        arq_exhausted: us[8],
+        decode_iterations: us[9],
+        decode_converged: us[10],
+        policy,
+    })
+}
+
+// ---- message encode/decode -----------------------------------------
+
+impl ToWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ToWorker::Init(m) => {
+                put_u8(&mut out, TAG_INIT);
+                put_str(&mut out, &m.cfg_text);
+                put_str(&mut out, &m.manifest_text);
+                match m.synthetic_seed {
+                    None => put_u8(&mut out, 0),
+                    Some(s) => {
+                        put_u8(&mut out, 1);
+                        put_u64(&mut out, s);
+                    }
+                }
+                put_u32(&mut out, m.worker_id);
+                put_u32(&mut out, m.worker_count);
+            }
+            ToWorker::Job(j) => {
+                put_u8(&mut out, TAG_JOB);
+                put_u64(&mut out, j.round);
+                put_f32s(&mut out, &j.params);
+                put_u64(&mut out, j.entries.len() as u64);
+                for e in &j.entries {
+                    put_u32(&mut out, e.sel_idx);
+                    put_u32(&mut out, e.client);
+                    put_opt_arm(&mut out, e.prev_arm);
+                    put_opt_coh(&mut out, &e.coh);
+                }
+            }
+            ToWorker::Shutdown => put_u8(&mut out, TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ToWorker> {
+        let pos = &mut 0usize;
+        let msg = match get_u8(buf, pos)? {
+            TAG_INIT => {
+                let cfg_text = get_str(buf, pos)?;
+                let manifest_text = get_str(buf, pos)?;
+                let synthetic_seed = match get_u8(buf, pos)? {
+                    0 => None,
+                    1 => Some(get_u64(buf, pos)?),
+                    _ => return Err(malformed()),
+                };
+                let worker_id = get_u32(buf, pos)?;
+                let worker_count = get_u32(buf, pos)?;
+                ToWorker::Init(InitMsg {
+                    cfg_text,
+                    manifest_text,
+                    synthetic_seed,
+                    worker_id,
+                    worker_count,
+                })
+            }
+            TAG_JOB => {
+                let round = get_u64(buf, pos)?;
+                let params = get_f32s(buf, pos)?;
+                let n = get_u64(buf, pos)? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    entries.push(JobEntry {
+                        sel_idx: get_u32(buf, pos)?,
+                        client: get_u32(buf, pos)?,
+                        prev_arm: get_opt_arm(buf, pos)?,
+                        coh: get_opt_coh(buf, pos)?,
+                    });
+                }
+                ToWorker::Job(JobMsg { round, params, entries })
+            }
+            TAG_SHUTDOWN => ToWorker::Shutdown,
+            _ => return Err(malformed()),
+        };
+        if *pos != buf.len() {
+            return Err(malformed());
+        }
+        Ok(msg)
+    }
+}
+
+impl FromWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            FromWorker::Pass(p) => {
+                put_u8(&mut out, TAG_PASS);
+                put_u32(&mut out, p.sel_idx);
+                put_u32(&mut out, p.client);
+                put_u8(&mut out, p.dropout as u8);
+                put_f64(&mut out, p.straggle);
+                put_u64(&mut out, p.quarantined);
+                put_f32(&mut out, p.loss);
+                put_f32(&mut out, p.grad_max);
+                put_f64(&mut out, p.grad_small_frac);
+                put_report(&mut out, &p.report);
+                put_opt_coh(&mut out, &p.coh);
+                put_f32s(&mut out, &p.rx);
+            }
+            FromWorker::RoundDone { round } => {
+                put_u8(&mut out, TAG_ROUND_DONE);
+                put_u64(&mut out, *round);
+            }
+            FromWorker::Err { message } => {
+                put_u8(&mut out, TAG_ERR);
+                put_str(&mut out, message);
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<FromWorker> {
+        let pos = &mut 0usize;
+        let msg = match get_u8(buf, pos)? {
+            TAG_PASS => FromWorker::Pass(PassMsg {
+                sel_idx: get_u32(buf, pos)?,
+                client: get_u32(buf, pos)?,
+                dropout: get_u8(buf, pos)? != 0,
+                straggle: get_f64(buf, pos)?,
+                quarantined: get_u64(buf, pos)?,
+                loss: get_f32(buf, pos)?,
+                grad_max: get_f32(buf, pos)?,
+                grad_small_frac: get_f64(buf, pos)?,
+                report: get_report(buf, pos)?,
+                coh: get_opt_coh(buf, pos)?,
+                rx: get_f32s(buf, pos)?,
+            }),
+            TAG_ROUND_DONE => FromWorker::RoundDone { round: get_u64(buf, pos)? },
+            TAG_ERR => FromWorker::Err { message: get_str(buf, pos)? },
+            _ => return Err(malformed()),
+        };
+        if *pos != buf.len() {
+            return Err(malformed());
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap(), b"");
+        assert!(read_frame(&mut cur).is_err()); // EOF
+    }
+
+    #[test]
+    fn frame_rejects_oversize_length() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut std::io::Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn to_worker_roundtrip() {
+        let root = Rng::new(0xD15D);
+        let init = ToWorker::Init(InitMsg {
+            cfg_text: "seed = 7\nscheme = \"adaptive\"\n".into(),
+            manifest_text: "train_batch 8\n".into(),
+            synthetic_seed: Some(0xC0DE),
+            worker_id: 2,
+            worker_count: 4,
+        });
+        match ToWorker::decode(&init.encode()).unwrap() {
+            ToWorker::Init(m) => {
+                assert_eq!(m.cfg_text, "seed = 7\nscheme = \"adaptive\"\n");
+                assert_eq!(m.synthetic_seed, Some(0xC0DE));
+                assert_eq!((m.worker_id, m.worker_count), (2, 4));
+            }
+            other => panic!("{other:?}"),
+        }
+        let coh = ChannelState::new(root.substream("coh", 3, 0));
+        let job = ToWorker::Job(JobMsg {
+            round: 11,
+            params: vec![0.5, -1.25, f32::MIN_POSITIVE],
+            entries: vec![
+                JobEntry { sel_idx: 0, client: 9, prev_arm: None, coh: None },
+                JobEntry {
+                    sel_idx: 5,
+                    client: 1,
+                    prev_arm: Some(LinkArm::Fallback),
+                    coh: Some(coh.clone()),
+                },
+            ],
+        });
+        match ToWorker::decode(&job.encode()).unwrap() {
+            ToWorker::Job(j) => {
+                assert_eq!(j.round, 11);
+                assert_eq!(j.params, vec![0.5, -1.25, f32::MIN_POSITIVE]);
+                assert_eq!(j.entries.len(), 2);
+                assert_eq!(j.entries[1].prev_arm, Some(LinkArm::Fallback));
+                // The fading process crosses the pipe bit-exactly: its
+                // re-encoding is byte-identical.
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                coh.encode_wire(&mut a);
+                j.entries[1].coh.as_ref().unwrap().encode_wire(&mut b);
+                assert_eq!(a, b);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            ToWorker::decode(&ToWorker::Shutdown.encode()).unwrap(),
+            ToWorker::Shutdown
+        ));
+    }
+
+    #[test]
+    fn from_worker_roundtrip() {
+        let pass = FromWorker::Pass(PassMsg {
+            sel_idx: 3,
+            client: 7,
+            dropout: false,
+            straggle: 1.5,
+            quarantined: 2,
+            loss: 0.75,
+            grad_max: 3.5,
+            grad_small_frac: 0.875,
+            report: TxReport {
+                seconds: 0.125,
+                payload_bits: 640,
+                symbols_sent: 320,
+                bit_errors: 5,
+                errors_sign: 1,
+                errors_exp: 2,
+                errors_frac: 2,
+                corrupted_floats: 3,
+                retransmissions: 4,
+                arq_exhausted: 1,
+                decode_iterations: 40,
+                decode_converged: 9,
+                policy: Some(PolicyReport {
+                    arm: LinkArm::Approx,
+                    est_snr_db: Some(-2.5),
+                    switched: true,
+                    pilot_seconds: 0.0625,
+                }),
+            },
+            coh: None,
+            rx: vec![1.0, -0.0, f32::NAN],
+        });
+        match FromWorker::decode(&pass.encode()).unwrap() {
+            FromWorker::Pass(p) => {
+                assert_eq!((p.sel_idx, p.client), (3, 7));
+                assert_eq!(p.straggle, 1.5);
+                assert_eq!(p.report.seconds, 0.125);
+                assert_eq!(p.report.decode_iterations, 40);
+                let pol = p.report.policy.unwrap();
+                assert_eq!(pol.arm, LinkArm::Approx);
+                assert_eq!(pol.est_snr_db, Some(-2.5));
+                assert!(pol.switched);
+                // NaN payload floats survive bit-exactly.
+                assert_eq!(p.rx.len(), 3);
+                assert_eq!(p.rx[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(p.rx[2].to_bits(), f32::NAN.to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            FromWorker::decode(&FromWorker::RoundDone { round: 4 }.encode()).unwrap(),
+            FromWorker::RoundDone { round: 4 }
+        ));
+        match FromWorker::decode(&FromWorker::Err { message: "boom".into() }.encode()).unwrap() {
+            FromWorker::Err { message } => assert_eq!(message, "boom"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_garbage_and_bad_tags() {
+        let mut buf = ToWorker::Shutdown.encode();
+        buf.push(0);
+        assert!(ToWorker::decode(&buf).is_err());
+        assert!(ToWorker::decode(&[99]).is_err());
+        assert!(FromWorker::decode(&[]).is_err());
+        // Truncated pass frame.
+        let pass = FromWorker::Pass(PassMsg {
+            sel_idx: 0,
+            client: 0,
+            dropout: true,
+            straggle: 1.0,
+            quarantined: 0,
+            loss: 0.0,
+            grad_max: 0.0,
+            grad_small_frac: 0.0,
+            report: TxReport::default(),
+            coh: None,
+            rx: Vec::new(),
+        })
+        .encode();
+        assert!(FromWorker::decode(&pass[..pass.len() - 1]).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! The coordinator-side process supervisor of the multi-process fan-out:
+//! spawn `worker_procs` children in the hidden `--dist-worker` mode,
+//! ship each its owned job slice per round, and hand passes back to the
+//! round loop **in the exact order the worker computed them** (entry
+//! order == within-owner selection order).
+//!
+//! # Failure model
+//!
+//! A worker that dies (EOF on its pipe) or goes silent past
+//! `dist_timeout_s` between replies is respawned **once per round**; the
+//! fresh incarnation gets the round's params again plus the not-yet-
+//! delivered tail of its job slice, so a single transient death is
+//! invisible in the results. A second failure in the same round marks
+//! the worker *lost*: its remaining clients fold through the dropout
+//! ladder as [`SkipReason::WorkerLost`] and the round completes. Lost
+//! workers get a fresh process at the next round's job send.
+//!
+//! Replies from a dead incarnation can still be sitting in the pipe when
+//! its successor starts, so every queue item carries the incarnation
+//! that produced it and stale items are discarded — a late pass from a
+//! killed process can never be double-counted.
+//!
+//! [`SkipReason::WorkerLost`]: crate::coordinator::aggregate::SkipReason
+
+use std::collections::VecDeque;
+use std::io::BufReader;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ExperimentConfig;
+use crate::dist::proto::{self, FromWorker, InitMsg, JobEntry, JobMsg, PassMsg, ToWorker};
+use crate::runtime::Engine;
+use crate::{Error, Result};
+
+/// One queued event from a worker's reader thread.
+enum QueueItem {
+    Msg(FromWorker),
+    /// The pipe hit EOF or framed garbage: the incarnation is gone.
+    Dead,
+}
+
+/// Incarnation-tagged event queue between a worker's reader thread and
+/// the consuming round loop.
+#[derive(Default)]
+struct Queue {
+    state: Mutex<VecDeque<(u64, QueueItem)>>,
+    cond: Condvar,
+}
+
+impl Queue {
+    fn push(&self, incarnation: u64, item: QueueItem) {
+        self.state.lock().unwrap().push_back((incarnation, item));
+        self.cond.notify_all();
+    }
+
+    /// Pop the next item produced by `incarnation`, discarding items
+    /// from dead predecessors. `None` on deadline.
+    fn pop(&self, incarnation: u64, deadline: Instant) -> Option<QueueItem> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            while st.front().is_some_and(|&(i, _)| i < incarnation) {
+                st.pop_front();
+            }
+            if st.front().is_some_and(|&(i, _)| i == incarnation) {
+                return Some(st.pop_front().unwrap().1);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.cond.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+}
+
+struct WorkerHandle {
+    child: Option<Child>,
+    stdin: Option<ChildStdin>,
+    queue: Arc<Queue>,
+    /// Monotonic per-worker process generation; reader threads tag
+    /// every event with the incarnation they read for.
+    incarnation: u64,
+}
+
+/// Spawns, feeds, and supervises the worker fleet. One per
+/// [`crate::coordinator::FlServer`], persistent across rounds (workers
+/// bootstrap their substrate once and reuse it every round).
+pub struct Supervisor {
+    cfg_text: String,
+    manifest_text: String,
+    synthetic_seed: Option<u64>,
+    exe: PathBuf,
+    timeout: Duration,
+    workers: Vec<WorkerHandle>,
+    // --- per-round state (begin_round .. finish_round) ---
+    round: u64,
+    flat: Vec<f32>,
+    jobs: Vec<Vec<JobEntry>>,
+    /// Passes received per worker this round (== resend offset).
+    cursor: Vec<usize>,
+    /// Whether the one-per-round respawn budget is spent.
+    respawned: Vec<bool>,
+    /// Permanently lost for the rest of this round.
+    lost: Vec<bool>,
+}
+
+impl Supervisor {
+    /// Spawn `cfg.worker_procs` workers and initialize their substrate.
+    pub fn spawn(cfg: &ExperimentConfig, engine: &Engine) -> Result<Supervisor> {
+        let procs = cfg.worker_procs.max(1);
+        let exe: PathBuf = if cfg.dist_worker_exe.is_empty() {
+            std::env::current_exe()?
+        } else {
+            cfg.dist_worker_exe.clone().into()
+        };
+        let mut sup = Supervisor {
+            cfg_text: cfg.to_text(),
+            manifest_text: engine.manifest.to_text(),
+            synthetic_seed: engine.replication_seed(),
+            exe,
+            timeout: Duration::from_secs_f64(cfg.dist_timeout_s),
+            workers: Vec::with_capacity(procs),
+            round: 0,
+            flat: Vec::new(),
+            jobs: vec![Vec::new(); procs],
+            cursor: vec![0; procs],
+            respawned: vec![false; procs],
+            lost: vec![false; procs],
+        };
+        for id in 0..procs {
+            let queue = Arc::new(Queue::default());
+            let (child, stdin) = sup.launch(id, procs, Arc::clone(&queue), 1)?;
+            sup.workers.push(WorkerHandle {
+                child: Some(child),
+                stdin: Some(stdin),
+                queue,
+                incarnation: 1,
+            });
+        }
+        Ok(sup)
+    }
+
+    /// Worker process count (== `cfg.worker_procs`).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Spawn one worker process, wire its reader thread to `queue`, and
+    /// send the Init frame.
+    fn launch(
+        &self,
+        id: usize,
+        count: usize,
+        queue: Arc<Queue>,
+        incarnation: u64,
+    ) -> Result<(Child, ChildStdin)> {
+        let mut child = Command::new(&self.exe)
+            .arg("--dist-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .map_err(|e| {
+                Error::Runtime(format!("dist: spawning {} failed: {e}", self.exe.display()))
+            })?;
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        // Reader thread: frames -> queue until EOF/garbage, then a Dead
+        // marker. Detached — it exits with its pipe.
+        std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                let item = match proto::read_frame(&mut r) {
+                    Ok(buf) => match FromWorker::decode(&buf) {
+                        Ok(msg) => QueueItem::Msg(msg),
+                        Err(_) => QueueItem::Dead,
+                    },
+                    Err(_) => QueueItem::Dead,
+                };
+                let done = matches!(item, QueueItem::Dead);
+                queue.push(incarnation, item);
+                if done {
+                    return;
+                }
+            }
+        });
+        let init = ToWorker::Init(InitMsg {
+            cfg_text: self.cfg_text.clone(),
+            manifest_text: self.manifest_text.clone(),
+            synthetic_seed: self.synthetic_seed,
+            worker_id: id as u32,
+            worker_count: count as u32,
+        });
+        proto::write_frame(&mut stdin, &init.encode())?;
+        Ok((child, stdin))
+    }
+
+    /// Kill worker `id`'s current process (if any) and start a fresh
+    /// incarnation.
+    fn respawn(&mut self, id: usize) -> Result<()> {
+        self.workers[id].stdin = None; // close the pipe first
+        if let Some(mut c) = self.workers[id].child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        let incarnation = self.workers[id].incarnation + 1;
+        let queue = Arc::clone(&self.workers[id].queue);
+        let count = self.workers.len();
+        let (child, stdin) = self.launch(id, count, queue, incarnation)?;
+        let h = &mut self.workers[id];
+        h.child = Some(child);
+        h.stdin = Some(stdin);
+        h.incarnation = incarnation;
+        Ok(())
+    }
+
+    /// Send worker `id` its job slice from entry `from` onward (0 at
+    /// round start; the delivery cursor after a respawn).
+    fn send_job(&mut self, id: usize, from: usize) -> std::io::Result<()> {
+        let msg = ToWorker::Job(JobMsg {
+            round: self.round,
+            params: self.flat.clone(),
+            entries: self.jobs[id][from.min(self.jobs[id].len())..].to_vec(),
+        });
+        let frame = msg.encode();
+        let stdin = self.workers[id].stdin.as_mut().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "dist worker pipe closed")
+        })?;
+        proto::write_frame(stdin, &frame)
+    }
+
+    /// Open round `round`: reset the failure budgets, revive workers
+    /// lost in earlier rounds, and ship every worker its job slice plus
+    /// the fresh global model.
+    pub fn begin_round(
+        &mut self,
+        round: usize,
+        flat: Vec<f32>,
+        jobs: Vec<Vec<JobEntry>>,
+    ) -> Result<()> {
+        debug_assert_eq!(jobs.len(), self.workers.len());
+        self.round = round as u64;
+        self.flat = flat;
+        self.jobs = jobs;
+        for id in 0..self.workers.len() {
+            self.cursor[id] = 0;
+            self.respawned[id] = false;
+            // A worker lost last round gets a fresh process now; this is
+            // recovery between rounds, not this round's respawn budget.
+            if self.lost[id] {
+                self.respawn(id)?;
+                self.lost[id] = false;
+            }
+        }
+        for id in 0..self.workers.len() {
+            if self.send_job(id, 0).is_err() {
+                // Dead at job send (no pass ever in flight): one
+                // immediate relaunch that also doesn't consume the
+                // in-round budget.
+                self.respawn(id)?;
+                if self.send_job(id, 0).is_err() {
+                    self.lost[id] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Next pass from worker `id`, in entry order. `Ok(None)` means the
+    /// worker is lost for this round (death/timeout after the respawn
+    /// budget): the caller folds its remaining clients through the
+    /// `WorkerLost` skip. `Err` only on systemic failures (a worker
+    /// *reported* an error — config/protocol trouble every respawn
+    /// would hit again — or respawn itself failed).
+    pub fn next_pass(&mut self, id: usize) -> Result<Option<PassMsg>> {
+        loop {
+            if self.lost[id] {
+                return Ok(None);
+            }
+            let incarnation = self.workers[id].incarnation;
+            let deadline = Instant::now() + self.timeout;
+            match self.workers[id].queue.pop(incarnation, deadline) {
+                Some(QueueItem::Msg(FromWorker::Pass(p))) => {
+                    self.cursor[id] += 1;
+                    return Ok(Some(p));
+                }
+                Some(QueueItem::Msg(FromWorker::Err { message })) => {
+                    return Err(Error::Runtime(format!("dist worker {id}: {message}")));
+                }
+                // Early RoundDone (stream drift), death, or timeout:
+                // spend the respawn budget or go lost.
+                Some(QueueItem::Msg(FromWorker::RoundDone { .. }))
+                | Some(QueueItem::Dead)
+                | None => {
+                    if self.respawned[id] {
+                        self.lost[id] = true;
+                        return Ok(None);
+                    }
+                    self.respawned[id] = true;
+                    self.respawn(id)?;
+                    if self.send_job(id, self.cursor[id]).is_err() {
+                        self.lost[id] = true;
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Close the round: drain each live worker's RoundDone marker so
+    /// next round's replies start stream-aligned. A worker that fails
+    /// here is marked lost (it gets a fresh process next round).
+    pub fn finish_round(&mut self) -> Result<()> {
+        for id in 0..self.workers.len() {
+            if self.lost[id] {
+                continue;
+            }
+            let incarnation = self.workers[id].incarnation;
+            let deadline = Instant::now() + self.timeout;
+            match self.workers[id].queue.pop(incarnation, deadline) {
+                Some(QueueItem::Msg(FromWorker::RoundDone { .. })) => {}
+                _ => self.lost[id] = true,
+            }
+        }
+        self.flat = Vec::new();
+        Ok(())
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Best-effort graceful shutdown, then make sure nothing leaks:
+        // close pipes, give workers a moment to exit, kill stragglers.
+        for h in &mut self.workers {
+            if let Some(stdin) = h.stdin.as_mut() {
+                let _ = proto::write_frame(stdin, &ToWorker::Shutdown.encode());
+            }
+            h.stdin = None;
+        }
+        for h in &mut self.workers {
+            if let Some(mut child) = h.child.take() {
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

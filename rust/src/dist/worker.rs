@@ -1,0 +1,158 @@
+//! The hidden `--dist-worker` mode's event loop: rebuild the exact
+//! substrate the coordinator built (same seed, same substreams, same
+//! partition), then serve job frames from stdin until shutdown.
+//!
+//! Determinism contract: every stochastic draw a client pass makes comes
+//! from `Rng::new(cfg.seed).substream(purpose, client, round)` — pure
+//! functions of the config — so a pass computed here is bit-identical to
+//! the same pass computed in the coordinator's process. The only state
+//! that is *not* rederivable (the CSI-adaptive hysteresis arm and the
+//! `coherence = round` fading process) crosses the pipe per job entry.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::server::{client_pass_core, PassCtx, PassSlot};
+use crate::coordinator::ClientState;
+use crate::data::{load_default, partition_non_iid, TrainTest};
+use crate::dist::proto::{self, FromWorker, PassMsg, ToWorker};
+use crate::model::{Manifest, ParamSet};
+use crate::rng::Rng;
+use crate::runtime::Engine;
+use crate::transport::{Transport, TxScratch};
+use crate::{Error, Result};
+
+/// Serve the worker protocol on stdin/stdout and exit. Never returns:
+/// exit code 0 on a clean shutdown, 2 after a reported error (a
+/// best-effort [`FromWorker::Err`] frame precedes the exit so the
+/// supervisor can surface the message instead of a bare EOF).
+pub fn run() -> ! {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut r = BufReader::new(stdin.lock());
+    let mut w = BufWriter::new(stdout.lock());
+    let code = match serve(&mut r, &mut w) {
+        Ok(()) => 0,
+        Err(e) => {
+            let frame = FromWorker::Err { message: e.to_string() }.encode();
+            let _ = proto::write_frame(&mut w, &frame);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Deterministic crash hooks for the supervisor's failure tests: when
+/// `AWC_DIST_KILL_WORKER` names this worker's id, the process exits
+/// abruptly (no farewell frame — the supervisor sees raw EOF, exactly
+/// like a SIGKILL) once it has sent `AWC_DIST_KILL_AFTER` passes.
+/// Respawned incarnations inherit the environment and die again, which
+/// is what drives a worker into the `worker_lost` ladder.
+struct KillHook {
+    armed: bool,
+    after: u64,
+    sent: u64,
+}
+
+impl KillHook {
+    fn from_env(worker_id: u32) -> KillHook {
+        let target: Option<u32> =
+            std::env::var("AWC_DIST_KILL_WORKER").ok().and_then(|s| s.parse().ok());
+        let after: Option<u64> =
+            std::env::var("AWC_DIST_KILL_AFTER").ok().and_then(|s| s.parse().ok());
+        KillHook {
+            armed: target == Some(worker_id) && after.is_some(),
+            after: after.unwrap_or(0),
+            sent: 0,
+        }
+    }
+
+    fn check(&self) {
+        if self.armed && self.sent >= self.after {
+            std::process::exit(17);
+        }
+    }
+}
+
+fn serve(r: &mut impl Read, w: &mut impl Write) -> Result<()> {
+    let init = match ToWorker::decode(&proto::read_frame(r)?)? {
+        ToWorker::Init(m) => m,
+        other => {
+            return Err(Error::Runtime(format!(
+                "dist worker: first frame must be Init, got {other:?}"
+            )))
+        }
+    };
+    let kill = &mut KillHook::from_env(init.worker_id);
+    let cfg = ExperimentConfig::from_text(&init.cfg_text)?;
+    // The backend the coordinator runs is the backend we run: the
+    // replicable synthetic engine rebuilds from its seed; PJRT reloads
+    // the same AOT artifacts from disk.
+    let engine = match init.synthetic_seed {
+        Some(seed) => Engine::synthetic_with(Manifest::parse(&init.manifest_text)?, seed),
+        None => Engine::load(&cfg.artifacts_dir)?,
+    };
+    let data: TrainTest = load_default(&cfg.data_dir, cfg.seed, cfg.train_n, cfg.test_n)?;
+    let root_rng = Rng::new(cfg.seed);
+    let mut part_rng = root_rng.substream("partition", 0, 0);
+    let shards =
+        partition_non_iid(&data.train, cfg.clients, cfg.shards_per_client, &mut part_rng);
+    let clients: Vec<ClientState> = shards.into_iter().map(ClientState::new).collect();
+    let transport = Transport::new(cfg.transport());
+    // Schema template for unflattening each round's broadcast params.
+    let template = ParamSet::zeros(&engine.manifest);
+    let mut scratch = TxScratch::new();
+    let mut slot = PassSlot::default();
+
+    loop {
+        let job = match ToWorker::decode(&proto::read_frame(r)?)? {
+            ToWorker::Job(j) => j,
+            ToWorker::Shutdown => return Ok(()),
+            ToWorker::Init(_) => {
+                return Err(Error::Runtime("dist worker: duplicate Init".into()))
+            }
+        };
+        let params = template.unflatten_like(&job.params)?;
+        let ctx = PassCtx {
+            cfg: &cfg,
+            engine: &engine,
+            transport: &transport,
+            train: &data.train,
+            clients: &clients,
+            params: &params,
+            root_rng: &root_rng,
+        };
+        for e in &job.entries {
+            kill.check();
+            client_pass_core(
+                &ctx,
+                e.client as usize,
+                job.round as usize,
+                e.prev_arm,
+                e.coh.clone(),
+                &mut scratch,
+                &mut slot,
+            )?;
+            let msg = FromWorker::Pass(PassMsg {
+                sel_idx: e.sel_idx,
+                client: e.client,
+                dropout: slot.fault.dropout,
+                straggle: slot.fault.straggle,
+                quarantined: slot.quarantined as u64,
+                loss: slot.loss,
+                grad_max: slot.grad_max,
+                grad_small_frac: slot.grad_small_frac,
+                report: slot.report,
+                coh: slot.coh.take(),
+                rx: std::mem::take(&mut slot.rx),
+            });
+            proto::write_frame(w, &msg.encode())?;
+            // Recycle the rx buffer for the next pass.
+            if let FromWorker::Pass(p) = msg {
+                slot.rx = p.rx;
+            }
+            kill.sent += 1;
+        }
+        proto::write_frame(w, &FromWorker::RoundDone { round: job.round }.encode())?;
+    }
+}

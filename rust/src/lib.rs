@@ -26,6 +26,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod faults;
 pub mod fec;
 pub mod math;

@@ -21,6 +21,12 @@ use awc_fl::runtime::Engine;
 use awc_fl::Result;
 
 fn main() {
+    // Hidden mode: a multi-process fan-out worker (spawned by
+    // `dist::Supervisor`, never by hand). Dispatched before argument
+    // parsing — the worker speaks frames on stdin/stdout and exits.
+    if std::env::args().nth(1).as_deref() == Some("--dist-worker") {
+        awc_fl::dist::worker::run();
+    }
     let args = match Args::parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(e) => {
@@ -70,6 +76,8 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("fault-poison", "fault_poison"),
         ("quarantine", "quarantine"),
         ("quarantine-bound", "quarantine_bound"),
+        ("worker-procs", "worker_procs"),
+        ("dist-timeout-s", "dist_timeout_s"),
     ] {
         if let Some(v) = args.opt(flag) {
             overrides.push((key.to_string(), v.to_string()));

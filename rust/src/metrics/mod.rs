@@ -50,6 +50,9 @@ pub struct RoundRecord {
     /// Min-sum decoder iterations summed across this round's passes
     /// (0 whenever the scheme never runs the iterative decoder).
     pub decode_iterations: usize,
+    /// Selected clients lost to dead worker *processes* (multi-process
+    /// fan-out only; 0 in-process and on healthy fleets).
+    pub worker_lost: usize,
 }
 
 /// A full experiment trace.
@@ -102,7 +105,7 @@ impl Trace {
             let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
             let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
             s.push_str(&format!(
-                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{},{},{}\n",
                 self.label,
                 r.round,
                 r.comm_time_s,
@@ -120,7 +123,8 @@ impl Trace {
                 r.deadline_skipped,
                 r.quarantined,
                 r.arq_exhausted,
-                r.decode_iterations
+                r.decode_iterations,
+                r.worker_lost
             ));
         }
         s
@@ -131,7 +135,7 @@ impl Trace {
 pub const CSV_HEADER: &str = "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,\
      retransmissions,corrupted_frac,approx_frac,policy_switches,est_snr_db,\
      approx_time_s,fallback_time_s,dropped,deadline_skipped,quarantined,\
-     arq_exhausted,decode_iters\n";
+     arq_exhausted,decode_iters,worker_lost\n";
 
 /// Write traces to a CSV file (creating parent dirs).
 pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
@@ -196,6 +200,9 @@ pub struct ShardStats {
     pub decode_iterations: usize,
     /// Decode attempts that early-terminated on a clean syndrome.
     pub decode_converged: usize,
+    /// Selected clients in this shard's range lost to dead worker
+    /// processes (multi-process fan-out only).
+    pub worker_lost: usize,
 }
 
 impl ShardStats {
@@ -320,7 +327,7 @@ mod tests {
         // Every row carries exactly the header's column count (the
         // policy columns included; unsounded rounds leave est_snr empty).
         let ncols = CSV_HEADER.trim().split(',').count();
-        assert_eq!(ncols, 18);
+        assert_eq!(ncols, 19);
         for line in csv.lines() {
             assert_eq!(line.split(',').count(), ncols, "{line}");
         }
@@ -341,12 +348,14 @@ mod tests {
             quarantined: 4,
             arq_exhausted: 5,
             decode_iterations: 6,
+            worker_lost: 7,
             ..Default::default()
         });
         let row = t.csv_rows();
         assert!(row.contains(",0.7500,3,10.25,1.500000,4.000000"), "{row}");
-        // The fault columns then the decoder-work column terminate the row.
-        assert!(row.trim_end().ends_with(",2,1,4,5,6"), "{row}");
+        // The fault columns, the decoder-work column, and the dist-loss
+        // column terminate the row.
+        assert!(row.trim_end().ends_with(",2,1,4,5,6,7"), "{row}");
     }
 
     #[test]

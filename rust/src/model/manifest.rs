@@ -94,6 +94,27 @@ impl Manifest {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
 
+    /// Render back to the canonical manifest text. Round-trips through
+    /// [`Manifest::parse`] losslessly (pinned below) — the multi-process
+    /// fan-out ships manifests over the wire in this form so workers
+    /// rebuild the exact schema without touching the filesystem.
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "train_batch {}", self.train_batch);
+        let _ = writeln!(s, "eval_batch {}", self.eval_batch);
+        let _ = writeln!(s, "image_hw {}", self.image_hw);
+        let _ = writeln!(s, "num_classes {}", self.num_classes);
+        for (name, shape) in &self.params {
+            let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+            let _ = writeln!(s, "param {} {}", name, dims.join(","));
+        }
+        for (name, file) in &self.artifacts {
+            let _ = writeln!(s, "artifact {} {}", name, file);
+        }
+        s
+    }
+
     /// The paper's CNN schema (21,840 parameters in 8 tensors) — the same
     /// contract `python/compile/aot.py` emits. Used by the synthetic
     /// runtime backend and by tests that run without built artifacts.
@@ -140,6 +161,13 @@ mod tests {
             "train_batch 1\neval_batch 1\nimage_hw 28\nnum_classes 10\n"
         )
         .is_err()); // no params
+    }
+
+    #[test]
+    fn to_text_round_trips() {
+        for m in [Manifest::paper(), Manifest::parse(SAMPLE).unwrap()] {
+            assert_eq!(Manifest::parse(&m.to_text()).unwrap(), m);
+        }
     }
 
     #[test]

@@ -55,7 +55,13 @@ impl ParamSet {
     pub fn init(man: &Manifest, rng: &mut Rng) -> ParamSet {
         let mut set = ParamSet::zeros(man);
         for t in &mut set.tensors {
-            if t.name.ends_with("_b") {
+            // Bias detection is manifest-driven: any rank-1 tensor is a
+            // bias (there are no rank-1 weights in this model family),
+            // with the `_b` suffix kept as an explicit opt-in flag for
+            // exotic shapes. The old suffix-only check silently Kaiming-
+            // initialized biases named otherwise (e.g. `b1` got
+            // fan_in = shape[0]).
+            if t.shape.len() == 1 || t.name.ends_with("_b") {
                 continue;
             }
             let fan_in: usize = if t.shape.len() == 4 {
@@ -232,6 +238,26 @@ mod tests {
         assert!(c1.data.iter().any(|v| v.abs() > bound * 0.5));
         // biases zero
         assert!(a.tensors[1].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_zeroes_rank1_biases_regardless_of_name() {
+        // Regression pin: biases named without the `_b` suffix (the
+        // runtime test manifest uses `b1`/`b2`) must still zero-init —
+        // bias detection is rank-driven, not name-driven.
+        let man = Manifest::parse(
+            "train_batch 8\neval_batch 16\nimage_hw 28\nnum_classes 10\n\
+             param w1 20,10\nparam b1 20\nparam w2 20,10\nparam b2 10\n\
+             artifact train_step t.hlo.txt\nartifact predict p.hlo.txt\n",
+        )
+        .unwrap();
+        let p = ParamSet::init(&man, &mut Rng::new(5));
+        assert!(p.tensors[1].data.iter().all(|&v| v == 0.0), "b1 must be zero");
+        assert!(p.tensors[3].data.iter().all(|&v| v == 0.0), "b2 must be zero");
+        // Weights still draw: identical streams for identical seeds, and
+        // rank-2 weight draws are unchanged by the bias-rule fix.
+        assert!(p.tensors[0].data.iter().any(|&v| v != 0.0));
+        assert_eq!(p, ParamSet::init(&man, &mut Rng::new(5)));
     }
 
     #[test]

@@ -165,6 +165,22 @@ impl Rng {
         child
     }
 
+    /// Export the raw generator state for wire transfer (multi-process
+    /// fan-out): the four xoshiro256++ state words plus the cached
+    /// Box–Muller spare. Round-trips bit-exactly through
+    /// [`Rng::from_raw`], so a stream resumed in another process
+    /// continues exactly where the originating process left off.
+    pub fn to_raw(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from [`Rng::to_raw`] output. The spare must be
+    /// restored too: dropping it would shift every subsequent V1 normal
+    /// draw by one variate.
+    pub fn from_raw(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        Rng { s, gauss_spare }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let res = (self.s[0].wrapping_add(self.s[3]))

@@ -181,6 +181,17 @@ impl Engine {
         }
     }
 
+    /// Seed to replicate this engine in another process: `Some(seed)` for
+    /// the synthetic backend (a worker rebuilds a bit-identical engine
+    /// via [`Engine::synthetic_with`] + the manifest text), `None` for
+    /// PJRT (workers must reload the artifacts from disk instead).
+    pub fn replication_seed(&self) -> Option<u64> {
+        match &self.backend {
+            Backend::Synthetic(sb) => Some(sb.seed),
+            Backend::Pjrt(_) => None,
+        }
+    }
+
     fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
         if params.tensors.len() != self.manifest.params.len() {
             return Err(Error::Shape("param set does not match manifest".into()));
@@ -247,39 +258,66 @@ impl Engine {
         }
     }
 
-    /// Test-set accuracy: batches of `eval_batch`, zero-padded tail.
+    /// Batch windows `(start, take)` over a test set, in evaluation
+    /// order: `take == eval_batch` everywhere except a short tail. The
+    /// streaming evaluator folds these one at a time, so a pipelined
+    /// caller can interleave other work between batches even at
+    /// `eval_every = 1` with a large test set.
+    pub fn eval_batches(&self, test: &Dataset) -> impl Iterator<Item = (usize, usize)> {
+        let b = self.manifest.eval_batch.max(1);
+        let n = test.len();
+        (0..n.div_ceil(b)).map(move |k| (k * b, b.min(n - k * b)))
+    }
+
+    /// Score one eval batch window: returns the number of correct
+    /// predictions among `test[start..start + take]`. `x` is the reused
+    /// `[eval_batch * pixels]` staging buffer (zero-padded tail).
+    pub fn evaluate_batch(
+        &self,
+        params: &ParamSet,
+        test: &Dataset,
+        start: usize,
+        take: usize,
+        x: &mut [f32],
+    ) -> Result<usize> {
+        let nc = self.manifest.num_classes;
+        let pix = test.pixels_per_image();
+        x.fill(0.0);
+        x[..take * pix]
+            .copy_from_slice(&test.images[start * pix..(start + take) * pix]);
+        let logp = self.predict(params, x)?;
+        let mut correct = 0usize;
+        for j in 0..take {
+            let row = &logp[j * nc..(j + 1) * nc];
+            // NaN-tolerant argmax: a destroyed model (e.g. the naive
+            // erroneous uplink) produces NaN logits; treat NaN as
+            // -inf so evaluation degrades to chance instead of
+            // panicking.
+            let mut pred = 0usize;
+            let mut best = f32::NEG_INFINITY;
+            for (k, &v) in row.iter().enumerate() {
+                if v > best {
+                    best = v;
+                    pred = k;
+                }
+            }
+            if pred == test.labels[start + j] as usize {
+                correct += 1;
+            }
+        }
+        Ok(correct)
+    }
+
+    /// Test-set accuracy: a streaming fold over [`Engine::eval_batches`].
+    /// Bit-identical to the monolithic loop it replaced — per-batch
+    /// correct counts are integers, so the summation order is exact.
     pub fn evaluate(&self, params: &ParamSet, test: &Dataset) -> Result<f64> {
         let b = self.manifest.eval_batch;
-        let nc = self.manifest.num_classes;
         let pix = test.pixels_per_image();
         let mut correct = 0usize;
         let mut x = vec![0f32; b * pix];
-        let mut i = 0;
-        while i < test.len() {
-            let take = b.min(test.len() - i);
-            x.fill(0.0);
-            x[..take * pix]
-                .copy_from_slice(&test.images[i * pix..(i + take) * pix]);
-            let logp = self.predict(params, &x)?;
-            for j in 0..take {
-                let row = &logp[j * nc..(j + 1) * nc];
-                // NaN-tolerant argmax: a destroyed model (e.g. the naive
-                // erroneous uplink) produces NaN logits; treat NaN as
-                // -inf so evaluation degrades to chance instead of
-                // panicking.
-                let mut pred = 0usize;
-                let mut best = f32::NEG_INFINITY;
-                for (k, &v) in row.iter().enumerate() {
-                    if v > best {
-                        best = v;
-                        pred = k;
-                    }
-                }
-                if pred == test.labels[i + j] as usize {
-                    correct += 1;
-                }
-            }
-            i += take;
+        for (start, take) in self.eval_batches(test) {
+            correct += self.evaluate_batch(params, test, start, take, &mut x)?;
         }
         Ok(correct as f64 / test.len().max(1) as f64)
     }
@@ -332,6 +370,55 @@ mod tests {
         assert_eq!(a.len(), 16 * 10);
         let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn streaming_evaluate_matches_monolithic_reference() {
+        // Bit-identity pin for the streaming evaluator: the batch-iterator
+        // fold must reproduce the pre-refactor monolithic loop exactly,
+        // including the zero-padded short tail (40 = 2 full batches + 8).
+        let e = Engine::synthetic_with(small_manifest(), 11);
+        let params = e.init_params(&mut Rng::new(3));
+        let n = 40usize;
+        let pix = 784usize;
+        let test = Dataset {
+            images: (0..n * pix).map(|i| ((i * 31) % 255) as f32 / 255.0).collect(),
+            labels: (0..n).map(|i| (i % 10) as u8).collect(),
+            hw: 28,
+        };
+        // Monolithic reference — the original evaluate() body.
+        let b = e.manifest.eval_batch;
+        let nc = e.manifest.num_classes;
+        let mut correct = 0usize;
+        let mut x = vec![0f32; b * pix];
+        let mut i = 0;
+        while i < test.len() {
+            let take = b.min(test.len() - i);
+            x.fill(0.0);
+            x[..take * pix].copy_from_slice(&test.images[i * pix..(i + take) * pix]);
+            let logp = e.predict(&params, &x).unwrap();
+            for j in 0..take {
+                let row = &logp[j * nc..(j + 1) * nc];
+                let mut pred = 0usize;
+                let mut best = f32::NEG_INFINITY;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > best {
+                        best = v;
+                        pred = k;
+                    }
+                }
+                if pred == test.labels[i + j] as usize {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        let reference = correct as f64 / test.len().max(1) as f64;
+        let streamed = e.evaluate(&params, &test).unwrap();
+        assert_eq!(streamed.to_bits(), reference.to_bits());
+        // Window shape: all-but-last full, spans cover the set exactly.
+        let wins: Vec<_> = e.eval_batches(&test).collect();
+        assert_eq!(wins, vec![(0, 16), (16, 16), (32, 8)]);
     }
 
     #[test]
