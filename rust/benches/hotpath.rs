@@ -460,6 +460,47 @@ fn main() {
         sink.push(name, &s, Some(tp));
     }
 
+    // Wire-lean dist framing (PR 10): the per-round encode hot paths on
+    // both pipe ends, over persistent scratches — the supervisor's job
+    // frame segments (head + shared params block + entries, spliced by a
+    // vectored write at send time) and a worker's shard-partial frame
+    // plus its coordinator-side decode.
+    {
+        use awc_fl::dist::proto::{self, FrameScratch};
+        use awc_fl::dist::{FromWorker, JobEntry};
+        use awc_fl::metrics::ShardStats;
+
+        let entries: Vec<JobEntry> = (0..256)
+            .map(|i| JobEntry { sel_idx: i, client: i, prev_arm: None, coh: None })
+            .collect();
+        let (mut head, mut params, mut ents) = (Vec::new(), Vec::new(), Vec::new());
+        let name = "dist: proto encode job (1 model)";
+        let s = bench(name, 2, 20, || {
+            head.clear();
+            proto::encode_job_head(&mut head, 1, true, 1 << 20, 1024, 157);
+            params.clear();
+            proto::encode_job_params(&mut params, black_box(&grads));
+            ents.clear();
+            proto::encode_job_entries(&mut ents, black_box(&entries));
+            black_box(head.len() + params.len() + ents.len());
+        });
+        let tp = report_throughput("job encode (bytes)", (MODEL_FLOATS * 4) as f64, &s);
+        sink.push(name, &s, Some(tp));
+
+        let mut stats = ShardStats::new(3);
+        stats.clients = 64;
+        stats.weight_sum = 1.0;
+        let mut scratch = FrameScratch::new();
+        let name = "dist: shard partial round-trip";
+        let s = bench(name, 2, 20, || {
+            proto::encode_shard_partial(&mut scratch, 3, black_box(&grads), &stats);
+            let msg = FromWorker::decode(scratch.payload()).unwrap();
+            black_box(matches!(msg, FromWorker::Shard(_)));
+        });
+        let tp = report_throughput("shard partial (floats)", MODEL_FLOATS as f64, &s);
+        sink.push(name, &s, Some(tp));
+    }
+
     // PJRT round-trips (needs artifacts).
     match awc_fl::runtime::Engine::load("artifacts") {
         Ok(engine) => {

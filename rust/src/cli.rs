@@ -31,7 +31,7 @@ const VALUE_FLAGS: &[&str] = &[
     "pilots", "payloads", "floats", "max-retx", "deadline", "fault-dropout",
     "fault-straggle", "fault-straggle-max", "fault-corrupt",
     "fault-corrupt-len", "fault-poison", "quarantine", "quarantine-bound",
-    "worker-procs", "dist-timeout-s",
+    "worker-procs", "dist-timeout-s", "dist-worker-exe", "dist-reply",
 ];
 
 impl Args {
@@ -137,9 +137,14 @@ mod tests {
 
     #[test]
     fn dist_flags_take_values() {
-        let a = parse("run --worker-procs 4 --dist-timeout-s 12.5");
+        let a = parse(
+            "run --worker-procs 4 --dist-timeout-s 12.5 \
+             --dist-worker-exe /tmp/awc-fl --dist-reply preacc",
+        );
         assert_eq!(a.opt_parse::<usize>("worker-procs").unwrap(), Some(4));
         assert_eq!(a.opt_parse::<f64>("dist-timeout-s").unwrap(), Some(12.5));
+        assert_eq!(a.opt("dist-worker-exe"), Some("/tmp/awc-fl"));
+        assert_eq!(a.opt("dist-reply"), Some("preacc"));
     }
 
     #[test]

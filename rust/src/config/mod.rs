@@ -16,6 +16,45 @@ use crate::transport::Scheme;
 use crate::{Error, Result};
 use parser::Value;
 
+/// Worker reply mode for the multi-process fan-out (`crate::dist`).
+///
+/// Resolved to a concrete mode once per run by
+/// [`ExperimentConfig::dist_preacc`] — a pure function of the config, so
+/// coordinator and workers (which rebuild the config via
+/// [`ExperimentConfig::from_text`]) always agree without a wire bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistReply {
+    /// Pick automatically: pre-accumulate whenever the gate ladder is
+    /// worker-local, stream when a shared TDMA deadline budget forces
+    /// coordinator-side gating.
+    Auto,
+    /// Always per-pass gradient streaming (the PR-9 wire format).
+    Stream,
+    /// Always worker-side shard pre-accumulation; rejected by
+    /// [`ExperimentConfig::validate`] for TDMA + `round_deadline_s`
+    /// configs, whose deadline gate cannot be evaluated worker-locally.
+    Preacc,
+}
+
+impl DistReply {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistReply::Auto => "auto",
+            DistReply::Stream => "stream",
+            DistReply::Preacc => "preacc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DistReply> {
+        match s {
+            "auto" => Some(DistReply::Auto),
+            "stream" => Some(DistReply::Stream),
+            "preacc" => Some(DistReply::Preacc),
+            _ => None,
+        }
+    }
+}
+
 /// Full description of one FL-over-wireless experiment (paper §V setup).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -170,6 +209,9 @@ pub struct ExperimentConfig {
     /// (`std::env::current_exe`); tests point it at the built test
     /// binary's sibling `awc-fl`.
     pub dist_worker_exe: String,
+    /// Worker reply mode (`auto` | `stream` | `preacc`) — see
+    /// [`DistReply`] and [`ExperimentConfig::dist_preacc`].
+    pub dist_reply: DistReply,
 }
 
 impl Default for ExperimentConfig {
@@ -234,6 +276,7 @@ impl Default for ExperimentConfig {
             worker_procs: 0,
             dist_timeout_s: 30.0,
             dist_worker_exe: String::new(),
+            dist_reply: DistReply::Auto,
         }
     }
 }
@@ -436,6 +479,12 @@ impl ExperimentConfig {
                 self.dist_worker_exe =
                     v.as_str().ok_or_else(|| bad(key, v))?.to_string()
             }
+            "dist_reply" | "dist.reply" => {
+                self.dist_reply = v
+                    .as_str()
+                    .and_then(DistReply::parse)
+                    .ok_or_else(|| bad(key, v))?
+            }
             _ => return Err(Error::Config(format!("unknown config key `{key}`"))),
         }
         Ok(())
@@ -517,6 +566,19 @@ impl ExperimentConfig {
                 self.worker_procs
             )));
         }
+        if self.dist_reply == DistReply::Preacc
+            && self.mux == Multiplexing::Tdma
+            && self.round_deadline_s > 0.0
+        {
+            return Err(Error::Config(
+                "dist_reply = preacc is incompatible with mux = tdma + \
+                 round_deadline_s > 0: the shared TDMA deadline budget is \
+                 spent in selection order across worker boundaries, so the \
+                 gate cannot be evaluated worker-locally (use `auto` to \
+                 fall back to streaming deterministically)"
+                    .into(),
+            ));
+        }
         self.faults().validate().map_err(Error::Config)?;
         self.adaptive().validate().map_err(Error::Config)?;
         Ok(())
@@ -594,7 +656,28 @@ impl ExperimentConfig {
         kv("worker_procs", self.worker_procs.to_string());
         kv("dist_timeout_s", self.dist_timeout_s.to_string());
         kv("dist_worker_exe", quoted(&self.dist_worker_exe));
+        kv("dist_reply", quoted(self.dist_reply.name()));
         s
+    }
+
+    /// Resolve [`DistReply`] to the round's concrete reply mode: `true` =
+    /// worker-side shard pre-accumulation, `false` = per-pass streaming.
+    ///
+    /// A *pure* function of the config — never of worker count, host, or
+    /// round state — and evaluated independently on the coordinator and
+    /// on every worker (whose [`ExperimentConfig::from_text`] rebuild
+    /// skips [`ExperimentConfig::validate`]), so both sides always agree.
+    /// `Auto` pre-accumulates except under TDMA + `round_deadline_s`,
+    /// where the deadline budget is shared in selection order across
+    /// worker boundaries and only the coordinator can gate passes.
+    pub fn dist_preacc(&self) -> bool {
+        match self.dist_reply {
+            DistReply::Stream => false,
+            DistReply::Preacc => true,
+            DistReply::Auto => {
+                !(self.mux == Multiplexing::Tdma && self.round_deadline_s > 0.0)
+            }
+        }
     }
 
     /// Rebuild a config from [`ExperimentConfig::to_text`] output.
@@ -995,10 +1078,48 @@ mod tests {
             ("dist_timeout_s", "inf"),
             ("worker_procs", "-1"),
             ("worker_procs", "2048"),
+            ("dist_reply", "eager"),
         ] {
             let o = vec![(k.to_string(), v.to_string())];
             assert!(ExperimentConfig::load(None, &o).is_err(), "{k}={v}");
         }
+    }
+
+    #[test]
+    fn dist_reply_resolution_is_config_pure() {
+        // Default: auto, which pre-accumulates everywhere except the one
+        // ladder that crosses worker boundaries (TDMA + shared deadline).
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.dist_reply, DistReply::Auto);
+        assert!(c.dist_preacc());
+        c.round_deadline_s = 2.0; // mux defaults to tdma
+        assert!(!c.dist_preacc());
+        c.mux = Multiplexing::Fdma; // per-client deadline is worker-local
+        assert!(c.dist_preacc());
+        // Forced modes win regardless of the ladder shape.
+        c.mux = Multiplexing::Tdma;
+        c.round_deadline_s = 0.0;
+        c.dist_reply = DistReply::Stream;
+        assert!(!c.dist_preacc());
+        c.dist_reply = DistReply::Preacc;
+        assert!(c.dist_preacc());
+        // Both spellings parse; forced preacc + TDMA deadline is rejected.
+        let o = vec![("dist.reply".to_string(), "stream".to_string())];
+        assert_eq!(ExperimentConfig::load(None, &o).unwrap().dist_reply, DistReply::Stream);
+        let o = vec![("dist_reply".to_string(), "preacc".to_string())];
+        assert_eq!(ExperimentConfig::load(None, &o).unwrap().dist_reply, DistReply::Preacc);
+        let o = vec![
+            ("dist_reply".to_string(), "preacc".to_string()),
+            ("round_deadline_s".to_string(), "2.0".to_string()),
+        ];
+        assert!(ExperimentConfig::load(None, &o).is_err());
+        // ...but the same deadline under FDMA is fine.
+        let o = vec![
+            ("dist_reply".to_string(), "preacc".to_string()),
+            ("round_deadline_s".to_string(), "2.0".to_string()),
+            ("mux".to_string(), "fdma".to_string()),
+        ];
+        assert!(ExperimentConfig::load(None, &o).unwrap().dist_preacc());
     }
 
     #[test]
@@ -1020,6 +1141,7 @@ mod tests {
             ("quarantine".to_string(), "reject".to_string()),
             ("worker_procs".to_string(), "3".to_string()),
             ("dist_timeout_s".to_string(), "7.25".to_string()),
+            ("dist_reply".to_string(), "stream".to_string()),
             ("data_dir".to_string(), "/tmp/some dir/mnist".to_string()),
         ];
         let c = ExperimentConfig::load(None, &o).unwrap();
@@ -1033,6 +1155,7 @@ mod tests {
         assert_eq!(c2.snr_db, 9.7);
         assert_eq!(c2.data_dir, "/tmp/some dir/mnist");
         assert_eq!(c2.worker_procs, 3);
+        assert_eq!(c2.dist_reply, DistReply::Stream);
         // The default config round-trips too.
         let d = ExperimentConfig::default();
         assert_eq!(ExperimentConfig::from_text(&d.to_text()).unwrap().to_text(), d.to_text());

@@ -91,6 +91,15 @@ impl ShardPlan {
     pub fn shard_of(&self, i: usize) -> usize {
         i / self.chunk
     }
+
+    /// Number of selection indices shard `s` owns (the last shard may be
+    /// short). Used by the multi-process fan-out to account for whole
+    /// shards lost with a dead worker (`crate::dist`).
+    pub fn shard_size(&self, s: usize) -> usize {
+        let lo = s * self.chunk;
+        let hi = ((s + 1) * self.chunk).min(self.n);
+        hi.saturating_sub(lo)
+    }
 }
 
 /// One client's round contribution, fed as its pass completes.
@@ -144,7 +153,11 @@ impl ShardAccumulator {
     }
 
     /// Fold one contribution in (callers feed in selection order).
-    fn feed(&mut self, c: &Contribution<'_>) {
+    ///
+    /// `pub(crate)` so distributed workers (`crate::dist::worker`) run the
+    /// *same* kernel on owned shards — pre-accumulated partials are
+    /// bit-identical to the coordinator's own fold by construction.
+    pub(crate) fn feed(&mut self, c: &Contribution<'_>) {
         self.acc.axpy_flat(c.weight, c.rx);
         let s = &mut self.stats;
         s.clients += 1;
@@ -179,6 +192,25 @@ impl ShardAccumulator {
                 s.est_snr_count += 1;
             }
         }
+    }
+
+    /// Record one withheld contribution's reason in the shard stats (the
+    /// accumulator itself is untouched — skips carry no gradient).
+    pub(crate) fn skip(&mut self, reason: SkipReason) {
+        let s = &mut self.stats;
+        match reason {
+            SkipReason::Dropout => s.dropped += 1,
+            SkipReason::Deadline => s.deadline_skipped += 1,
+            SkipReason::Quarantine => s.quarantined += 1,
+            SkipReason::WorkerLost => s.worker_lost += 1,
+        }
+    }
+
+    /// Flatten the running weighted sum into `flat` (cleared first). The
+    /// raw IEEE-754 words — exactly what crosses the wire in a
+    /// `ShardPartial` frame.
+    pub(crate) fn export_into(&self, flat: &mut Vec<f32>) {
+        self.acc.flatten_into(flat);
     }
 
     pub fn stats(&self) -> &ShardStats {
@@ -228,14 +260,18 @@ pub struct ShardedAggregator {
     accs: Vec<ShardAccumulator>,
     next: usize,
     num_params: usize,
+    /// Shards installed wholesale from a worker's pre-accumulated partial
+    /// (`crate::dist` preacc reply mode); guards against double-install.
+    installed: Vec<bool>,
 }
 
 impl ShardedAggregator {
     pub fn new(man: &Manifest, selected: usize, shards: usize) -> ShardedAggregator {
         let plan = ShardPlan::new(selected, shards);
-        let accs =
+        let accs: Vec<ShardAccumulator> =
             (0..plan.shard_count()).map(|s| ShardAccumulator::new(s, man)).collect();
-        ShardedAggregator { plan, accs, next: 0, num_params: man.num_params() }
+        let installed = vec![false; accs.len()];
+        ShardedAggregator { plan, accs, next: 0, num_params: man.num_params(), installed }
     }
 
     pub fn plan(&self) -> &ShardPlan {
@@ -288,13 +324,64 @@ impl ShardedAggregator {
             )));
         }
         self.next += 1;
-        let s = &mut self.accs[self.plan.shard_of(sel_idx)].stats;
-        match reason {
-            SkipReason::Dropout => s.dropped += 1,
-            SkipReason::Deadline => s.deadline_skipped += 1,
-            SkipReason::Quarantine => s.quarantined += 1,
-            SkipReason::WorkerLost => s.worker_lost += 1,
+        self.accs[self.plan.shard_of(sel_idx)].skip(reason);
+        Ok(())
+    }
+
+    /// Install a whole shard from a worker's pre-accumulated partial
+    /// (`crate::dist` preacc reply mode): the worker ran the same
+    /// [`ShardAccumulator::feed`] kernel in selection order, so `flat` is
+    /// bit-for-bit the sum this aggregator would have built, and `stats`
+    /// already carries the shard's fed/skipped census. The copy is an
+    /// exact bit install (`ParamSet::copy_from_flat`) — never a re-`axpy`
+    /// onto zeros, which would canonicalize `-0.0`/NaN payload words.
+    pub(crate) fn install_shard(
+        &mut self,
+        shard: usize,
+        flat: &[f32],
+        stats: &ShardStats,
+    ) -> Result<()> {
+        if shard >= self.accs.len() {
+            return Err(Error::Shape(format!(
+                "shard partial for shard {shard}, plan has {}",
+                self.accs.len()
+            )));
         }
+        if self.installed[shard] {
+            return Err(Error::Shape(format!("shard {shard} installed twice")));
+        }
+        if flat.len() != self.num_params {
+            return Err(Error::Shape(format!(
+                "shard {shard} partial has {} floats, model has {}",
+                flat.len(),
+                self.num_params
+            )));
+        }
+        let acc = &mut self.accs[shard];
+        acc.acc.copy_from_flat(flat)?;
+        acc.stats = *stats;
+        acc.stats.shard = shard;
+        self.installed[shard] = true;
+        Ok(())
+    }
+
+    /// Account a whole shard lost with its worker process (both spawns
+    /// died mid-round, taking the live accumulator with them): the
+    /// gradient stays zero and all `count` owned clients fold as
+    /// [`SkipReason::WorkerLost`] — exactly what per-pass streaming
+    /// produces when every pass of the shard is skipped.
+    pub(crate) fn install_lost_shard(&mut self, shard: usize, count: usize) -> Result<()> {
+        if shard >= self.accs.len() {
+            return Err(Error::Shape(format!(
+                "lost shard {shard}, plan has {}",
+                self.accs.len()
+            )));
+        }
+        if self.installed[shard] {
+            return Err(Error::Shape(format!("shard {shard} installed twice")));
+        }
+        self.accs[shard].stats.worker_lost += count;
+        self.installed[shard] = true;
         Ok(())
     }
 
@@ -639,6 +726,179 @@ mod tests {
         let bits =
             |p: &ParamSet| p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&sum), bits(&chunked));
+    }
+
+    #[test]
+    fn installed_partials_reproduce_the_streamed_fold_bit_exactly() {
+        // Pre-accumulation contract: standalone ShardAccumulators fed the
+        // same contributions in the same order, exported flat and
+        // installed wholesale, must finish() to the exact bits (and
+        // stats) of the coordinator's own streamed fold.
+        let man = manifest();
+        let pays = payloads(10, man.num_params());
+        let report = TxReport { retransmissions: 1, ..Default::default() };
+
+        for shards in [1usize, 3, 4] {
+            // Reference: streamed fold on the coordinator.
+            let mut streamed = ShardedAggregator::new(&man, pays.len(), shards);
+            for (i, (w, rx)) in pays.iter().enumerate() {
+                if i == 2 {
+                    streamed.skip(i, SkipReason::Dropout).unwrap();
+                    continue;
+                }
+                streamed
+                    .feed(
+                        i,
+                        &Contribution {
+                            rx,
+                            weight: *w,
+                            loss: 0.5 + i as f32 * 0.125,
+                            grad_max_abs: 0.25 + i as f32 * 0.0625,
+                            grad_small_frac: 1.0,
+                            quarantined: 0,
+                            report: &report,
+                        },
+                    )
+                    .unwrap();
+            }
+            let plan = *streamed.plan();
+
+            // Worker-side: one standalone accumulator per shard, fed the
+            // shard's own contributions in selection order.
+            let mut partials: Vec<ShardAccumulator> = (0..plan.shard_count())
+                .map(|s| ShardAccumulator::new(s, &man))
+                .collect();
+            for (i, (w, rx)) in pays.iter().enumerate() {
+                let acc = &mut partials[plan.shard_of(i)];
+                if i == 2 {
+                    acc.skip(SkipReason::Dropout);
+                    continue;
+                }
+                acc.feed(&Contribution {
+                    rx,
+                    weight: *w,
+                    loss: 0.5 + i as f32 * 0.125,
+                    grad_max_abs: 0.25 + i as f32 * 0.0625,
+                    grad_small_frac: 1.0,
+                    quarantined: 0,
+                    report: &report,
+                });
+            }
+            let mut installed = ShardedAggregator::new(&man, pays.len(), shards);
+            let mut flat = Vec::new();
+            for (s, acc) in partials.iter().enumerate() {
+                acc.export_into(&mut flat);
+                installed.install_shard(s, &flat, acc.stats()).unwrap();
+            }
+
+            let (sum_a, tot_a, stats_a) = streamed.finish();
+            let (sum_b, tot_b, stats_b) = installed.finish();
+            let bits = |p: &ParamSet| {
+                p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&sum_a), bits(&sum_b), "shards={shards}");
+            assert_eq!(tot_a.clients, tot_b.clients);
+            assert_eq!(tot_a.dropped, tot_b.dropped);
+            assert_eq!(tot_a.weight_sum.to_bits(), tot_b.weight_sum.to_bits());
+            assert_eq!(tot_a.loss_sum.to_bits(), tot_b.loss_sum.to_bits());
+            assert_eq!(stats_a.len(), stats_b.len());
+            for (a, b) in stats_a.iter().zip(&stats_b) {
+                assert_eq!((a.shard, a.clients, a.dropped), (b.shard, b.clients, b.dropped));
+                assert_eq!(a.weight_sum.to_bits(), b.weight_sum.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn lost_shard_install_matches_per_pass_worker_lost_skips() {
+        // A worker dying with its accumulators folds exactly like
+        // streaming mode skipping every owned pass as WorkerLost:
+        // zero gradient, worker_lost census, survivor renormalization.
+        let man = manifest();
+        let pays = payloads(9, man.num_params());
+        let report = TxReport::default();
+        let feed_or_skip = |agg: &mut ShardedAggregator, lost: bool| {
+            for (i, (w, rx)) in pays.iter().enumerate() {
+                let shard = agg.plan().shard_of(i);
+                if lost && shard == 1 {
+                    agg.skip(i, SkipReason::WorkerLost).unwrap();
+                    continue;
+                }
+                agg.feed(
+                    i,
+                    &Contribution {
+                        rx,
+                        weight: *w,
+                        loss: 0.0,
+                        grad_max_abs: 0.0,
+                        grad_small_frac: 1.0,
+                        quarantined: 0,
+                        report: &report,
+                    },
+                )
+                .unwrap();
+            }
+        };
+        let mut streamed = ShardedAggregator::new(&man, pays.len(), 3);
+        feed_or_skip(&mut streamed, true);
+
+        // Install path: shards 0 and 2 from exported partials, shard 1 lost.
+        let plan = ShardPlan::new(pays.len(), 3);
+        let mut installed = ShardedAggregator::new(&man, pays.len(), 3);
+        let mut flat = Vec::new();
+        for s in 0..plan.shard_count() {
+            if s == 1 {
+                installed.install_lost_shard(s, plan.shard_size(s)).unwrap();
+                continue;
+            }
+            let mut acc = ShardAccumulator::new(s, &man);
+            for (i, (w, rx)) in pays.iter().enumerate() {
+                if plan.shard_of(i) == s {
+                    acc.feed(&Contribution {
+                        rx,
+                        weight: *w,
+                        loss: 0.0,
+                        grad_max_abs: 0.0,
+                        grad_small_frac: 1.0,
+                        quarantined: 0,
+                        report: &report,
+                    });
+                }
+            }
+            acc.export_into(&mut flat);
+            installed.install_shard(s, &flat, acc.stats()).unwrap();
+        }
+
+        let (sum_a, tot_a, _) = streamed.finish();
+        let (sum_b, tot_b, stats_b) = installed.finish();
+        assert_eq!(tot_a.worker_lost, 3);
+        assert_eq!(tot_b.worker_lost, 3);
+        assert_eq!(stats_b[1].worker_lost, 3);
+        assert_eq!(tot_a.weight_sum.to_bits(), tot_b.weight_sum.to_bits());
+        let bits =
+            |p: &ParamSet| p.flatten().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&sum_a), bits(&sum_b));
+    }
+
+    #[test]
+    fn install_guards_reject_double_and_bad_shapes() {
+        let man = manifest();
+        let mut agg = ShardedAggregator::new(&man, 6, 2);
+        let flat = vec![0.0f32; man.num_params()];
+        let stats = ShardStats::new(0);
+        agg.install_shard(0, &flat, &stats).unwrap();
+        assert!(agg.install_shard(0, &flat, &stats).is_err(), "double install");
+        assert!(agg.install_lost_shard(0, 3).is_err(), "lost after install");
+        assert!(agg.install_shard(2, &flat, &stats).is_err(), "shard out of range");
+        assert!(agg.install_shard(1, &flat[..3], &stats).is_err(), "short payload");
+        agg.install_lost_shard(1, 3).unwrap();
+        assert!(agg.install_shard(1, &flat, &stats).is_err(), "install after lost");
+        // shard_size covers the short tail.
+        let p = ShardPlan::new(10, 4); // chunk 3 -> sizes 3,3,3,1
+        assert_eq!(
+            (0..p.shard_count()).map(|s| p.shard_size(s)).collect::<Vec<_>>(),
+            vec![3, 3, 3, 1]
+        );
     }
 
     #[test]

@@ -61,10 +61,30 @@
 //! rebuilds the identical substrate from the shipped config and runs the
 //! same pass kernel ([`client_pass_core`]) the in-process engine runs.
 //! Replies are consumed strictly in selection order through the same
-//! [`FlServer::feed_pass`] ladder, so traces stay bit-identical to the
+//! gate ladder (`feed_report`), so traces stay bit-identical to the
 //! in-process engine at the same `agg_shards`. A worker that dies twice
 //! in one round degrades its remaining clients through
 //! [`SkipReason::WorkerLost`] and the round completes.
+//!
+//! Two reply modes share that contract (`ExperimentConfig::dist_reply`,
+//! resolved once per experiment by `dist_preacc()`):
+//!
+//! * **streaming** — workers ship every delivered gradient; the
+//!   coordinator folds each pass into the [`ShardedAggregator`] itself
+//!   (model-sized uplink per pass);
+//! * **pre-accumulation** — workers run the same `ShardAccumulator`
+//!   kernel over their wholly-owned shards (ownership `shard_of(i) %
+//!   procs` keeps shards unsplit) and ship one raw weighted-sum partial
+//!   per shard; passes cross the pipe report-only. The coordinator still
+//!   consumes reports in selection order — ledger, policy hysteresis,
+//!   coherence fold-back, and deadline gating happen exactly where
+//!   streaming does them — then installs each partial's bits verbatim
+//!   into the matching shard slot, so the reduction shape (and the
+//!   trace) is bit-identical to streaming at the same `agg_shards`.
+//!   Configs whose gates couple clients across workers (TDMA with a
+//!   `round_deadline_s` budget) deterministically fall back to
+//!   streaming; the choice is a pure function of the config, never of
+//!   runtime behavior.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -144,6 +164,11 @@ pub struct RoundOutcome {
     /// yet recycled). Bounded by the delivery window of 2 × workers —
     /// O(workers) gradient-buffer memory, never O(clients).
     pub peak_inflight: usize,
+    /// Bytes written to worker-process stdins this round (multi-process
+    /// fan-out only; 0 in-process). Frame prefixes included.
+    pub bytes_tx: u64,
+    /// Bytes read from worker-process stdouts this round (0 in-process).
+    pub bytes_rx: u64,
 }
 
 /// Reusable buffers for one in-flight client pass: the flattened TX
@@ -265,6 +290,19 @@ pub(crate) fn client_pass_core(
     slot.quarantined = faults::screen(&mut slot.rx, ctx.cfg.quarantine_bound, ctx.cfg.quarantine);
     slot.loss = loss;
     Ok(())
+}
+
+/// Which rung of the degradation ladder a consumed pass report landed
+/// on (`feed_report`'s verdict). The caller maps it onto the matching
+/// aggregation action — `skip` in the streaming/in-process consumers,
+/// nothing under pre-accumulation (the owning worker already folded the
+/// same verdict into its shard partial).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReportGate {
+    Dropout,
+    Deadline,
+    Quarantine,
+    Accept,
 }
 
 /// Bounded in-order delivery ring between the client-pass workers and
@@ -567,28 +605,28 @@ impl<'e> FlServer<'e> {
         )
     }
 
-    /// Fold a completed pass into its shard (consumer side — always
-    /// called in selection order, which fixes the reduction shape and
-    /// the policy-update order). Degradation ladder: dropouts never
-    /// transmitted (no ledger charge, no policy update); deadline misses
-    /// transmitted but arrive too late (policy update, no ledger charge);
-    /// quarantine rejects occupied the channel (ledger charge and policy
-    /// update, contribution discarded).
-    #[allow(clippy::too_many_arguments)]
-    fn feed_pass(
+    /// Drive the coordinator-side effects of one pass report — always in
+    /// selection order, which fixes the ledger/policy/coherence update
+    /// order — and classify which rung of the degradation ladder the
+    /// pass landed on. Degradation ladder: dropouts never transmitted
+    /// (no ledger charge, no policy update); deadline misses transmitted
+    /// but arrive too late (policy update, no ledger charge); quarantine
+    /// rejects occupied the channel (ledger charge and policy update,
+    /// contribution discarded). Shared by both reply modes of the
+    /// multi-process fan-out: under pre-accumulation the *aggregation*
+    /// consequence of the returned gate already happened worker-side,
+    /// but every side effect here still runs on the coordinator.
+    fn feed_report(
         &self,
-        agg: &mut ShardedAggregator,
         ledger: &mut Ledger,
         updates: &mut Vec<(usize, PolicyReport)>,
         coh_updates: &mut Vec<(usize, ChannelState)>,
         deadline_used: &mut f64,
-        sel_idx: usize,
         ci: usize,
-        selected_data: usize,
         slot: &PassSlot,
-    ) -> Result<()> {
+    ) -> ReportGate {
         if slot.fault.dropout {
-            return agg.skip(sel_idx, SkipReason::Dropout);
+            return ReportGate::Dropout;
         }
         // Everything below transmitted — the client's persistent fading
         // process (if any) evolved whether or not the pass survives the
@@ -619,11 +657,10 @@ impl<'e> FlServer<'e> {
                 if self.cfg.mux == Multiplexing::Tdma {
                     *deadline_used += secs;
                 }
-                agg.skip(sel_idx, SkipReason::Deadline)?;
                 if let Some(p) = slot.report.policy {
                     updates.push((ci, p));
                 }
-                return Ok(());
+                return ReportGate::Deadline;
             }
         }
         *deadline_used += secs;
@@ -632,21 +669,48 @@ impl<'e> FlServer<'e> {
             updates.push((ci, p));
         }
         if self.cfg.quarantine == QuarantinePolicy::Reject && slot.quarantined > 0 {
-            return agg.skip(sel_idx, SkipReason::Quarantine);
+            return ReportGate::Quarantine;
         }
-        let weight = self.clients[ci].data_size() as f32 / selected_data as f32;
-        agg.feed(
-            sel_idx,
-            &Contribution {
-                rx: &slot.rx,
-                weight,
-                loss: slot.loss,
-                grad_max_abs: slot.grad_max,
-                grad_small_frac: slot.grad_small_frac,
-                report: &slot.report,
-                quarantined: slot.quarantined,
-            },
-        )
+        ReportGate::Accept
+    }
+
+    /// Fold a completed pass into its shard: [`FlServer::feed_report`]'s
+    /// ladder plus the matching aggregation action (the in-process /
+    /// streaming consumer — pre-accumulation installs worker partials
+    /// instead).
+    #[allow(clippy::too_many_arguments)]
+    fn feed_pass(
+        &self,
+        agg: &mut ShardedAggregator,
+        ledger: &mut Ledger,
+        updates: &mut Vec<(usize, PolicyReport)>,
+        coh_updates: &mut Vec<(usize, ChannelState)>,
+        deadline_used: &mut f64,
+        sel_idx: usize,
+        ci: usize,
+        selected_data: usize,
+        slot: &PassSlot,
+    ) -> Result<()> {
+        match self.feed_report(ledger, updates, coh_updates, deadline_used, ci, slot) {
+            ReportGate::Dropout => agg.skip(sel_idx, SkipReason::Dropout),
+            ReportGate::Deadline => agg.skip(sel_idx, SkipReason::Deadline),
+            ReportGate::Quarantine => agg.skip(sel_idx, SkipReason::Quarantine),
+            ReportGate::Accept => {
+                let weight = self.clients[ci].data_size() as f32 / selected_data as f32;
+                agg.feed(
+                    sel_idx,
+                    &Contribution {
+                        rx: &slot.rx,
+                        weight,
+                        loss: slot.loss,
+                        grad_max_abs: slot.grad_max,
+                        grad_small_frac: slot.grad_small_frac,
+                        report: &slot.report,
+                        quarantined: slot.quarantined,
+                    },
+                )
+            }
+        }
     }
 
     /// Execute one full FL round.
@@ -709,6 +773,7 @@ impl<'e> FlServer<'e> {
                     let slot = &mut slots[0];
                     let res = (|| -> Result<()> {
                         let procs = sup.workers();
+                        let preacc = sup.preacc();
                         let plan = ShardPlan::new(n, shards);
                         let mut jobs: Vec<Vec<JobEntry>> = vec![Vec::new(); procs];
                         for (i, &ci) in selected.iter().enumerate() {
@@ -720,7 +785,15 @@ impl<'e> FlServer<'e> {
                                     .then(|| self.coh[ci].clone()),
                             });
                         }
-                        sup.begin_round(round, self.params.flatten(), jobs)?;
+                        // The round's broadcast params are encoded once,
+                        // on a background thread. Steady-state rounds
+                        // staged it right after the previous SGD step
+                        // (overlapping the aggregation/eval tail); the
+                        // first round after a fresh spawn stages here.
+                        if !sup.has_staged() {
+                            sup.stage_params(self.params.flatten());
+                        }
+                        sup.begin_round(round, jobs, n, shards, selected_data)?;
                         for (i, &ci) in selected.iter().enumerate() {
                             let owner = plan.shard_of(i) % procs;
                             match sup.next_pass(owner)? {
@@ -741,24 +814,72 @@ impl<'e> FlServer<'e> {
                                     slot.report = p.report;
                                     slot.coh = p.coh;
                                     slot.rx = p.rx;
-                                    self.feed_pass(
-                                        &mut agg,
-                                        &mut ledger,
-                                        &mut updates,
-                                        &mut coh_updates,
-                                        &mut deadline_used,
-                                        i,
-                                        ci,
-                                        selected_data,
-                                        slot,
-                                    )?;
+                                    if preacc {
+                                        // Report-only pass: drive the
+                                        // ledger/policy/coherence ladder
+                                        // here; the aggregation verdict
+                                        // already landed in the owning
+                                        // worker's shard partial.
+                                        self.feed_report(
+                                            &mut ledger,
+                                            &mut updates,
+                                            &mut coh_updates,
+                                            &mut deadline_used,
+                                            ci,
+                                            slot,
+                                        );
+                                    } else {
+                                        self.feed_pass(
+                                            &mut agg,
+                                            &mut ledger,
+                                            &mut updates,
+                                            &mut coh_updates,
+                                            &mut deadline_used,
+                                            i,
+                                            ci,
+                                            selected_data,
+                                            slot,
+                                        )?;
+                                    }
                                 }
                                 // Lost workers degrade gracefully: their
                                 // remaining clients fold through the
-                                // dropout ladder (no ledger charge, no
-                                // policy/coherence update — the passes
-                                // may never have happened).
+                                // worker-lost ladder (no ledger charge,
+                                // no policy/coherence update — the
+                                // passes may never have happened). Under
+                                // pre-accumulation the loss is folded
+                                // per whole shard below instead.
+                                None if preacc => {}
                                 None => agg.skip(i, SkipReason::WorkerLost)?,
+                            }
+                        }
+                        if preacc {
+                            // Install each worker's shard partials bits-
+                            // verbatim, in shard order per worker; a lost
+                            // worker's wholly-owned shards fold as
+                            // worker-lost in one shot.
+                            for w in 0..procs {
+                                match sup.next_partials(w)? {
+                                    Some(parts) => {
+                                        for sp in &parts {
+                                            agg.install_shard(
+                                                sp.shard as usize,
+                                                &sp.acc,
+                                                &sp.stats,
+                                            )?;
+                                        }
+                                    }
+                                    None => {
+                                        for s in (0..plan.shard_count())
+                                            .filter(|s| s % procs == w)
+                                        {
+                                            agg.install_lost_shard(
+                                                s,
+                                                plan.shard_size(s),
+                                            )?;
+                                        }
+                                    }
+                                }
                             }
                         }
                         sup.finish_round()
@@ -873,6 +994,17 @@ impl<'e> FlServer<'e> {
         let (sum, totals, shard_stats) = agg.finish();
         self.shard_stats = shard_stats;
         self.params.sgd_step(&sum, self.cfg.lr);
+        // Stage the next round's broadcast encode now, so the model-sized
+        // serialization overlaps this round's evaluation/trace tail and
+        // the wire accounting below reads a settled round.
+        let (bytes_tx, bytes_rx) = match self.dist.as_mut() {
+            Some(sup) => {
+                let wire = sup.wire_bytes();
+                sup.stage_params(self.params.flatten());
+                wire
+            }
+            None => (0, 0),
+        };
         let comm = self.ledger.finish_round(self.cfg.mux);
         // Per-client means are over the survivors — the clients that
         // actually contributed. Equals `n` on the zero-fault plan, so the
@@ -905,6 +1037,8 @@ impl<'e> FlServer<'e> {
             survivor_weight: totals.weight_sum,
             agg_shards: self.shard_stats.len(),
             peak_inflight,
+            bytes_tx,
+            bytes_rx,
         })
     }
 
@@ -1034,5 +1168,7 @@ fn emit_round(
         arq_exhausted: out.arq_exhausted,
         decode_iterations: out.decode_iterations,
         worker_lost: out.worker_lost,
+        bytes_tx: out.bytes_tx,
+        bytes_rx: out.bytes_rx,
     });
 }

@@ -1,5 +1,6 @@
 //! Multi-process federation engine: distribute the sharded client
-//! fan-out across worker *processes* (PR 9).
+//! fan-out across worker *processes* (PR 9), with a wire-lean
+//! pre-accumulating reply mode (PR 10).
 //!
 //! With `ExperimentConfig::worker_procs > 0`, the round loop in
 //! [`crate::coordinator::FlServer`] stops computing client passes
@@ -7,19 +8,58 @@
 //! `worker_procs` child processes running this crate's hidden
 //! `--dist-worker` mode. Ownership is derived from the same
 //! [`ShardPlan`] geometry the aggregation uses
-//! (`shard_of(sel_idx) % worker_procs`), each worker computes its owned
-//! passes in selection order, and the coordinator folds the replies back
-//! through the untouched
-//! [`ShardedAggregator`] **strictly in selection order** — so for any
-//! `worker_procs ∈ {0 = in-process, 1, N}` the traces, CSVs, and global
+//! (`shard_of(sel_idx) % worker_procs`), so every aggregation shard is
+//! wholly owned by exactly one worker. Each worker computes its owned
+//! passes in selection order and the coordinator consumes the replies
+//! **strictly in selection order**.
+//!
+//! # Reply modes
+//!
+//! How a pass's gradient gets back into the global fold is the
+//! `dist_reply` config key (`auto` | `stream` | `preacc`), resolved
+//! once per experiment by `ExperimentConfig::dist_preacc()` — a pure
+//! function of the config, so the coordinator and every worker agree on
+//! the mode without negotiating:
+//!
+//! * **streaming** — one model-sized [`PassMsg`] per pass; the
+//!   coordinator folds each delivered gradient through the untouched
+//!   [`ShardedAggregator`]. Per-round uplink is O(clients × model).
+//! * **pre-accumulation** — the worker runs the *same* shard-accumulator
+//!   feed kernel over its wholly-owned shards, passes cross the pipe
+//!   report-only (`rx` empty), and one raw-bits weighted-sum
+//!   [`ShardPartialMsg`] per owned shard comes back at end of round.
+//!   Per-round uplink is O(shards × model), independent of the
+//!   selection size. `auto` picks this whenever the gate ladder is
+//!   worker-local; TDMA with a `round_deadline_s` budget couples
+//!   clients across workers, so such configs deterministically stream
+//!   (forcing `preacc` there is a config error).
+//!
+//! # Determinism contract
+//!
+//! For any `worker_procs ∈ {0 = in-process, 1, N}` **and either reply
+//! mode**, traces, CSVs (wire-volume columns excluded), and global
 //! models are bit-identical at the same `agg_shards` (pinned by
-//! `tests/dist_it.rs`).
+//! `tests/dist_it.rs`). Streaming inherits this from the in-selection-
+//! order consumer; pre-accumulation inherits it because shards never
+//! split across workers, the worker folds exactly the kernel the
+//! coordinator would run (same gates, same order, same floats), and the
+//! partial's accumulator bits are installed verbatim — IEEE-754 bit
+//! patterns, NaNs and signed zeros included — never re-summed.
+//!
+//! Downlink is wire-lean in both modes: the round's broadcast params
+//! are encoded **once** on a background thread (overlapping the
+//! previous round's aggregation/eval tail) and spliced into every
+//! worker's Job frame with a vectored write; per-worker head/entry
+//! segments reuse persistent scratches ([`FrameScratch`]), so
+//! steady-state frame encoding allocates nothing on either pipe end.
 //!
 //! Module map:
 //! * [`proto`] — framed wire protocol over the worker pipes;
 //! * [`worker`] — the `--dist-worker` event loop (substrate rebuild +
-//!   job serving), sharing the coordinator's pass kernel;
-//! * [`supervisor`] — spawn/health/timeout/respawn management and the
+//!   job serving), sharing the coordinator's pass kernel and shard
+//!   accumulator;
+//! * [`supervisor`] — spawn/health/timeout/respawn management, the
+//!   shared broadcast encode, per-round wire accounting, and the
 //!   `worker_lost` degradation ladder.
 //!
 //! [`ShardPlan`]: crate::coordinator::ShardPlan
@@ -29,5 +69,8 @@ pub mod proto;
 pub mod supervisor;
 pub mod worker;
 
-pub use proto::{FromWorker, InitMsg, JobEntry, JobMsg, PassMsg, ToWorker};
+pub use proto::{
+    FrameScratch, FromWorker, InitMsg, JobEntry, JobMsg, PassMsg, ShardPartialMsg,
+    ToWorker,
+};
 pub use supervisor::Supervisor;

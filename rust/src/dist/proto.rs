@@ -17,11 +17,29 @@
 //! `key = value` text of [`ExperimentConfig::to_text`] (see that method
 //! for the key-space caveat).
 //!
+//! # Wire-lean framing
+//!
+//! Steady-state traffic avoids per-frame allocation and per-worker
+//! re-serialization:
+//!
+//! * every message encodes through [`FrameScratch`] reuse
+//!   (`encode_into`); the `encode()` methods are convenience wrappers;
+//! * a `Job` frame is three independent segments — head (round + reply
+//!   mode + round geometry), the shared params block, the per-worker
+//!   entries — so the supervisor encodes the model-sized params block
+//!   **once per round** and splices it into every worker's frame with
+//!   the vectored [`write_frame_parts`];
+//! * under shard pre-accumulation the reply direction additionally
+//!   carries one [`ShardPartialMsg`] per worker-owned shard (raw
+//!   IEEE-754 accumulator words plus the shard's [`ShardStats`]) and the
+//!   per-pass `Pass` frames shrink to report-only (`rx` empty).
+//!
 //! [`ExperimentConfig::to_text`]: crate::config::ExperimentConfig::to_text
 
 use std::io::{Read, Write};
 
 use crate::channel::ChannelState;
+use crate::metrics::ShardStats;
 use crate::timing::LinkArm;
 use crate::transport::{PolicyReport, TxReport};
 use crate::{Error, Result};
@@ -37,6 +55,26 @@ const TAG_SHUTDOWN: u8 = 3;
 const TAG_PASS: u8 = 4;
 const TAG_ROUND_DONE: u8 = 5;
 const TAG_ERR: u8 = 6;
+const TAG_SHARD: u8 = 7;
+
+/// Reusable frame-encode buffer: once warm (capacity grown to the
+/// experiment's frame sizes) every `encode_into` reuses it, so
+/// steady-state frame encoding makes no allocations on either pipe end.
+#[derive(Default)]
+pub struct FrameScratch {
+    buf: Vec<u8>,
+}
+
+impl FrameScratch {
+    pub fn new() -> FrameScratch {
+        FrameScratch::default()
+    }
+
+    /// The payload encoded by the most recent `encode_into`.
+    pub fn payload(&self) -> &[u8] {
+        &self.buf
+    }
+}
 
 /// Substrate bootstrap, sent once per worker process right after spawn.
 #[derive(Clone, Debug, PartialEq)]
@@ -71,10 +109,26 @@ pub struct JobEntry {
 }
 
 /// A round's work for one worker: the fresh global model plus the
-/// worker's owned slice of the selection, in selection order.
+/// worker's owned slice of the selection, in selection order, plus the
+/// round geometry the worker needs to rebuild the coordinator's exact
+/// `ShardPlan` and aggregation weights under shard pre-accumulation.
 #[derive(Clone, Debug)]
 pub struct JobMsg {
     pub round: u64,
+    /// Reply mode this round: `true` = pre-accumulate owned shards
+    /// (report-only passes + one [`ShardPartialMsg`] per owned shard),
+    /// `false` = stream full per-pass gradients. Resolved from config
+    /// alone on the supervisor side (`ExperimentConfig::dist_preacc`),
+    /// shipped so frames are self-describing.
+    pub preacc: bool,
+    /// Sum of the selected clients' data sizes (the aggregation-weight
+    /// denominator |D_sel|).
+    pub selected_data: u64,
+    /// Selection size n of this round.
+    pub selection: u64,
+    /// Resolved shard count (`resolve_shards(cfg.agg_shards, n)`), so
+    /// `ShardPlan::new(selection, shards)` rebuilds identically.
+    pub shards: u64,
     /// Flattened global parameters (the paper's error-free downlink).
     pub params: Vec<f32>,
     pub entries: Vec<JobEntry>,
@@ -111,24 +165,63 @@ pub struct PassMsg {
     pub rx: Vec<f32>,
 }
 
+/// One worker-pre-accumulated shard: the shard's weighted-sum
+/// accumulator as raw IEEE-754 words plus its full [`ShardStats`] — the
+/// exact state a coordinator-side [`ShardAccumulator`] fed the same
+/// contributions in the same order would hold, so installing it is
+/// bit-identical to streaming by construction.
+///
+/// [`ShardAccumulator`]: crate::coordinator::aggregate::ShardAccumulator
+#[derive(Clone, Debug)]
+pub struct ShardPartialMsg {
+    /// Global shard index in the round's `ShardPlan`.
+    pub shard: u32,
+    /// The shard's running stats (skip counters included, so survivor
+    /// renormalization is untouched by where the fold ran).
+    pub stats: ShardStats,
+    /// Flattened weighted-sum accumulator (model-sized).
+    pub acc: Vec<f32>,
+}
+
 /// Worker → coordinator messages.
 #[derive(Clone, Debug)]
 pub enum FromWorker {
     Pass(PassMsg),
+    /// One pre-accumulated shard (reply mode `preacc` only; sent after
+    /// the slice's report-only passes, in shard order).
+    Shard(ShardPartialMsg),
     RoundDone { round: u64 },
     Err { message: String },
 }
 
 /// Write one `[u32 LE len][payload]` frame and flush.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
+    write_frame_parts(w, &[payload])
+}
+
+/// Write one frame whose payload is the concatenation of `parts`
+/// (vectored splice: the supervisor reuses one encoded params block
+/// across every worker's Job frame without copying it per worker).
+pub fn write_frame_parts(w: &mut impl Write, parts: &[&[u8]]) -> std::io::Result<()> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    w.write_all(&(len as u32).to_le_bytes())?;
+    for p in parts {
+        w.write_all(p)?;
+    }
     w.flush()
 }
 
 /// Read one frame's payload (blocking). `Err` on EOF, short read, or an
 /// over-[`MAX_FRAME`] length prefix.
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    read_frame_into(r, &mut buf)?;
+    Ok(buf)
+}
+
+/// [`read_frame`] into a caller-owned buffer: no allocation once the
+/// buffer has grown to the stream's steady-state frame size.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<()> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let len = u32::from_le_bytes(len) as usize;
@@ -138,9 +231,9 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
             format!("dist frame length {len} exceeds cap"),
         ));
     }
-    let mut buf = vec![0u8; len];
-    r.read_exact(&mut buf)?;
-    Ok(buf)
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)
 }
 
 // ---- primitive put/get helpers -------------------------------------
@@ -172,6 +265,7 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 
 fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
     put_u64(out, v.len() as u64);
+    out.reserve(v.len() * 4);
     for &x in v {
         put_f32(out, x);
     }
@@ -344,41 +438,178 @@ fn get_report(buf: &[u8], pos: &mut usize) -> Result<TxReport> {
     })
 }
 
+fn put_stats(out: &mut Vec<u8>, s: &ShardStats) {
+    for v in [
+        s.shard,
+        s.clients,
+        s.retransmissions,
+        s.approx_clients,
+        s.policy_switches,
+        s.est_snr_count,
+        s.dropped,
+        s.deadline_skipped,
+        s.quarantined,
+        s.arq_exhausted,
+        s.decode_iterations,
+        s.decode_converged,
+        s.worker_lost,
+    ] {
+        put_u64(out, v as u64);
+    }
+    for v in [
+        s.weight_sum,
+        s.loss_sum,
+        s.ber_sum,
+        s.corrupted_sum,
+        s.grad_small_sum,
+        s.est_snr_sum,
+        s.approx_s,
+        s.fallback_s,
+    ] {
+        put_f64(out, v);
+    }
+    put_f32(out, s.grad_max_abs);
+}
+
+fn get_stats(buf: &[u8], pos: &mut usize) -> Result<ShardStats> {
+    let mut us = [0usize; 13];
+    for v in &mut us {
+        *v = get_u64(buf, pos)? as usize;
+    }
+    let mut fs = [0f64; 8];
+    for v in &mut fs {
+        *v = get_f64(buf, pos)?;
+    }
+    let grad_max_abs = get_f32(buf, pos)?;
+    Ok(ShardStats {
+        shard: us[0],
+        clients: us[1],
+        retransmissions: us[2],
+        approx_clients: us[3],
+        policy_switches: us[4],
+        est_snr_count: us[5],
+        dropped: us[6],
+        deadline_skipped: us[7],
+        quarantined: us[8],
+        arq_exhausted: us[9],
+        decode_iterations: us[10],
+        decode_converged: us[11],
+        worker_lost: us[12],
+        weight_sum: fs[0],
+        loss_sum: fs[1],
+        ber_sum: fs[2],
+        corrupted_sum: fs[3],
+        grad_small_sum: fs[4],
+        est_snr_sum: fs[5],
+        approx_s: fs[6],
+        fallback_s: fs[7],
+        grad_max_abs,
+    })
+}
+
+// ---- Job frame segments --------------------------------------------
+//
+// A Job frame is `head ++ params block ++ entries`; the supervisor
+// encodes each segment separately and splices with `write_frame_parts`
+// so the model-sized params block serializes once per round, not once
+// per worker. All three append to `out` without clearing it.
+
+/// Encode the worker-independent Job head (tag, round, reply mode, and
+/// the round geometry).
+pub fn encode_job_head(
+    out: &mut Vec<u8>,
+    round: u64,
+    preacc: bool,
+    selected_data: u64,
+    selection: u64,
+    shards: u64,
+) {
+    put_u8(out, TAG_JOB);
+    put_u64(out, round);
+    put_u8(out, preacc as u8);
+    put_u64(out, selected_data);
+    put_u64(out, selection);
+    put_u64(out, shards);
+}
+
+/// Encode the round's shared params block (identical for every worker).
+pub fn encode_job_params(out: &mut Vec<u8>, params: &[f32]) {
+    put_f32s(out, params);
+}
+
+/// Encode one worker's entries segment.
+pub fn encode_job_entries(out: &mut Vec<u8>, entries: &[JobEntry]) {
+    put_u64(out, entries.len() as u64);
+    for e in entries {
+        put_u32(out, e.sel_idx);
+        put_u32(out, e.client);
+        put_opt_arm(out, e.prev_arm);
+        put_opt_coh(out, &e.coh);
+    }
+}
+
+/// Encode one pre-accumulated shard reply straight from the worker's
+/// accumulator buffers (no owning [`ShardPartialMsg`] is built, so the
+/// steady-state encode path allocates nothing once the scratch is warm).
+pub fn encode_shard_partial(
+    s: &mut FrameScratch,
+    shard: u32,
+    acc: &[f32],
+    stats: &ShardStats,
+) {
+    s.buf.clear();
+    put_u8(&mut s.buf, TAG_SHARD);
+    put_u32(&mut s.buf, shard);
+    put_stats(&mut s.buf, stats);
+    put_f32s(&mut s.buf, acc);
+}
+
 // ---- message encode/decode -----------------------------------------
 
 impl ToWorker {
+    /// Encode into a reusable scratch (steady-state: zero allocations).
+    pub fn encode_into(&self, s: &mut FrameScratch) {
+        s.buf.clear();
+        self.encode_append(&mut s.buf);
+    }
+
+    /// Convenience wrapper over [`ToWorker::encode_into`].
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_append(&mut out);
+        out
+    }
+
+    fn encode_append(&self, out: &mut Vec<u8>) {
         match self {
             ToWorker::Init(m) => {
-                put_u8(&mut out, TAG_INIT);
-                put_str(&mut out, &m.cfg_text);
-                put_str(&mut out, &m.manifest_text);
+                put_u8(out, TAG_INIT);
+                put_str(out, &m.cfg_text);
+                put_str(out, &m.manifest_text);
                 match m.synthetic_seed {
-                    None => put_u8(&mut out, 0),
+                    None => put_u8(out, 0),
                     Some(s) => {
-                        put_u8(&mut out, 1);
-                        put_u64(&mut out, s);
+                        put_u8(out, 1);
+                        put_u64(out, s);
                     }
                 }
-                put_u32(&mut out, m.worker_id);
-                put_u32(&mut out, m.worker_count);
+                put_u32(out, m.worker_id);
+                put_u32(out, m.worker_count);
             }
             ToWorker::Job(j) => {
-                put_u8(&mut out, TAG_JOB);
-                put_u64(&mut out, j.round);
-                put_f32s(&mut out, &j.params);
-                put_u64(&mut out, j.entries.len() as u64);
-                for e in &j.entries {
-                    put_u32(&mut out, e.sel_idx);
-                    put_u32(&mut out, e.client);
-                    put_opt_arm(&mut out, e.prev_arm);
-                    put_opt_coh(&mut out, &e.coh);
-                }
+                encode_job_head(
+                    out,
+                    j.round,
+                    j.preacc,
+                    j.selected_data,
+                    j.selection,
+                    j.shards,
+                );
+                encode_job_params(out, &j.params);
+                encode_job_entries(out, &j.entries);
             }
-            ToWorker::Shutdown => put_u8(&mut out, TAG_SHUTDOWN),
+            ToWorker::Shutdown => put_u8(out, TAG_SHUTDOWN),
         }
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<ToWorker> {
@@ -404,6 +635,14 @@ impl ToWorker {
             }
             TAG_JOB => {
                 let round = get_u64(buf, pos)?;
+                let preacc = match get_u8(buf, pos)? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(malformed()),
+                };
+                let selected_data = get_u64(buf, pos)?;
+                let selection = get_u64(buf, pos)?;
+                let shards = get_u64(buf, pos)?;
                 let params = get_f32s(buf, pos)?;
                 let n = get_u64(buf, pos)? as usize;
                 let mut entries = Vec::with_capacity(n.min(1 << 20));
@@ -415,7 +654,15 @@ impl ToWorker {
                         coh: get_opt_coh(buf, pos)?,
                     });
                 }
-                ToWorker::Job(JobMsg { round, params, entries })
+                ToWorker::Job(JobMsg {
+                    round,
+                    preacc,
+                    selected_data,
+                    selection,
+                    shards,
+                    params,
+                    entries,
+                })
             }
             TAG_SHUTDOWN => ToWorker::Shutdown,
             _ => return Err(malformed()),
@@ -428,33 +675,50 @@ impl ToWorker {
 }
 
 impl FromWorker {
+    /// Encode into a reusable scratch (steady-state: zero allocations).
+    pub fn encode_into(&self, s: &mut FrameScratch) {
+        s.buf.clear();
+        self.encode_append(&mut s.buf);
+    }
+
+    /// Convenience wrapper over [`FromWorker::encode_into`].
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_append(&mut out);
+        out
+    }
+
+    fn encode_append(&self, out: &mut Vec<u8>) {
         match self {
             FromWorker::Pass(p) => {
-                put_u8(&mut out, TAG_PASS);
-                put_u32(&mut out, p.sel_idx);
-                put_u32(&mut out, p.client);
-                put_u8(&mut out, p.dropout as u8);
-                put_f64(&mut out, p.straggle);
-                put_u64(&mut out, p.quarantined);
-                put_f32(&mut out, p.loss);
-                put_f32(&mut out, p.grad_max);
-                put_f64(&mut out, p.grad_small_frac);
-                put_report(&mut out, &p.report);
-                put_opt_coh(&mut out, &p.coh);
-                put_f32s(&mut out, &p.rx);
+                put_u8(out, TAG_PASS);
+                put_u32(out, p.sel_idx);
+                put_u32(out, p.client);
+                put_u8(out, p.dropout as u8);
+                put_f64(out, p.straggle);
+                put_u64(out, p.quarantined);
+                put_f32(out, p.loss);
+                put_f32(out, p.grad_max);
+                put_f64(out, p.grad_small_frac);
+                put_report(out, &p.report);
+                put_opt_coh(out, &p.coh);
+                put_f32s(out, &p.rx);
+            }
+            FromWorker::Shard(sp) => {
+                put_u8(out, TAG_SHARD);
+                put_u32(out, sp.shard);
+                put_stats(out, &sp.stats);
+                put_f32s(out, &sp.acc);
             }
             FromWorker::RoundDone { round } => {
-                put_u8(&mut out, TAG_ROUND_DONE);
-                put_u64(&mut out, *round);
+                put_u8(out, TAG_ROUND_DONE);
+                put_u64(out, *round);
             }
             FromWorker::Err { message } => {
-                put_u8(&mut out, TAG_ERR);
-                put_str(&mut out, message);
+                put_u8(out, TAG_ERR);
+                put_str(out, message);
             }
         }
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<FromWorker> {
@@ -472,6 +736,11 @@ impl FromWorker {
                 report: get_report(buf, pos)?,
                 coh: get_opt_coh(buf, pos)?,
                 rx: get_f32s(buf, pos)?,
+            }),
+            TAG_SHARD => FromWorker::Shard(ShardPartialMsg {
+                shard: get_u32(buf, pos)?,
+                stats: get_stats(buf, pos)?,
+                acc: get_f32s(buf, pos)?,
             }),
             TAG_ROUND_DONE => FromWorker::RoundDone { round: get_u64(buf, pos)? },
             TAG_ERR => FromWorker::Err { message: get_str(buf, pos)? },
@@ -498,6 +767,15 @@ mod tests {
         assert_eq!(read_frame(&mut cur).unwrap(), b"hello");
         assert_eq!(read_frame(&mut cur).unwrap(), b"");
         assert!(read_frame(&mut cur).is_err()); // EOF
+        // The vectored write is byte-identical to the monolithic one.
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        write_frame(&mut a, b"headPARAMStail").unwrap();
+        write_frame_parts(&mut b, &[b"head", b"PARAMS", b"tail"]).unwrap();
+        assert_eq!(a, b);
+        // And the reusable read path returns the same payload.
+        let mut reuse = vec![0u8; 3];
+        read_frame_into(&mut std::io::Cursor::new(&a), &mut reuse).unwrap();
+        assert_eq!(reuse, b"headPARAMStail");
     }
 
     #[test]
@@ -528,6 +806,10 @@ mod tests {
         let coh = ChannelState::new(root.substream("coh", 3, 0));
         let job = ToWorker::Job(JobMsg {
             round: 11,
+            preacc: true,
+            selected_data: 900,
+            selection: 9,
+            shards: 3,
             params: vec![0.5, -1.25, f32::MIN_POSITIVE],
             entries: vec![
                 JobEntry { sel_idx: 0, client: 9, prev_arm: None, coh: None },
@@ -542,6 +824,8 @@ mod tests {
         match ToWorker::decode(&job.encode()).unwrap() {
             ToWorker::Job(j) => {
                 assert_eq!(j.round, 11);
+                assert!(j.preacc);
+                assert_eq!((j.selected_data, j.selection, j.shards), (900, 9, 3));
                 assert_eq!(j.params, vec![0.5, -1.25, f32::MIN_POSITIVE]);
                 assert_eq!(j.entries.len(), 2);
                 assert_eq!(j.entries[1].prev_arm, Some(LinkArm::Fallback));
@@ -620,6 +904,109 @@ mod tests {
             FromWorker::Err { message } => assert_eq!(message, "boom"),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn job_segments_splice_to_the_whole_frame() {
+        // head ++ params ++ entries must be byte-identical to the
+        // monolithic encoding — the vectored send path rides on it.
+        let job = JobMsg {
+            round: 3,
+            preacc: false,
+            selected_data: 450,
+            selection: 5,
+            shards: 2,
+            params: vec![1.0, -0.0, f32::NAN, 2.5],
+            entries: vec![
+                JobEntry { sel_idx: 2, client: 4, prev_arm: Some(LinkArm::Approx), coh: None },
+                JobEntry { sel_idx: 3, client: 0, prev_arm: None, coh: None },
+            ],
+        };
+        let mut spliced = Vec::new();
+        encode_job_head(&mut spliced, 3, false, 450, 5, 2);
+        encode_job_params(&mut spliced, &job.params);
+        encode_job_entries(&mut spliced, &job.entries);
+        assert_eq!(spliced, ToWorker::Job(job).encode());
+    }
+
+    #[test]
+    fn encode_into_reuses_scratch_and_matches_encode() {
+        let msg = FromWorker::RoundDone { round: 9 };
+        let mut s = FrameScratch::new();
+        msg.encode_into(&mut s);
+        assert_eq!(s.payload(), &msg.encode()[..]);
+        // A second encode into the same scratch replaces the payload.
+        let err = FromWorker::Err { message: "x".into() };
+        err.encode_into(&mut s);
+        assert_eq!(s.payload(), &err.encode()[..]);
+        let mut s2 = FrameScratch::new();
+        ToWorker::Shutdown.encode_into(&mut s2);
+        assert_eq!(s2.payload(), &ToWorker::Shutdown.encode()[..]);
+    }
+
+    #[test]
+    fn shard_partial_roundtrip_is_bit_exact() {
+        let stats = ShardStats {
+            shard: 5,
+            clients: 7,
+            weight_sum: 0.875,
+            loss_sum: 3.25,
+            ber_sum: 0.0625,
+            corrupted_sum: 0.125,
+            retransmissions: 11,
+            grad_max_abs: 2.5,
+            grad_small_sum: 6.5,
+            approx_clients: 4,
+            policy_switches: 2,
+            est_snr_sum: 41.5,
+            est_snr_count: 4,
+            approx_s: 1.25,
+            fallback_s: 8.75,
+            dropped: 1,
+            deadline_skipped: 2,
+            quarantined: 3,
+            arq_exhausted: 4,
+            decode_iterations: 120,
+            decode_converged: 9,
+            worker_lost: 0,
+        };
+        // NaN and -0.0 accumulator words must survive bit-exactly: the
+        // fault plan can poison deliveries with non-finite floats and
+        // the weighted sum preserves them.
+        let acc = vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE];
+        let mut s = FrameScratch::new();
+        encode_shard_partial(&mut s, 5, &acc, &stats);
+        // The free-function encode and the enum encode agree byte-wise.
+        let msg = FromWorker::Shard(ShardPartialMsg {
+            shard: 5,
+            stats,
+            acc: acc.clone(),
+        });
+        assert_eq!(s.payload(), &msg.encode()[..]);
+        match FromWorker::decode(s.payload()).unwrap() {
+            FromWorker::Shard(sp) => {
+                assert_eq!(sp.shard, 5);
+                assert_eq!(sp.stats.clients, 7);
+                assert_eq!(sp.stats.weight_sum.to_bits(), 0.875f64.to_bits());
+                assert_eq!(sp.stats.est_snr_sum.to_bits(), 41.5f64.to_bits());
+                assert_eq!(sp.stats.grad_max_abs.to_bits(), 2.5f32.to_bits());
+                assert_eq!(sp.stats.decode_iterations, 120);
+                assert_eq!(sp.acc.len(), 4);
+                assert_eq!(sp.acc[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(sp.acc[2].to_bits(), f32::NAN.to_bits());
+                assert_eq!(sp.acc[3].to_bits(), f32::MIN_POSITIVE.to_bits());
+            }
+            other => panic!("{other:?}"),
+        }
+        // Truncation anywhere in the frame is rejected.
+        let full = s.payload().to_vec();
+        for cut in [1usize, 8, full.len() / 2, full.len() - 1] {
+            assert!(FromWorker::decode(&full[..cut]).is_err(), "cut={cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut garbled = full.clone();
+        garbled.push(0);
+        assert!(FromWorker::decode(&garbled).is_err());
     }
 
     #[test]

@@ -1,23 +1,48 @@
 //! The coordinator-side process supervisor of the multi-process fan-out:
 //! spawn `worker_procs` children in the hidden `--dist-worker` mode,
-//! ship each its owned job slice per round, and hand passes back to the
+//! ship each its owned job slice per round, and hand replies back to the
 //! round loop **in the exact order the worker computed them** (entry
 //! order == within-owner selection order).
+//!
+//! # Wire-lean round shape
+//!
+//! The round's model broadcast is encoded **once**: [`Supervisor::stage_params`]
+//! hands the fresh global parameters to a background encoder thread
+//! (overlapping the previous round's aggregation/eval tail), and
+//! [`Supervisor::begin_round`] joins it and splices the shared block
+//! into every worker's Job frame with the vectored
+//! [`proto::write_frame_parts`] — per-worker head/entries segments
+//! encode into persistent scratches, so steady-state job sends allocate
+//! nothing and serialize the model exactly once per round.
+//!
+//! Per-round wire volume is accounted in both directions
+//! ([`Supervisor::wire_bytes`]): frame prefix + payload bytes written to
+//! worker stdins, and everything the reader threads pull off worker
+//! stdouts.
 //!
 //! # Failure model
 //!
 //! A worker that dies (EOF on its pipe) or goes silent past
-//! `dist_timeout_s` between replies is respawned **once per round**; the
-//! fresh incarnation gets the round's params again plus the not-yet-
-//! delivered tail of its job slice, so a single transient death is
-//! invisible in the results. A second failure in the same round marks
-//! the worker *lost*: its remaining clients fold through the dropout
-//! ladder as [`SkipReason::WorkerLost`] and the round completes. Lost
-//! workers get a fresh process at the next round's job send.
+//! `dist_timeout_s` between replies is respawned **once per round**; a
+//! second failure in the same round marks the worker *lost* and the
+//! round completes without it. Lost workers get a fresh process at the
+//! next round's job send. What a respawn replays depends on the reply
+//! mode:
+//!
+//! * **streaming**: the fresh incarnation gets the not-yet-delivered
+//!   tail of the slice (delivered passes were already folded);
+//! * **pre-accumulation**: the shard accumulators died with the process,
+//!   so the fresh incarnation gets the **full slice** and recomputes it;
+//!   the first `cursor` re-delivered passes are bit-identical duplicates
+//!   of already-consumed reports and are silently discarded, keeping the
+//!   coordinator's ladder effects exactly-once. A worker lost for the
+//!   round loses its **whole owned shards**
+//!   ([`Supervisor::next_partials`] returns `None`), which the round
+//!   loop folds as [`SkipReason::WorkerLost`] for every owned client.
 //!
 //! Replies from a dead incarnation can still be sitting in the pipe when
 //! its successor starts, so every queue item carries the incarnation
-//! that produced it and stale items are discarded — a late pass from a
+//! that produced it and stale items are discarded — a late reply from a
 //! killed process can never be double-counted.
 //!
 //! [`SkipReason::WorkerLost`]: crate::coordinator::aggregate::SkipReason
@@ -26,11 +51,15 @@ use std::collections::VecDeque;
 use std::io::BufReader;
 use std::path::PathBuf;
 use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::ExperimentConfig;
-use crate::dist::proto::{self, FromWorker, InitMsg, JobEntry, JobMsg, PassMsg, ToWorker};
+use crate::dist::proto::{
+    self, FromWorker, InitMsg, JobEntry, PassMsg, ShardPartialMsg, ToWorker,
+};
 use crate::runtime::Engine;
 use crate::{Error, Result};
 
@@ -93,13 +122,41 @@ pub struct Supervisor {
     synthetic_seed: Option<u64>,
     exe: PathBuf,
     timeout: Duration,
+    /// Reply mode, resolved once from config (`dist_preacc`): `true` =
+    /// worker-side shard pre-accumulation, `false` = per-pass streaming.
+    preacc: bool,
     workers: Vec<WorkerHandle>,
+    /// Bytes written to worker stdins this round (frame prefixes
+    /// included). Reset by [`Supervisor::begin_round`].
+    bytes_tx: u64,
+    /// Bytes read off worker stdouts this round, bumped by the reader
+    /// threads. Reset by [`Supervisor::begin_round`].
+    bytes_rx: Arc<AtomicU64>,
+    /// The round's encoded params block (the `put_f32s` segment shared
+    /// by every worker's Job frame).
+    params_block: Vec<u8>,
+    /// Background encoder for the *next* round's params block
+    /// ([`Supervisor::stage_params`]), joined at `begin_round` — the
+    /// encode overlaps the previous round's aggregation/eval tail.
+    staged: Option<JoinHandle<Vec<u8>>>,
+    /// Persistent Job-frame segment scratches (head / entries), reused
+    /// every send so steady-state job frames allocate nothing.
+    head_scratch: Vec<u8>,
+    entries_scratch: Vec<u8>,
     // --- per-round state (begin_round .. finish_round) ---
     round: u64,
-    flat: Vec<f32>,
+    /// Round geometry shipped in every Job head (selection size, resolved
+    /// shard count, |D_sel|) — kept for respawn resends.
+    selection: u64,
+    shards: u64,
+    selected_data: u64,
     jobs: Vec<Vec<JobEntry>>,
-    /// Passes received per worker this round (== resend offset).
+    /// Passes received per worker this round (== resend offset under
+    /// streaming; == duplicate-discard count under pre-accumulation).
     cursor: Vec<usize>,
+    /// Re-delivered duplicate passes still to discard after a preacc
+    /// respawn (the fresh incarnation replays its full slice).
+    discard: Vec<usize>,
     /// Whether the one-per-round respawn budget is spent.
     respawned: Vec<bool>,
     /// Permanently lost for the rest of this round.
@@ -121,11 +178,21 @@ impl Supervisor {
             synthetic_seed: engine.replication_seed(),
             exe,
             timeout: Duration::from_secs_f64(cfg.dist_timeout_s),
+            preacc: cfg.dist_preacc(),
             workers: Vec::with_capacity(procs),
+            bytes_tx: 0,
+            bytes_rx: Arc::new(AtomicU64::new(0)),
+            params_block: Vec::new(),
+            staged: None,
+            head_scratch: Vec::new(),
+            entries_scratch: Vec::new(),
             round: 0,
-            flat: Vec::new(),
+            selection: 0,
+            shards: 0,
+            selected_data: 0,
             jobs: vec![Vec::new(); procs],
             cursor: vec![0; procs],
+            discard: vec![0; procs],
             respawned: vec![false; procs],
             lost: vec![false; procs],
         };
@@ -147,10 +214,22 @@ impl Supervisor {
         self.workers.len()
     }
 
+    /// Whether this fleet runs shard pre-accumulation (resolved once
+    /// from config; the round loop consumes replies accordingly).
+    pub fn preacc(&self) -> bool {
+        self.preacc
+    }
+
+    /// Wire volume of the round so far: `(bytes_tx, bytes_rx)` over the
+    /// worker pipes, frame prefixes included.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.bytes_tx, self.bytes_rx.load(Ordering::Relaxed))
+    }
+
     /// Spawn one worker process, wire its reader thread to `queue`, and
     /// send the Init frame.
     fn launch(
-        &self,
+        &mut self,
         id: usize,
         count: usize,
         queue: Arc<Queue>,
@@ -167,15 +246,21 @@ impl Supervisor {
         let mut stdin = child.stdin.take().expect("piped stdin");
         let stdout = child.stdout.take().expect("piped stdout");
         // Reader thread: frames -> queue until EOF/garbage, then a Dead
-        // marker. Detached — it exits with its pipe.
+        // marker. Detached — it exits with its pipe. Every frame read
+        // (prefix + payload) lands in the round's rx accounting.
+        let rx_bytes = Arc::clone(&self.bytes_rx);
         std::thread::spawn(move || {
             let mut r = BufReader::new(stdout);
+            let mut buf = Vec::new();
             loop {
-                let item = match proto::read_frame(&mut r) {
-                    Ok(buf) => match FromWorker::decode(&buf) {
-                        Ok(msg) => QueueItem::Msg(msg),
-                        Err(_) => QueueItem::Dead,
-                    },
+                let item = match proto::read_frame_into(&mut r, &mut buf) {
+                    Ok(()) => {
+                        rx_bytes.fetch_add(4 + buf.len() as u64, Ordering::Relaxed);
+                        match FromWorker::decode(&buf) {
+                            Ok(msg) => QueueItem::Msg(msg),
+                            Err(_) => QueueItem::Dead,
+                        }
+                    }
                     Err(_) => QueueItem::Dead,
                 };
                 let done = matches!(item, QueueItem::Dead);
@@ -192,7 +277,9 @@ impl Supervisor {
             worker_id: id as u32,
             worker_count: count as u32,
         });
-        proto::write_frame(&mut stdin, &init.encode())?;
+        let frame = init.encode();
+        proto::write_frame(&mut stdin, &frame)?;
+        self.bytes_tx += 4 + frame.len() as u64;
         Ok((child, stdin))
     }
 
@@ -216,35 +303,90 @@ impl Supervisor {
     }
 
     /// Send worker `id` its job slice from entry `from` onward (0 at
-    /// round start; the delivery cursor after a respawn).
+    /// round start; the delivery cursor after a streaming respawn). The
+    /// frame is three spliced segments — head and entries encode into
+    /// persistent scratches, the shared params block is reused verbatim
+    /// — so the model serializes once per round, not once per worker.
     fn send_job(&mut self, id: usize, from: usize) -> std::io::Result<()> {
-        let msg = ToWorker::Job(JobMsg {
-            round: self.round,
-            params: self.flat.clone(),
-            entries: self.jobs[id][from.min(self.jobs[id].len())..].to_vec(),
-        });
-        let frame = msg.encode();
-        let stdin = self.workers[id].stdin.as_mut().ok_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "dist worker pipe closed")
-        })?;
-        proto::write_frame(stdin, &frame)
+        let mut head = std::mem::take(&mut self.head_scratch);
+        head.clear();
+        proto::encode_job_head(
+            &mut head,
+            self.round,
+            self.preacc,
+            self.selected_data,
+            self.selection,
+            self.shards,
+        );
+        let mut entries = std::mem::take(&mut self.entries_scratch);
+        entries.clear();
+        let slice = &self.jobs[id][from.min(self.jobs[id].len())..];
+        proto::encode_job_entries(&mut entries, slice);
+        let res = match self.workers[id].stdin.as_mut() {
+            Some(stdin) => {
+                proto::write_frame_parts(stdin, &[&head, &self.params_block, &entries])
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "dist worker pipe closed",
+            )),
+        };
+        if res.is_ok() {
+            self.bytes_tx +=
+                4 + (head.len() + self.params_block.len() + entries.len()) as u64;
+        }
+        self.head_scratch = head;
+        self.entries_scratch = entries;
+        res
     }
 
-    /// Open round `round`: reset the failure budgets, revive workers
-    /// lost in earlier rounds, and ship every worker its job slice plus
-    /// the fresh global model.
+    /// Hand the *next* round's global parameters to a background encoder
+    /// thread. Called right after the SGD step, so the model-sized
+    /// serialization overlaps the round's evaluation/trace tail instead
+    /// of sitting on the next `begin_round`'s critical path.
+    pub fn stage_params(&mut self, flat: Vec<f32>) {
+        let mut buf = std::mem::take(&mut self.params_block);
+        self.staged = Some(std::thread::spawn(move || {
+            buf.clear();
+            proto::encode_job_params(&mut buf, &flat);
+            buf
+        }));
+    }
+
+    /// Whether a staged params encode is pending (the round loop stages
+    /// synchronously before the first round / after a fresh spawn).
+    pub fn has_staged(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// Open round `round`: join the staged params encode, reset the
+    /// failure budgets and wire accounting, revive workers lost in
+    /// earlier rounds, and ship every worker its job slice.
     pub fn begin_round(
         &mut self,
         round: usize,
-        flat: Vec<f32>,
         jobs: Vec<Vec<JobEntry>>,
+        selection: usize,
+        shards: usize,
+        selected_data: usize,
     ) -> Result<()> {
         debug_assert_eq!(jobs.len(), self.workers.len());
+        let staged = self.staged.take().ok_or_else(|| {
+            Error::Runtime("dist: begin_round without staged params".into())
+        })?;
+        self.params_block = staged
+            .join()
+            .map_err(|_| Error::Runtime("dist: params encoder panicked".into()))?;
         self.round = round as u64;
-        self.flat = flat;
+        self.selection = selection as u64;
+        self.shards = shards as u64;
+        self.selected_data = selected_data as u64;
         self.jobs = jobs;
+        self.bytes_tx = 0;
+        self.bytes_rx.store(0, Ordering::Relaxed);
         for id in 0..self.workers.len() {
             self.cursor[id] = 0;
+            self.discard[id] = 0;
             self.respawned[id] = false;
             // A worker lost last round gets a fresh process now; this is
             // recovery between rounds, not this round's respawn budget.
@@ -267,12 +409,34 @@ impl Supervisor {
         Ok(())
     }
 
+    /// Spend worker `id`'s respawn budget (or mark it lost). Returns
+    /// `true` if a fresh incarnation is serving the slice again.
+    /// Streaming resends the undelivered tail; pre-accumulation resends
+    /// the **full** slice (the accumulators died with the process) and
+    /// arms the duplicate-discard counter so already-consumed reports
+    /// stay exactly-once at the coordinator.
+    fn recover(&mut self, id: usize) -> Result<bool> {
+        if self.respawned[id] {
+            self.lost[id] = true;
+            return Ok(false);
+        }
+        self.respawned[id] = true;
+        self.respawn(id)?;
+        let from = if self.preacc { 0 } else { self.cursor[id] };
+        self.discard[id] = if self.preacc { self.cursor[id] } else { 0 };
+        if self.send_job(id, from).is_err() {
+            self.lost[id] = true;
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
     /// Next pass from worker `id`, in entry order. `Ok(None)` means the
     /// worker is lost for this round (death/timeout after the respawn
-    /// budget): the caller folds its remaining clients through the
-    /// `WorkerLost` skip. `Err` only on systemic failures (a worker
-    /// *reported* an error — config/protocol trouble every respawn
-    /// would hit again — or respawn itself failed).
+    /// budget): the caller folds the loss through the `WorkerLost`
+    /// ladder. `Err` only on systemic failures (a worker *reported* an
+    /// error — config/protocol trouble every respawn would hit again —
+    /// or respawn itself failed).
     pub fn next_pass(&mut self, id: usize) -> Result<Option<PassMsg>> {
         loop {
             if self.lost[id] {
@@ -280,27 +444,28 @@ impl Supervisor {
             }
             let incarnation = self.workers[id].incarnation;
             let deadline = Instant::now() + self.timeout;
-            match self.workers[id].queue.pop(incarnation, deadline) {
+            let item = self.workers[id].queue.pop(incarnation, deadline);
+            match item {
                 Some(QueueItem::Msg(FromWorker::Pass(p))) => {
+                    // A preacc respawn replays consumed passes
+                    // bit-identically; drop the duplicates silently.
+                    if self.discard[id] > 0 {
+                        self.discard[id] -= 1;
+                        continue;
+                    }
                     self.cursor[id] += 1;
                     return Ok(Some(p));
                 }
                 Some(QueueItem::Msg(FromWorker::Err { message })) => {
                     return Err(Error::Runtime(format!("dist worker {id}: {message}")));
                 }
-                // Early RoundDone (stream drift), death, or timeout:
-                // spend the respawn budget or go lost.
+                // Early RoundDone / shard frame (stream drift), death, or
+                // timeout: spend the respawn budget or go lost.
                 Some(QueueItem::Msg(FromWorker::RoundDone { .. }))
+                | Some(QueueItem::Msg(FromWorker::Shard(_)))
                 | Some(QueueItem::Dead)
                 | None => {
-                    if self.respawned[id] {
-                        self.lost[id] = true;
-                        return Ok(None);
-                    }
-                    self.respawned[id] = true;
-                    self.respawn(id)?;
-                    if self.send_job(id, self.cursor[id]).is_err() {
-                        self.lost[id] = true;
+                    if !self.recover(id)? {
                         return Ok(None);
                     }
                 }
@@ -308,22 +473,70 @@ impl Supervisor {
         }
     }
 
-    /// Close the round: drain each live worker's RoundDone marker so
-    /// next round's replies start stream-aligned. A worker that fails
-    /// here is marked lost (it gets a fresh process next round).
+    /// Collect worker `id`'s pre-accumulated shard partials (preacc mode
+    /// only): every Shard frame up to its RoundDone, in shard order.
+    /// `Ok(None)` = the worker is lost and its owned shards died with it
+    /// (the caller folds each whole shard as `WorkerLost`). A death here
+    /// spends the same one-per-round respawn budget: the fresh
+    /// incarnation replays the full slice (duplicate reports discarded)
+    /// and partial collection restarts from scratch — partials from the
+    /// dead incarnation are bit-identical but are dropped wholesale so
+    /// the collected set is always one incarnation's coherent output.
+    pub fn next_partials(&mut self, id: usize) -> Result<Option<Vec<ShardPartialMsg>>> {
+        let mut parts: Vec<ShardPartialMsg> = Vec::new();
+        loop {
+            if self.lost[id] {
+                return Ok(None);
+            }
+            let incarnation = self.workers[id].incarnation;
+            let deadline = Instant::now() + self.timeout;
+            let item = self.workers[id].queue.pop(incarnation, deadline);
+            match item {
+                Some(QueueItem::Msg(FromWorker::Pass(_))) if self.discard[id] > 0 => {
+                    self.discard[id] -= 1;
+                }
+                Some(QueueItem::Msg(FromWorker::Shard(sp))) => parts.push(sp),
+                Some(QueueItem::Msg(FromWorker::RoundDone { .. })) => {
+                    return Ok(Some(parts));
+                }
+                Some(QueueItem::Msg(FromWorker::Err { message })) => {
+                    return Err(Error::Runtime(format!("dist worker {id}: {message}")));
+                }
+                // An unexpected live pass is stream drift; treat it like
+                // death/timeout: recover once or go lost.
+                Some(QueueItem::Msg(FromWorker::Pass(_)))
+                | Some(QueueItem::Dead)
+                | None => {
+                    if !self.recover(id)? {
+                        return Ok(None);
+                    }
+                    parts.clear();
+                }
+            }
+        }
+    }
+
+    /// Close a streaming round: drain each live worker's RoundDone
+    /// marker so next round's replies start stream-aligned. Preacc
+    /// rounds consumed their RoundDone in [`Supervisor::next_partials`],
+    /// so this is a no-op for them. A worker that fails here is marked
+    /// lost (it gets a fresh process next round).
     pub fn finish_round(&mut self) -> Result<()> {
+        if self.preacc {
+            return Ok(());
+        }
         for id in 0..self.workers.len() {
             if self.lost[id] {
                 continue;
             }
             let incarnation = self.workers[id].incarnation;
             let deadline = Instant::now() + self.timeout;
-            match self.workers[id].queue.pop(incarnation, deadline) {
+            let item = self.workers[id].queue.pop(incarnation, deadline);
+            match item {
                 Some(QueueItem::Msg(FromWorker::RoundDone { .. })) => {}
                 _ => self.lost[id] = true,
             }
         }
-        self.flat = Vec::new();
         Ok(())
     }
 }
@@ -332,6 +545,8 @@ impl Drop for Supervisor {
     fn drop(&mut self) {
         // Best-effort graceful shutdown, then make sure nothing leaks:
         // close pipes, give workers a moment to exit, kill stragglers.
+        // A still-pending staged params encode is simply dropped (the
+        // thread finishes into a buffer nobody reads).
         for h in &mut self.workers {
             if let Some(stdin) = h.stdin.as_mut() {
                 let _ = proto::write_frame(stdin, &ToWorker::Shutdown.encode());

@@ -8,14 +8,36 @@
 //! the same pass computed in the coordinator's process. The only state
 //! that is *not* rederivable (the CSI-adaptive hysteresis arm and the
 //! `coherence = round` fading process) crosses the pipe per job entry.
+//!
+//! # Reply modes
+//!
+//! The job head's `preacc` flag selects the reply shape:
+//!
+//! * **streaming** (`false`): one full [`PassMsg`] per entry, delivered
+//!   gradient included — the coordinator folds every pass itself;
+//! * **pre-accumulation** (`true`): the worker rebuilds the round's
+//!   [`ShardPlan`] from the shipped geometry, runs the *same*
+//!   [`ShardAccumulator`] feed kernel over its wholly-owned shards
+//!   (worker ownership is `shard_of(i) % procs`, so shards never split
+//!   across workers), sends each pass **report-only** (`rx` empty — the
+//!   coordinator still drives the ledger / policy / coherence ladder in
+//!   selection order), and finishes with one shard-partial frame per
+//!   owned shard. The gate ladder replicated here (dropout, per-client
+//!   FDMA deadline, quarantine reject) is exactly the worker-local
+//!   subset: configs whose gates cross worker boundaries (TDMA + shared
+//!   deadline budget) never select this mode.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 
 use crate::config::ExperimentConfig;
+use crate::coordinator::aggregate::{
+    Contribution, ShardAccumulator, ShardPlan, SkipReason,
+};
 use crate::coordinator::server::{client_pass_core, PassCtx, PassSlot};
 use crate::coordinator::ClientState;
 use crate::data::{load_default, partition_non_iid, TrainTest};
-use crate::dist::proto::{self, FromWorker, PassMsg, ToWorker};
+use crate::dist::proto::{self, FrameScratch, FromWorker, PassMsg, ToWorker};
+use crate::faults::QuarantinePolicy;
 use crate::model::{Manifest, ParamSet};
 use crate::rng::Rng;
 use crate::runtime::Engine;
@@ -75,7 +97,9 @@ impl KillHook {
 }
 
 fn serve(r: &mut impl Read, w: &mut impl Write) -> Result<()> {
-    let init = match ToWorker::decode(&proto::read_frame(r)?)? {
+    let mut inbuf = Vec::new();
+    proto::read_frame_into(r, &mut inbuf)?;
+    let init = match ToWorker::decode(&inbuf)? {
         ToWorker::Init(m) => m,
         other => {
             return Err(Error::Runtime(format!(
@@ -103,9 +127,14 @@ fn serve(r: &mut impl Read, w: &mut impl Write) -> Result<()> {
     let template = ParamSet::zeros(&engine.manifest);
     let mut scratch = TxScratch::new();
     let mut slot = PassSlot::default();
+    // Reusable frame-encode scratch + accumulator-export buffer: once
+    // warm, steady-state rounds allocate nothing on the encode path.
+    let mut out = FrameScratch::new();
+    let mut flat = Vec::new();
 
     loop {
-        let job = match ToWorker::decode(&proto::read_frame(r)?)? {
+        proto::read_frame_into(r, &mut inbuf)?;
+        let job = match ToWorker::decode(&inbuf)? {
             ToWorker::Job(j) => j,
             ToWorker::Shutdown => return Ok(()),
             ToWorker::Init(_) => {
@@ -122,6 +151,11 @@ fn serve(r: &mut impl Read, w: &mut impl Write) -> Result<()> {
             params: &params,
             root_rng: &root_rng,
         };
+        // Accumulators for this worker's owned shards (preacc mode only).
+        // Entries arrive in selection order, so owned shards appear in
+        // ascending order and a last-element check is enough.
+        let mut accs: Vec<(usize, ShardAccumulator)> = Vec::new();
+        let plan = ShardPlan::new(job.selection as usize, job.shards as usize);
         for e in &job.entries {
             kill.check();
             client_pass_core(
@@ -144,15 +178,86 @@ fn serve(r: &mut impl Read, w: &mut impl Write) -> Result<()> {
                 grad_small_frac: slot.grad_small_frac,
                 report: slot.report,
                 coh: slot.coh.take(),
-                rx: std::mem::take(&mut slot.rx),
+                // Report-only under pre-accumulation: the gradient stays
+                // in the local shard fold below.
+                rx: if job.preacc { Vec::new() } else { std::mem::take(&mut slot.rx) },
             });
-            proto::write_frame(w, &msg.encode())?;
+            msg.encode_into(&mut out);
+            proto::write_frame(w, out.payload())?;
             // Recycle the rx buffer for the next pass.
             if let FromWorker::Pass(p) = msg {
-                slot.rx = p.rx;
+                if !job.preacc {
+                    slot.rx = p.rx;
+                }
             }
             kill.sent += 1;
+            if job.preacc {
+                let weight = clients[e.client as usize].data_size() as f32
+                    / job.selected_data as f32;
+                feed_local(
+                    &cfg,
+                    &plan,
+                    &mut accs,
+                    &engine.manifest,
+                    e.sel_idx as usize,
+                    weight,
+                    &slot,
+                );
+            }
         }
-        proto::write_frame(w, &FromWorker::RoundDone { round: job.round }.encode())?;
+        // One shard-partial frame per owned shard, in shard order.
+        for (shard, acc) in &accs {
+            acc.export_into(&mut flat);
+            proto::encode_shard_partial(&mut out, *shard as u32, &flat, acc.stats());
+            proto::write_frame(w, out.payload())?;
+        }
+        let done = FromWorker::RoundDone { round: job.round };
+        done.encode_into(&mut out);
+        proto::write_frame(w, out.payload())?;
     }
+}
+
+/// The worker-local replica of the coordinator's gate ladder
+/// ([`crate::coordinator::server`]'s `feed_report`), folding one pass
+/// into its owned-shard accumulator. Only gates that are pure functions
+/// of the pass itself appear here — dropout, the per-client FDMA
+/// deadline, quarantine rejection; the shared TDMA deadline budget never
+/// reaches this path (such configs deterministically stream instead).
+#[allow(clippy::too_many_arguments)]
+fn feed_local(
+    cfg: &ExperimentConfig,
+    plan: &ShardPlan,
+    accs: &mut Vec<(usize, ShardAccumulator)>,
+    man: &Manifest,
+    sel_idx: usize,
+    weight: f32,
+    slot: &PassSlot,
+) {
+    let shard = plan.shard_of(sel_idx);
+    if accs.last().map(|&(s, _)| s) != Some(shard) {
+        accs.push((shard, ShardAccumulator::new(shard, man)));
+    }
+    let acc = &mut accs.last_mut().expect("just pushed").1;
+    if slot.fault.dropout {
+        acc.skip(SkipReason::Dropout);
+        return;
+    }
+    let secs = slot.report.seconds * slot.fault.straggle;
+    if cfg.round_deadline_s > 0.0 && secs > cfg.round_deadline_s {
+        acc.skip(SkipReason::Deadline);
+        return;
+    }
+    if cfg.quarantine == QuarantinePolicy::Reject && slot.quarantined > 0 {
+        acc.skip(SkipReason::Quarantine);
+        return;
+    }
+    acc.feed(&Contribution {
+        rx: &slot.rx,
+        weight,
+        loss: slot.loss,
+        grad_max_abs: slot.grad_max,
+        grad_small_frac: slot.grad_small_frac,
+        quarantined: slot.quarantined,
+        report: &slot.report,
+    });
 }

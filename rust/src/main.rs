@@ -78,6 +78,8 @@ fn load_cfg(args: &Args) -> Result<ExperimentConfig> {
         ("quarantine-bound", "quarantine_bound"),
         ("worker-procs", "worker_procs"),
         ("dist-timeout-s", "dist_timeout_s"),
+        ("dist-worker-exe", "dist_worker_exe"),
+        ("dist-reply", "dist_reply"),
     ] {
         if let Some(v) = args.opt(flag) {
             overrides.push((key.to_string(), v.to_string()));

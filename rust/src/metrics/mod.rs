@@ -53,6 +53,12 @@ pub struct RoundRecord {
     /// Selected clients lost to dead worker *processes* (multi-process
     /// fan-out only; 0 in-process and on healthy fleets).
     pub worker_lost: usize,
+    /// Bytes the coordinator wrote to worker-process pipes this round
+    /// (multi-process fan-out only; 0 in-process).
+    pub bytes_tx: u64,
+    /// Bytes the coordinator read from worker-process pipes this round
+    /// (0 in-process).
+    pub bytes_rx: u64,
 }
 
 /// A full experiment trace.
@@ -98,14 +104,16 @@ impl Trace {
     /// SNR — empty when nothing sounded — and per-arm airtime), then the
     /// fault columns (dropouts, deadline exclusions, quarantined clients,
     /// exhausted ARQ codewords), then the decoder-work column (min-sum
-    /// iterations; 0 for schemes that never decode).
+    /// iterations; 0 for schemes that never decode), the worker-lost
+    /// count, and the coordinator↔worker wire volume (bytes tx/rx; 0
+    /// in-process).
     pub fn csv_rows(&self) -> String {
         let mut s = String::new();
         for r in &self.rounds {
             let acc = r.test_accuracy.map_or(String::new(), |a| format!("{a:.4}"));
             let est = r.mean_est_snr_db.map_or(String::new(), |e| format!("{e:.2}"));
             s.push_str(&format!(
-                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{},{},{}\n",
+                "{},{},{:.6},{},{:.4},{:.6},{},{:.6},{:.4},{},{},{:.6},{:.6},{},{},{},{},{},{},{},{}\n",
                 self.label,
                 r.round,
                 r.comm_time_s,
@@ -124,7 +132,9 @@ impl Trace {
                 r.quarantined,
                 r.arq_exhausted,
                 r.decode_iterations,
-                r.worker_lost
+                r.worker_lost,
+                r.bytes_tx,
+                r.bytes_rx
             ));
         }
         s
@@ -135,7 +145,7 @@ impl Trace {
 pub const CSV_HEADER: &str = "scheme,round,comm_time_s,test_accuracy,train_loss,mean_ber,\
      retransmissions,corrupted_frac,approx_frac,policy_switches,est_snr_db,\
      approx_time_s,fallback_time_s,dropped,deadline_skipped,quarantined,\
-     arq_exhausted,decode_iters,worker_lost\n";
+     arq_exhausted,decode_iters,worker_lost,bytes_tx,bytes_rx\n";
 
 /// Write traces to a CSV file (creating parent dirs).
 pub fn write_csv(path: &str, traces: &[&Trace]) -> crate::Result<()> {
@@ -327,7 +337,7 @@ mod tests {
         // Every row carries exactly the header's column count (the
         // policy columns included; unsounded rounds leave est_snr empty).
         let ncols = CSV_HEADER.trim().split(',').count();
-        assert_eq!(ncols, 19);
+        assert_eq!(ncols, 21);
         for line in csv.lines() {
             assert_eq!(line.split(',').count(), ncols, "{line}");
         }
@@ -349,13 +359,15 @@ mod tests {
             arq_exhausted: 5,
             decode_iterations: 6,
             worker_lost: 7,
+            bytes_tx: 800,
+            bytes_rx: 90,
             ..Default::default()
         });
         let row = t.csv_rows();
         assert!(row.contains(",0.7500,3,10.25,1.500000,4.000000"), "{row}");
-        // The fault columns, the decoder-work column, and the dist-loss
-        // column terminate the row.
-        assert!(row.trim_end().ends_with(",2,1,4,5,6,7"), "{row}");
+        // The fault columns, the decoder-work column, the dist-loss
+        // column, and the wire columns terminate the row.
+        assert!(row.trim_end().ends_with(",2,1,4,5,6,7,800,90"), "{row}");
     }
 
     #[test]

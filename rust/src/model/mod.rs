@@ -121,6 +121,26 @@ impl ParamSet {
     }
 
     /// In-place SGD: w <- w - eta * g (paper eq. 6).
+    /// Overwrite this set's values from a flat vector in place (the
+    /// bit-exact inverse of [`Self::flatten`], without the schema clone
+    /// [`Self::unflatten_like`] makes — NaN/-0.0 words are preserved).
+    pub fn copy_from_flat(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.num_params() {
+            return Err(Error::Shape(format!(
+                "flat length {} != param count {}",
+                flat.len(),
+                self.num_params()
+            )));
+        }
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.numel();
+            t.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
     pub fn sgd_step(&mut self, grads: &ParamSet, eta: f32) {
         debug_assert_eq!(self.tensors.len(), grads.tensors.len());
         for (w, g) in self.tensors.iter_mut().zip(&grads.tensors) {

@@ -1,15 +1,25 @@
 //! Determinism and failure contracts of the multi-process fan-out
-//! (`ExperimentConfig::worker_procs`, PR 9):
+//! (`ExperimentConfig::worker_procs`, PR 9) and its wire-lean
+//! pre-accumulating reply mode (`dist_reply`, PR 10):
 //!
-//! * for any `worker_procs ∈ {0 = in-process, 1, N}` the traces, CSV
-//!   rows, and global models are **bit-identical** at the same
-//!   `agg_shards`, for every scheme — including `Scheme::Adaptive` and
-//!   `coherence = round`, whose per-client `PolicyState` /
-//!   `ChannelState` must survive the process boundary;
+//! * for any `worker_procs ∈ {0 = in-process, 1, N}` **and either reply
+//!   mode** (`stream` | `preacc`), the traces, CSV rows (wire-volume
+//!   columns excluded — those measure the pipes, not the physics), and
+//!   global models are **bit-identical** at the same `agg_shards`, for
+//!   every scheme — including `Scheme::Adaptive` and `coherence =
+//!   round`, whose per-client `PolicyState` / `ChannelState` must
+//!   survive the process boundary, and under deterministic fault plans;
+//! * TDMA configs with a `round_deadline_s` budget deterministically
+//!   fall back to per-pass streaming (`dist_preacc()` is a pure
+//!   function of the config) and still match the in-process engine;
 //! * a worker killed mid-round (deterministically, via the
 //!   `AWC_DIST_KILL_*` hooks) is respawned once; a repeat death folds
-//!   its remaining clients through `worker_lost` and the round — and
-//!   the *next* round — still complete.
+//!   the loss through `worker_lost` — per remaining client under
+//!   streaming, per wholly-owned shard under pre-accumulation — and the
+//!   round (and the *next* round) still complete;
+//! * pre-accumulation's per-round `bytes_rx` is strictly leaner than
+//!   streaming's, and steady-state frame encoding on both pipe ends
+//!   makes zero heap allocations (thread-local counting allocator).
 //!
 //! Workers run the real `awc-fl --dist-worker` binary
 //! (`CARGO_BIN_EXE_awc-fl`) over the synthetic runtime backend, so the
@@ -20,15 +30,65 @@
 //! serializes on one lock: a concurrently spawned fleet from another
 //! test must never observe a kill environment it didn't set.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::sync::Mutex;
 
-use awc_fl::channel::{Coherence, Fading};
-use awc_fl::config::ExperimentConfig;
+use awc_fl::channel::{ChannelState, Coherence, Fading};
+use awc_fl::config::{DistReply, ExperimentConfig};
 use awc_fl::coordinator::FlServer;
-use awc_fl::metrics::Trace;
+use awc_fl::dist::proto::{self, FrameScratch};
+use awc_fl::dist::{FromWorker, JobEntry, PassMsg};
+use awc_fl::metrics::{ShardStats, Trace};
 use awc_fl::model::Manifest;
+use awc_fl::rng::Rng;
 use awc_fl::runtime::Engine;
-use awc_fl::transport::Scheme;
+use awc_fl::timing::Multiplexing;
+use awc_fl::transport::{Scheme, TxReport};
+
+/// Allocation-counting allocator with a **thread-local** counter (same
+/// technique as `tests/symbol_plane_it.rs`): the zero-alloc pin reads
+/// only its own thread's allocations, so it stays exact while the rest
+/// of this binary runs in parallel.
+struct CountingAlloc;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+fn bump() {
+    // `try_with` because TLS may be mid-teardown at thread exit; losing
+    // those counts is fine — the pin only reads mid-thread.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+fn thread_allocs() -> usize {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 static ENV_LOCK: Mutex<()> = Mutex::new(());
 
@@ -76,6 +136,21 @@ fn run_cfg(c: ExperimentConfig) -> (Trace, Vec<u32>) {
     (trace, params)
 }
 
+/// The trace's CSV rows minus the trailing two wire-volume columns
+/// (`bytes_tx`, `bytes_rx`) — the only columns *allowed* to differ
+/// across fan-out engines and reply modes; every physics column must
+/// still byte-diff clean.
+fn csv_sans_wire(t: &Trace) -> String {
+    t.csv_rows()
+        .lines()
+        .map(|l| {
+            let cols: Vec<&str> = l.split(',').collect();
+            cols[..cols.len() - 2].join(",")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
 fn assert_traces_bit_identical(a: &Trace, b: &Trace, label: &str) {
     assert_eq!(a.rounds.len(), b.rounds.len(), "{label}");
     for (x, y) in a.rounds.iter().zip(&b.rounds) {
@@ -100,8 +175,10 @@ fn assert_traces_bit_identical(a: &Trace, b: &Trace, label: &str) {
         assert_eq!(x.quarantined, y.quarantined, "{label} quarantined");
         assert_eq!(x.worker_lost, y.worker_lost, "{label} worker_lost");
     }
-    // The headline claim is byte-level: the emitted CSV rows diff clean.
-    assert_eq!(a.csv_rows(), b.csv_rows(), "{label} csv rows");
+    // The headline claim is byte-level: the emitted CSV rows diff clean
+    // up to the wire-volume columns (the pipes are an implementation
+    // detail; everything the physics produced is not).
+    assert_eq!(csv_sans_wire(a), csv_sans_wire(b), "{label} csv rows");
 }
 
 #[test]
@@ -111,16 +188,14 @@ fn dist_traces_bit_identical_to_in_process_for_every_scheme() {
         let (base_trace, base_params) = run_cfg(cfg(scheme, 0));
         assert!(base_trace.rounds.iter().all(|r| r.worker_lost == 0));
         for procs in [1usize, 3] {
-            let (t, p) = run_cfg(cfg(scheme, procs));
-            assert_traces_bit_identical(
-                &base_trace,
-                &t,
-                &format!("{scheme:?} worker_procs={procs}"),
-            );
-            assert_eq!(
-                base_params, p,
-                "{scheme:?} worker_procs={procs}: global model diverged"
-            );
+            for reply in [DistReply::Stream, DistReply::Preacc] {
+                let mut c = cfg(scheme, procs);
+                c.dist_reply = reply;
+                let (t, p) = run_cfg(c);
+                let label = format!("{scheme:?} worker_procs={procs} {reply:?}");
+                assert_traces_bit_identical(&base_trace, &t, &label);
+                assert_eq!(base_params, p, "{label}: global model diverged");
+            }
         }
     }
 }
@@ -129,16 +204,21 @@ fn dist_traces_bit_identical_to_in_process_for_every_scheme() {
 fn dist_is_shard_invariant_like_the_in_process_engine() {
     let _g = lock();
     // Fixed agg_shards, varying process count — the reduction shape is
-    // the shard plan's, never the fleet's.
+    // the shard plan's, never the fleet's. The default `dist_reply =
+    // auto` resolves to pre-accumulation here (no TDMA deadline), so
+    // this also pins preacc across every shard geometry, including
+    // `agg_shards = 1` (a single shard wholly owned by worker 0 while
+    // the rest of the fleet idles) and the selection-derived `0`.
     for shards in [1usize, 3, 0] {
-        let mk = |procs: usize| {
+        let mk = |procs: usize, reply: DistReply| {
             let mut c = cfg(Scheme::Proposed, procs);
             c.agg_shards = shards;
+            c.dist_reply = reply;
             run_cfg(c)
         };
-        let (base_trace, base_params) = mk(0);
+        let (base_trace, base_params) = mk(0, DistReply::Auto);
         for procs in [1usize, 3, 4] {
-            let (t, p) = mk(procs);
+            let (t, p) = mk(procs, DistReply::Auto);
             assert_traces_bit_identical(
                 &base_trace,
                 &t,
@@ -146,6 +226,9 @@ fn dist_is_shard_invariant_like_the_in_process_engine() {
             );
             assert_eq!(base_params, p, "shards={shards} worker_procs={procs}");
         }
+        let (t, p) = mk(3, DistReply::Stream);
+        assert_traces_bit_identical(&base_trace, &t, &format!("shards={shards} stream"));
+        assert_eq!(base_params, p, "shards={shards} stream");
     }
 }
 
@@ -155,11 +238,12 @@ fn adaptive_policy_and_round_coherence_survive_the_process_boundary() {
     // The only client state that is not rederivable from the config —
     // the CSI-adaptive hysteresis arm and the `coherence = round`
     // fading process — must cross the pipe bit-exactly in both
-    // directions. Gilbert-Elliott fading at threshold SNR makes the
+    // directions, under both reply modes (report-only passes still
+    // carry both). Gilbert-Elliott fading at threshold SNR makes the
     // policy actually switch arms, so a serialization bug would move
     // approx_frac / policy_switches / the model.
     for scheme in [Scheme::Adaptive, Scheme::Proposed] {
-        let mk = |procs: usize| {
+        let mk = |procs: usize, reply: DistReply| {
             let mut c = cfg(scheme, procs);
             c.fading = Fading::GilbertElliott;
             c.snr_db = 10.0;
@@ -172,20 +256,18 @@ fn adaptive_policy_and_round_coherence_survive_the_process_boundary() {
             c.max_attempts = 4;
             c.coherence = Coherence::Round;
             c.agg_shards = 3;
+            c.dist_reply = reply;
             run_cfg(c)
         };
-        let (base_trace, base_params) = mk(0);
-        for procs in [1usize, 3] {
-            let (t, p) = mk(procs);
-            assert_traces_bit_identical(
-                &base_trace,
-                &t,
-                &format!("{scheme:?} round-coherence worker_procs={procs}"),
-            );
-            assert_eq!(
-                base_params, p,
-                "{scheme:?} round-coherence worker_procs={procs}: model diverged"
-            );
+        let (base_trace, base_params) = mk(0, DistReply::Auto);
+        for (procs, reply) in
+            [(1, DistReply::Preacc), (3, DistReply::Preacc), (3, DistReply::Stream)]
+        {
+            let (t, p) = mk(procs, reply);
+            let label =
+                format!("{scheme:?} round-coherence worker_procs={procs} {reply:?}");
+            assert_traces_bit_identical(&base_trace, &t, &label);
+            assert_eq!(base_params, p, "{label}: model diverged");
         }
     }
 }
@@ -197,7 +279,9 @@ fn fault_plans_cross_the_pipe_bit_exactly() {
     // from the same substreams; the verdicts (and the corrupted rx)
     // cross the pipe, the coordinator's degradation ladder consumes
     // them — counters and models must match the in-process engine.
-    let mk = |seed: u64, procs: usize| {
+    // Under pre-accumulation the dropout/quarantine verdicts also fold
+    // into the worker-side shard stats, which must land bit-identical.
+    let mk = |seed: u64, procs: usize, reply: DistReply| {
         let mut c = cfg(Scheme::Proposed, procs);
         c.seed = seed;
         c.fault_dropout = 0.2;
@@ -205,6 +289,7 @@ fn fault_plans_cross_the_pipe_bit_exactly() {
         c.fault_corrupt = 0.3;
         c.fault_corrupt_len = 64;
         c.quarantine_bound = 1.0;
+        c.dist_reply = reply;
         run_cfg(c)
     };
     // Deterministic in-test seed search (cheap: in-process runs): the
@@ -212,33 +297,155 @@ fn fault_plans_cross_the_pipe_bit_exactly() {
     // survivors — mirrors tests/parallel_it.rs.
     let seed = (1u64..64)
         .find(|&s| {
-            let (t, _) = mk(s, 0);
+            let (t, _) = mk(s, 0, DistReply::Auto);
             t.rounds.iter().any(|r| r.dropped > 0) && t.rounds.iter().all(|r| r.dropped < 9)
         })
         .expect("some seed under 64 fires a dropout");
-    let (base_trace, base_params) = mk(seed, 0);
-    for procs in [1usize, 3] {
-        let (t, p) = mk(seed, procs);
-        assert_traces_bit_identical(&base_trace, &t, &format!("faults worker_procs={procs}"));
-        assert_eq!(base_params, p, "faults worker_procs={procs}: model diverged");
+    let (base_trace, base_params) = mk(seed, 0, DistReply::Auto);
+    for (procs, reply) in
+        [(1, DistReply::Preacc), (3, DistReply::Preacc), (3, DistReply::Stream)]
+    {
+        let (t, p) = mk(seed, procs, reply);
+        let label = format!("faults worker_procs={procs} {reply:?}");
+        assert_traces_bit_identical(&base_trace, &t, &label);
+        assert_eq!(base_params, p, "{label}: model diverged");
     }
+}
+
+#[test]
+fn tdma_deadline_configs_stream_and_match_the_in_process_engine() {
+    let _g = lock();
+    // The shared TDMA airtime budget is consumed in selection order
+    // *across* workers, so no worker can evaluate the deadline gate
+    // locally: `dist_reply = auto` must resolve to streaming from the
+    // config alone — never from anything observed at runtime — and the
+    // streamed rounds must still match the in-process engine with the
+    // gate actually firing.
+    let mk = |procs: usize, deadline: f64| {
+        let mut c = cfg(Scheme::Proposed, procs);
+        c.mux = Multiplexing::Tdma;
+        c.round_deadline_s = deadline;
+        c.agg_shards = 3;
+        c
+    };
+    // No-deadline probe run sizes the round's TDMA airtime, then a
+    // deterministic search finds a budget where the gate fires without
+    // wiping the round (mirrors the fault-seed search above).
+    let (probe, _) = run_cfg(mk(0, 0.0));
+    let round0_s = probe.rounds[0].comm_time_s;
+    let deadline = (1..=8)
+        .map(|k| round0_s * k as f64 / 9.0)
+        .find(|&d| {
+            let (t, _) = run_cfg(mk(0, d));
+            t.rounds.iter().any(|r| r.deadline_skipped > 0)
+                && t.rounds.iter().all(|r| r.deadline_skipped < 9)
+        })
+        .expect("some fraction of the round budget gates without wiping the round");
+    // The mode choice is config-pure: same verdict on the coordinator
+    // and (via the shipped cfg text) in every worker.
+    assert!(!mk(3, deadline).dist_preacc(), "TDMA + deadline must stream");
+    assert!(cfg(Scheme::Proposed, 3).dist_preacc(), "no deadline: auto = preacc");
+    let (base_trace, base_params) = run_cfg(mk(0, deadline));
+    assert!(base_trace.rounds.iter().any(|r| r.deadline_skipped > 0));
+    for procs in [1usize, 3] {
+        let (t, p) = run_cfg(mk(procs, deadline));
+        let label = format!("tdma-deadline worker_procs={procs}");
+        assert_traces_bit_identical(&base_trace, &t, &label);
+        assert_eq!(base_params, p, "{label}: model diverged");
+    }
+}
+
+#[test]
+fn fdma_deadline_gate_replicates_worker_side_under_preacc() {
+    let _g = lock();
+    // FDMA deadlines are per-client (no shared budget), so `auto` keeps
+    // pre-accumulation and the worker evaluates the gate itself — the
+    // worker-local gate ladder must land the exact same verdicts the
+    // coordinator's would. ECRT's per-client ARQ spread makes airtimes
+    // unequal, so a deadline near the maximum gates some but not all.
+    let mk = |procs: usize, deadline: f64, reply: DistReply| {
+        let mut c = cfg(Scheme::Ecrt, procs);
+        // Low SNR drives per-client ARQ retransmissions, spreading the
+        // airtimes so a deadline can split the selection.
+        c.snr_db = 6.0;
+        c.mux = Multiplexing::Fdma;
+        c.round_deadline_s = deadline;
+        c.agg_shards = 3;
+        c.dist_reply = reply;
+        c
+    };
+    assert!(mk(3, 1.0, DistReply::Auto).dist_preacc(), "FDMA + deadline: auto = preacc");
+    let (probe, _) = run_cfg(mk(0, 0.0, DistReply::Auto));
+    let round0_s = probe.rounds[0].comm_time_s;
+    let deadline = (1..=39)
+        .map(|k| round0_s * k as f64 / 40.0)
+        .find(|&d| {
+            let (t, _) = run_cfg(mk(0, d, DistReply::Auto));
+            t.rounds.iter().any(|r| r.deadline_skipped > 0)
+                && t.rounds.iter().all(|r| r.deadline_skipped < 9)
+        })
+        .expect("some deadline gates a strict subset of the round");
+    let (base_trace, base_params) = run_cfg(mk(0, deadline, DistReply::Auto));
+    for (procs, reply) in [(3, DistReply::Preacc), (3, DistReply::Stream)] {
+        let (t, p) = run_cfg(mk(procs, deadline, reply));
+        let label = format!("fdma-deadline worker_procs={procs} {reply:?}");
+        assert_traces_bit_identical(&base_trace, &t, &label);
+        assert_eq!(base_params, p, "{label}: model diverged");
+    }
+}
+
+#[test]
+fn preacc_wire_volume_is_leaner_than_streaming() {
+    let _g = lock();
+    // The tentpole's accounting claim, at test scale: report-only passes
+    // plus per-shard partials move strictly fewer bytes up the pipe than
+    // per-pass gradient streaming (at CI scale — 10k clients, 157 shards
+    // — the `dist_10k_smoke` below pins the ≥4x reduction).
+    let mk = |procs: usize, reply: DistReply| {
+        let mut c = cfg(Scheme::Proposed, procs);
+        c.agg_shards = 3;
+        c.dist_reply = reply;
+        run_cfg(c)
+    };
+    let (stream, _) = mk(3, DistReply::Stream);
+    let (pre, _) = mk(3, DistReply::Preacc);
+    for (s, p) in stream.rounds.iter().zip(&pre.rounds) {
+        assert!(s.bytes_tx > 0 && s.bytes_rx > 0, "streaming wire volume accounted");
+        assert!(p.bytes_tx > 0 && p.bytes_rx > 0, "preacc wire volume accounted");
+        assert!(
+            p.bytes_rx < s.bytes_rx,
+            "round {}: preacc rx {} must undercut streaming rx {}",
+            s.round,
+            p.bytes_rx,
+            s.bytes_rx
+        );
+    }
+    // The shared broadcast encode is mode-independent: both modes ship
+    // the same job frames down, so tx volumes match exactly.
+    for (s, p) in stream.rounds.iter().zip(&pre.rounds) {
+        assert_eq!(s.bytes_tx, p.bytes_tx, "round {}: downlink is mode-independent", s.round);
+    }
+    // In-process rounds touch no pipes at all.
+    let (inproc, _) = mk(0, DistReply::Auto);
+    assert!(inproc.rounds.iter().all(|r| r.bytes_tx == 0 && r.bytes_rx == 0));
 }
 
 #[test]
 fn killed_worker_degrades_through_worker_lost_and_rounds_complete() {
     let _g = lock();
-    // Deterministic mid-round death: worker 1 dies after every pass it
-    // sends, in every incarnation (the respawn inherits the kill
-    // environment). With 9 clients over 3 workers each worker owns 3
-    // selection indices, so worker 1 delivers one pass, its respawn
-    // delivers one more, and the third client folds through the
-    // WorkerLost ladder — every round.
+    // Deterministic mid-round death under *streaming*: worker 1 dies
+    // after every pass it sends, in every incarnation (the respawn
+    // inherits the kill environment). With 9 clients over 3 workers each
+    // worker owns 3 selection indices, so worker 1 delivers one pass,
+    // its respawn delivers one more, and the third client folds through
+    // the WorkerLost ladder — every round.
     std::env::set_var("AWC_DIST_KILL_WORKER", "1");
     std::env::set_var("AWC_DIST_KILL_AFTER", "1");
     let engine = small_engine();
     let mut c = cfg(Scheme::Proposed, 3);
     c.agg_shards = 3;
     c.dist_timeout_s = 60.0;
+    c.dist_reply = DistReply::Stream;
     let mut server = FlServer::from_config(c, &engine).unwrap();
     let result = (|| -> awc_fl::Result<Vec<awc_fl::coordinator::RoundOutcome>> {
         Ok(vec![server.run_round(0)?, server.run_round(1)?])
@@ -255,8 +462,8 @@ fn killed_worker_degrades_through_worker_lost_and_rounds_complete() {
         assert_eq!(out.dropped, 0, "round {round}: faults and worker loss are distinct");
         assert!(out.mean_loss.is_finite(), "round {round}");
     }
-    // A healthy fleet reports zero losses and the counter terminates
-    // each CSV row.
+    // A healthy fleet reports zero losses; the loss counter is the last
+    // physics column of each CSV row (only the wire columns follow it).
     let healthy = {
         let engine = small_engine();
         let mut c = cfg(Scheme::Proposed, 3);
@@ -266,12 +473,117 @@ fn killed_worker_degrades_through_worker_lost_and_rounds_complete() {
         s.run(false).unwrap()
     };
     assert!(healthy.rounds.iter().all(|r| r.worker_lost == 0));
-    assert!(healthy.csv_rows().trim_end().ends_with(",0"), "worker_lost terminates the row");
+    assert!(
+        csv_sans_wire(&healthy).trim_end().ends_with(",0"),
+        "worker_lost terminates the physics columns"
+    );
+    assert!(healthy.rounds.iter().all(|r| r.bytes_tx > 0 && r.bytes_rx > 0));
+}
+
+#[test]
+fn killed_preacc_worker_loses_its_whole_shards_and_rounds_complete() {
+    let _g = lock();
+    // The same deterministic death under *pre-accumulation*: worker 1's
+    // shard accumulator dies with each incarnation, and after the
+    // respawn budget is spent the worker's wholly-owned shard (3
+    // clients, agg_shards = 3 over 3 procs) folds as worker-lost in one
+    // shot — partial re-deliveries from the doomed respawn must be
+    // discarded, never double-counted.
+    std::env::set_var("AWC_DIST_KILL_WORKER", "1");
+    std::env::set_var("AWC_DIST_KILL_AFTER", "1");
+    let engine = small_engine();
+    let mut c = cfg(Scheme::Proposed, 3);
+    c.agg_shards = 3;
+    c.dist_timeout_s = 60.0;
+    c.dist_reply = DistReply::Preacc;
+    let mut server = FlServer::from_config(c, &engine).unwrap();
+    let result = (|| -> awc_fl::Result<Vec<awc_fl::coordinator::RoundOutcome>> {
+        Ok(vec![server.run_round(0)?, server.run_round(1)?])
+    })();
+    std::env::remove_var("AWC_DIST_KILL_WORKER");
+    std::env::remove_var("AWC_DIST_KILL_AFTER");
+    let outs = result.expect("rounds must complete despite the dying worker");
+    for (round, out) in outs.iter().enumerate() {
+        assert_eq!(
+            out.worker_lost, 3,
+            "round {round}: the dead worker's whole shard is lost"
+        );
+        assert_eq!(out.survivors, 6, "round {round}");
+        assert!(out.survivor_weight < 1.0, "round {round}: aggregate renormalized");
+        assert_eq!(out.dropped, 0, "round {round}");
+        assert!(out.mean_loss.is_finite(), "round {round}");
+    }
+}
+
+#[test]
+fn steady_state_frame_encode_makes_zero_heap_allocations() {
+    // Both pipe ends' per-round hot loops: the worker's pass /
+    // shard-partial frames into a reused `FrameScratch`, and the
+    // supervisor's job-frame segments (head + shared params block +
+    // entries) into persistent scratches. After one warm-up of each,
+    // re-encoding must never touch the heap.
+    let rng = Rng::new(0xA110C);
+    let model: Vec<f32> = (0..4096).map(|i| (i as f32).sin()).collect();
+    let pass = FromWorker::Pass(PassMsg {
+        sel_idx: 4,
+        client: 7,
+        dropout: false,
+        straggle: 1.25,
+        quarantined: 2,
+        loss: 0.75,
+        grad_max: 0.5,
+        grad_small_frac: 0.99,
+        report: TxReport::default(),
+        coh: Some(ChannelState::new(rng.substream("coh", 7, 0))),
+        rx: model.clone(),
+    });
+    let mut stats = ShardStats::new(2);
+    stats.clients = 3;
+    stats.weight_sum = 0.33;
+    let entries: Vec<JobEntry> = (0..8)
+        .map(|i| JobEntry {
+            sel_idx: i,
+            client: i * 3,
+            prev_arm: None,
+            coh: Some(ChannelState::new(rng.substream("coh", i as u64, 0))),
+        })
+        .collect();
+
+    let mut scratch = FrameScratch::new();
+    let (mut head, mut params, mut ents) = (Vec::new(), Vec::new(), Vec::new());
+    let encode_all = |scratch: &mut FrameScratch,
+                      head: &mut Vec<u8>,
+                      params: &mut Vec<u8>,
+                      ents: &mut Vec<u8>| {
+        pass.encode_into(scratch);
+        let pass_len = scratch.payload().len();
+        proto::encode_shard_partial(scratch, 2, &model, &stats);
+        let shard_len = scratch.payload().len();
+        head.clear();
+        proto::encode_job_head(head, 3, true, 900, 9, 3);
+        params.clear();
+        proto::encode_job_params(params, &model);
+        ents.clear();
+        proto::encode_job_entries(ents, &entries);
+        (pass_len, shard_len, head.len() + params.len() + ents.len())
+    };
+    // Warm-up sizes every buffer.
+    let warm = encode_all(&mut scratch, &mut head, &mut params, &mut ents);
+    let before = thread_allocs();
+    for _ in 0..16 {
+        let again = encode_all(&mut scratch, &mut head, &mut params, &mut ents);
+        assert_eq!(warm, again, "steady-state encodes must be byte-stable");
+    }
+    let delta = thread_allocs() - before;
+    assert_eq!(delta, 0, "steady-state frame encode allocated {delta} times");
 }
 
 /// Release-mode 10k-client dist smoke (CI `dist-smoke` job): a full
 /// 10k-client round fanned out across 4 worker processes must emit a
-/// byte-identical CSV to the in-process engine.
+/// byte-identical CSV (wire columns aside) to the in-process engine in
+/// *both* reply modes, and pre-accumulation must move less than 25% of
+/// streaming's uplink bytes (157 shard partials vs 10k streamed
+/// gradients).
 /// `cargo test --release --test dist_it -- --ignored dist_10k_smoke`
 #[test]
 #[ignore = "10k-client x 4-process smoke; run in release via the dist-smoke CI job"]
@@ -281,7 +593,7 @@ fn dist_10k_smoke() {
          param w1 16,4\nparam b1 16\nparam w2 8,2\nparam b2 4\n\
          artifact train_step train_step.hlo.txt\nartifact predict predict.hlo.txt\n";
     let clients = 10_000usize;
-    let mk = |procs: usize| {
+    let mk = |procs: usize, reply: DistReply| {
         let engine = Engine::synthetic_with(Manifest::parse(man_text).unwrap(), 0x10_000);
         let c = ExperimentConfig {
             clients,
@@ -296,6 +608,7 @@ fn dist_10k_smoke() {
             worker_procs: procs,
             dist_worker_exe: env!("CARGO_BIN_EXE_awc-fl").to_string(),
             dist_timeout_s: 300.0,
+            dist_reply: reply,
             ..ExperimentConfig::default()
         };
         let mut server = FlServer::from_config(c, &engine).unwrap();
@@ -304,13 +617,27 @@ fn dist_10k_smoke() {
             server.params().flatten().iter().map(|x| x.to_bits()).collect();
         (trace, params)
     };
-    let (base_trace, base_params) = mk(0);
-    let (dist_trace, dist_params) = mk(4);
-    assert_eq!(
-        base_trace.csv_rows(),
-        dist_trace.csv_rows(),
-        "10k-client CSV must byte-diff clean across the process boundary"
+    let (base_trace, base_params) = mk(0, DistReply::Auto);
+    let (stream_trace, stream_params) = mk(4, DistReply::Stream);
+    let (pre_trace, pre_params) = mk(4, DistReply::Preacc);
+    for (t, p, label) in
+        [(&stream_trace, &stream_params, "stream"), (&pre_trace, &pre_params, "preacc")]
+    {
+        assert_eq!(
+            csv_sans_wire(&base_trace),
+            csv_sans_wire(t),
+            "10k-client CSV must byte-diff clean across the process boundary ({label})"
+        );
+        assert_eq!(&base_params, p, "10k-client global model diverged ({label})");
+        assert!(t.rounds.iter().all(|r| r.worker_lost == 0), "{label}");
+    }
+    // The tentpole's headline: report-only passes + 157 shard partials
+    // vs 10k streamed model-sized gradients.
+    let (stream_rx, pre_rx) =
+        (stream_trace.rounds[0].bytes_rx, pre_trace.rounds[0].bytes_rx);
+    assert!(stream_rx > 0 && pre_rx > 0);
+    assert!(
+        pre_rx * 4 < stream_rx,
+        "preacc rx {pre_rx} must be under 25% of streaming rx {stream_rx}"
     );
-    assert_eq!(base_params, dist_params, "10k-client global model diverged");
-    assert!(dist_trace.rounds.iter().all(|r| r.worker_lost == 0));
 }
